@@ -1,0 +1,60 @@
+"""Paper Figs. 4-9: small / medium / large SGEMM across code-gen strategies.
+
+Strategies: naive ("Clang -O3" scalar baseline), pluto (conservative tiling,
+no packing), intrinsic (one matrix-multiply intrinsic), tiling (planner blocks,
+strided operands), tiling_packing (planner blocks + packed operands), xla (the
+high-performance-library proxy). jnp backend — these run natively on CPU, the
+same platform class the paper's Figs. 4-9 use.
+
+Emits speedup-over-pluto (Figs. 4-6) and raw times (Figs. 7-9) per size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs.paper_gemm import LARGE_SIZES, MEDIUM_SIZES, SMALL_SIZES
+from repro.core import run_strategy
+
+# naive/pluto are loop-nest lowerings: measurable but O(n^3) python-free slow;
+# cap them like the paper caps Intrinsic on large sizes.
+SLOW_STRATEGY_CAP = 512
+
+STRATEGIES = ("naive", "pluto", "intrinsic", "tiling", "tiling_packing", "xla")
+
+
+def bench_size(n: int, rng) -> dict:
+    a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    times = {}
+    for s in STRATEGIES:
+        if s in ("naive", "pluto") and n > SLOW_STRATEGY_CAP:
+            continue
+        fn = jax.jit(lambda x, y, s=s: run_strategy(s, x, y, backend="jnp"))
+        times[s] = time_fn(fn, a, b)
+    return times
+
+
+def run(sizes, label: str, rng) -> None:
+    for n in sizes:
+        times = bench_size(n, rng)
+        base = times.get("pluto")
+        flops = 2 * n ** 3
+        for s, us in times.items():
+            gflops = flops / (us * 1e-6) / 1e9
+            speedup = f"speedup_vs_pluto={base/us:.2f}" if base else ""
+            emit(f"gemm_{label}_{s}_n{n}", us,
+                 f"gflops={gflops:.2f};{speedup}")
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    run(SMALL_SIZES, "small", rng)    # Fig. 4 / 7
+    run(MEDIUM_SIZES, "medium", rng)  # Fig. 5 / 8
+    run(LARGE_SIZES[:2], "large", rng)  # Fig. 6 / 9 (4096 omitted on 1 CPU core)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end model benchmark: train/decode step times for reduced archs on
+this host (CPU observation), demonstrating the framework's GEMM mix live."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs import reduced_config
+from repro.models import build
+from repro.train import optimizer as opt
+from repro.train.loop import TrainConfig, make_train_step
+from repro.train.optimizer import AdamWConfig
+
+ARCHS = ("olmo-1b", "mixtral-8x22b", "mamba2-130m", "hymba-1.5b")
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for arch in ARCHS:
+        cfg = dataclasses.replace(reduced_config(arch),
+                                  compute_dtype="float32")
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.asarray(
+                     rng.integers(0, cfg.vocab_size, (4, 64)), jnp.int32),
+                 "labels": jnp.asarray(
+                     rng.integers(0, cfg.vocab_size, (4, 64)), jnp.int32)}
+        step = jax.jit(make_train_step(model, TrainConfig(
+            optim=AdamWConfig(total_steps=100))))
+        state = opt.init_state(params)
+        us = time_fn(lambda p, s, b: step(p, s, b), params, state, batch,
+                     warmup=1, iters=3)
+        tokens = batch["tokens"].size
+        emit(f"train_step_{arch}", us,
+             f"tokens_per_s={tokens/(us*1e-6):.0f}")
+
+        caches = model.init_decode_state(params, batch, max_len=128,
+                                         dtype=jnp.float32)
+        dec = jax.jit(model.decode)
+        tok = batch["tokens"][:, :1]
+        pos = jnp.zeros((4,), jnp.int32)
+        us = time_fn(lambda p, c, t, q: dec(p, c, t, q), params, caches, tok,
+                     pos, warmup=1, iters=3)
+        emit(f"decode_step_{arch}", us,
+             f"tokens_per_s={4/(us*1e-6):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper §4.2/§4.3 claim decomposition: packing's cost vs its benefit.
+
+Small sizes: Tiling beats Tiling+Packing (packing is pure overhead when the
+operands fit fast memory). Large sizes: packing pays for itself. This bench
+measures (a) the standalone packing cost, (b) the amortization effect of
+pre-packed weights (PackedWeight, load-time packing — the framework extension
+the paper's per-call model cannot express).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import PackedWeight, plan_gemm, run_strategy
+from repro.kernels import ref
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for n in (64, 256, 1024):
+        a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+        plan = plan_gemm(n, n, n, "float32")
+        t_pack = time_fn(jax.jit(
+            lambda x: ref.pack_b_ref(x, plan.bk, plan.bn)), b)
+        t_tiling = time_fn(jax.jit(
+            lambda x, y: run_strategy("tiling", x, y, backend="jnp")), a, b)
+        t_packed = time_fn(jax.jit(
+            lambda x, y: run_strategy("tiling_packing", x, y,
+                                      backend="jnp")), a, b)
+        pw = PackedWeight.pack(b, m_hint=n, backend="jnp")
+        t_prepacked = time_fn(jax.jit(lambda x: pw.matmul(x)), a)
+        emit(f"pack_cost_n{n}", t_pack, f"bk={plan.bk};bn={plan.bn}")
+        emit(f"tiling_n{n}", t_tiling, "")
+        emit(f"tiling_packing_n{n}", t_packed,
+             f"overhead_vs_tiling={t_packed/t_tiling:.2f}x")
+        emit(f"prepacked_weight_n{n}", t_prepacked,
+             f"speedup_vs_per_call_packing={t_packed/t_prepacked:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Roofline summary from the dry-run artifacts (the TPU-target perf report).
+
+Reads results/dryrun/*.json and prints per-cell roofline terms — this is the
+benchmark row source for EXPERIMENTS.md §Roofline. No device work here.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def main() -> None:
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        emit("roofline_missing", 0.0, "run python -m repro.launch.dryrun --all")
+        return
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        if d.get("status") != "ok" or d.get("tag"):
+            continue
+        r = d["roofline"]
+        step_us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        emit(f"roofline_{d['arch']}_{d['shape']}_{d['mesh']}", step_us,
+             f"bottleneck={r['bottleneck']};"
+             f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+             f"collective_s={r['collective_s']:.4f};"
+             f"roofline_fraction={r['roofline_fraction']:.3f};"
+             f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+             f"fits={d.get('fits_hbm')}")
+
+
+if __name__ == "__main__":
+    main()

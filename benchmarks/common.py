@@ -1,0 +1,48 @@
+"""Shared benchmark harness: wall-clock timing + CSV emission.
+
+CPU wall-clock is reported as a CPU observation (layout/packing effects are
+real on any cache machine — the paper's own Figs. 4-9 are CPU results); TPU
+projections come from the roofline model (see benchmarks/bench_roofline.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            min_time_s: float = 0.05) -> float:
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    def run():
+        out = fn(*args)
+        jax.tree.map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+            else x, out)
+        return out
+
+    for _ in range(warmup):
+        run()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        if sum(times) > 2.0 and len(times) >= 3:
+            break
+    return float(np.median(times) * 1e6)
+
+
+def header() -> None:
+    print("name,us_per_call,derived")

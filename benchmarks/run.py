@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_gemm_strategies   — Figs. 4-9 (strategy sweep, small/medium/large)
+  bench_micro_lowering    — Fig. 10b (matrix engine vs generic vector lowering)
+  bench_dtypes            — Table 1 (dtype/rank table)
+  bench_packing_overhead  — §4.2/4.3 packing cost decomposition (+PackedWeight)
+  bench_syr2k             — §5.1 SYR2K extension of the layered strategy
+  bench_models            — end-to-end model step times (CPU observation)
+  bench_roofline          — TPU-target roofline rows from the dry-run
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+import sys
+import traceback
+
+from benchmarks import (bench_dtypes, bench_gemm_strategies,
+                        bench_micro_lowering, bench_models,
+                        bench_packing_overhead, bench_roofline, bench_syr2k)
+from benchmarks.common import header
+
+
+def main() -> None:
+    header()
+    modules = [bench_micro_lowering, bench_dtypes, bench_packing_overhead,
+               bench_syr2k, bench_gemm_strategies, bench_models,
+               bench_roofline]
+    failures = 0
+    for mod in modules:
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"{mod.__name__},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

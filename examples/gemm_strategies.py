@@ -1,0 +1,59 @@
+"""Reproduce the paper's experiment shape: strategy sweep over GEMM sizes.
+
+  PYTHONPATH=src python examples/gemm_strategies.py [--sizes 64,256,1024]
+
+Prints a Figs. 4-9-style table: time per strategy, speedup over the PLuTo
+proxy, and which strategy wins at each size (expect the paper's crossover:
+Tiling small, Tiling+Packing large, library competitive throughout).
+"""
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.common import time_fn  # noqa: E402
+from repro.core import run_strategy  # noqa: E402
+
+STRATEGIES = ("pluto", "intrinsic", "tiling", "tiling_packing", "xla")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="64,256,512")
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",")]
+    rng = np.random.default_rng(0)
+
+    hdr = f"{'n':>6s} | " + " | ".join(f"{s:>15s}" for s in STRATEGIES)
+    print(hdr)
+    print("-" * len(hdr))
+    for n in sizes:
+        a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+        times = {}
+        for s in STRATEGIES:
+            if s == "pluto" and n > 512:
+                times[s] = float("nan")
+                continue
+            fn = jax.jit(lambda x, y, s=s: run_strategy(s, x, y,
+                                                        backend="jnp"))
+            times[s] = time_fn(fn, a, b)
+        base = times.get("pluto", float("nan"))
+        cells = []
+        for s in STRATEGIES:
+            t = times[s]
+            if np.isnan(t):
+                cells.append(f"{'--':>15s}")
+            else:
+                spd = f" ({base/t:4.1f}x)" if not np.isnan(base) else ""
+                cells.append(f"{t/1e3:8.2f}ms{spd:>7s}")
+        best = min((t, s) for s, t in times.items() if not np.isnan(t))[1]
+        print(f"{n:6d} | " + " | ".join(cells) + f"   best={best}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Batched serving example: prefill + decode through the jit'd engine.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch olmo-1b --batch 4 --new 24
+
+Trains nothing — serves random-init weights greedily to demonstrate the
+serving path (per-request isolation, KV/SSM caches, batched decode).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.models import build
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, ServeConfig(
+        max_len=args.prompt_len + args.new + 8,
+        temperature=args.temperature))
+
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.num_patches, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(args.batch, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+
+    t0 = time.time()
+    out = engine.generate(batch, max_new_tokens=args.new)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"new={args.new}")
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({args.batch*args.new/dt:.1f} tok/s incl. compile)")
+    for i, row in enumerate(out):
+        print(f"  req{i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""End-to-end training driver example (deliverable (b)).
+
+  PYTHONPATH=src python examples/train_lm.py                    # tiny, 200 steps
+  PYTHONPATH=src python examples/train_lm.py --preset 100m      # the ~100M e2e run
+  PYTHONPATH=src python examples/train_lm.py --arch mixtral-8x22b  # MoE variant
+
+Thin wrapper over repro.launch.train: deterministic Markov data (loss really
+falls), checkpoints + auto-resume, straggler monitor. Kill it mid-run and
+restart with the same --ckpt-dir to watch fault-tolerant resume.
+"""
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--steps") for a in argv):
+        argv += ["--steps", "200"]
+    if not any(a.startswith("--ckpt-dir") for a in argv):
+        argv += ["--ckpt-dir", "/tmp/repro_train_ckpt"]
+    sys.exit(train.main(argv))

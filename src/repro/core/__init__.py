@@ -1,0 +1,9 @@
+"""The paper's primary contribution: compiler-only layered GEMM as a framework
+service — planner (macro), kernels behind a clean intrinsic-like interface
+(micro), strategy registry, and the single matmul dispatch point every model
+in this framework uses.
+"""
+from repro.core.gemm import linear, matmul, plan_gemm, resolve_strategy  # noqa: F401
+from repro.core.layered import LayeredGemm, PackedWeight  # noqa: F401
+from repro.core.planner import GemmPlan, should_pack  # noqa: F401
+from repro.core.strategy import STRATEGIES, run as run_strategy  # noqa: F401

@@ -1,0 +1,53 @@
+"""Matrix-engine dtype table — the TPU analogue of paper Table 1.
+
+POWER10 MMA packs more elements per VSR as dtypes narrow, raising the rank of
+the per-instruction update (f32 -> rank-1, bf16 -> rank-2, i8 -> rank-4,
+i4 -> rank-8). The MXU expresses the same idea as per-pass throughput: narrow
+inputs feed more MACs per cycle, accumulating into wide (f32/i32) accumulators.
+This table drives the planner's alignment choices and the roofline's peak term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.roofline.hw import V5E, TpuTarget
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixDtype:
+    name: str
+    itemsize: int
+    acc_dtype: str          # accumulator dtype (paper: 32-bit grid in the ACC)
+    rank: int               # paper's rank-k analogue: elements per 32-bit lane
+    native: bool            # MXU-native input (else emulated/promoted)
+    rel_throughput: float   # MXU throughput relative to bf16
+
+
+# Keyed by jnp dtype name.
+TABLE: Dict[str, MatrixDtype] = {
+    "float32": MatrixDtype("float32", 4, "float32", 1, True, 0.25),
+    "bfloat16": MatrixDtype("bfloat16", 2, "float32", 2, True, 1.0),
+    "float16": MatrixDtype("float16", 2, "float32", 2, False, 1.0),  # via bf16/f32
+    "int8": MatrixDtype("int8", 1, "int32", 4, True, 2.0),
+    "int4": MatrixDtype("int4", 1, "int32", 8, False, 2.0),  # unpacked to i8
+}
+
+
+def info(dtype) -> MatrixDtype:
+    name = jnp.dtype(dtype).name if not isinstance(dtype, str) else dtype
+    if name not in TABLE:
+        raise KeyError(f"dtype {name} not supported by the matrix engine table")
+    return TABLE[name]
+
+
+def acc_dtype(dtype) -> jnp.dtype:
+    return jnp.dtype(info(dtype).acc_dtype)
+
+
+def alignment(dtype, target: TpuTarget = V5E) -> tuple[int, int]:
+    """(sublane, lane) tile multiples for a dtype — the MXU feeding geometry."""
+    d = info(dtype)
+    return target.sublane(d.itemsize), target.lane

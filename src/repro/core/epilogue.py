@@ -1,0 +1,26 @@
+"""Fused GEMM epilogues (beyond-paper: the paper stops at alpha/beta).
+
+Frameworks fuse bias/activation into the GEMM's final store; we expose the
+same registry both for the jnp lowering (XLA fuses it) and as the epilogue of
+the Pallas kernels' last grid step (hillclimb item — see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+EPILOGUES: Dict[str, Callable] = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
+
+
+def apply_epilogue(name: str, x: jnp.ndarray) -> jnp.ndarray:
+    if name not in EPILOGUES:
+        raise KeyError(f"unknown epilogue {name!r}; one of {list(EPILOGUES)}")
+    return EPILOGUES[name](x)

@@ -1,0 +1,105 @@
+"""Public matmul API — the framework's single GEMM dispatch point.
+
+Every dense contraction in ``repro.models`` goes through :func:`matmul` /
+:func:`linear`. This is the framework analogue of the paper's KernelFaRer +
+compiler pass: the "pattern" (a GEMM) is explicit at this call site, and the
+strategy/planner decide how it is lowered.
+
+Resolution of ``strategy="auto"``:
+  * on TPU: ``tiling`` for problems that fit VMEM, ``tiling_packing`` beyond
+    (the paper's own small/large crossover), via the Pallas kernels;
+  * elsewhere (CPU dry-run/tests): ``xla`` — XLA's GEMM is the correct
+    "library" lowering for a backend we are not hand-scheduling for.
+Overrides: env ``REPRO_GEMM_STRATEGY`` / ``REPRO_GEMM_BACKEND`` (used by the
+integration tests to force the Pallas path inside jitted models).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import strategy as strat
+from repro.core.planner import GemmPlan, plan_gemm, should_pack
+
+_ENV_STRATEGY = "REPRO_GEMM_STRATEGY"
+_ENV_BACKEND = "REPRO_GEMM_BACKEND"
+
+
+def default_backend() -> str:
+    env = os.environ.get(_ENV_BACKEND)
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def resolve_strategy(m: int, k: int, n: int, dtype, strategy: str = "auto") -> str:
+    env = os.environ.get(_ENV_STRATEGY)
+    if env:
+        return env
+    if strategy != "auto":
+        return strategy
+    if jax.default_backend() == "tpu":
+        return "tiling_packing" if should_pack(m, k, n, dtype) else "tiling"
+    return "xla"
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None, *,
+           alpha: float = 1.0, beta: float = 0.0, strategy: str = "auto",
+           plan: Optional[GemmPlan] = None, backend: Optional[str] = None,
+           out_dtype=None) -> jnp.ndarray:
+    """C <- alpha * A @ B (+ beta * C). 2-D operands."""
+    m, k = a.shape
+    n = b.shape[1]
+    s = resolve_strategy(m, k, n, a.dtype, strategy)
+    be = backend or default_backend()
+    return strat.run(s, a, b, c, alpha=alpha, beta=beta, plan=plan,
+                     backend=be, out_dtype=out_dtype)
+
+
+def linear(x: jnp.ndarray, w: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
+           *, strategy: str = "auto", plan: Optional[GemmPlan] = None,
+           backend: Optional[str] = None, out_dtype=None,
+           accum: str = "native") -> jnp.ndarray:
+    """y = x @ w (+ bias) with arbitrary leading batch dims on x.
+
+    The XLA lowering keeps leading dims UNFLATTENED: collapsing [B, S, d] to
+    [B*S, d] merges two differently-sharded dims, which GSPMD on a 3-axis mesh
+    can only resolve by replicating the whole token set ("involuntary full
+    rematerialization" — measured at +10 GiB/device on the multi-pod prefill
+    cells; EXPERIMENTS.md §Perf). Kernel strategies get the 2-D view they
+    need, but only when explicitly selected.
+
+    ``accum``: "native" keeps the dot output in the input dtype, so when the
+    contraction dim is TP-sharded the cross-shard all-reduce runs in bf16
+    (per-shard MXU accumulation is f32 regardless) — halves the dominant
+    collective (EXPERIMENTS.md §Perf H1). "f32" forces a full-precision
+    cross-shard reduce (used for the LM-head logits).
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    s = resolve_strategy(int(jnp.size(x) // max(k, 1)), k, n, x.dtype, strategy)
+    if s == "xla" or x.ndim == 2:
+        if s == "xla":
+            pet = jnp.float32 if accum == "f32" else None
+            acc = jnp.einsum("...k,kn->...n", x, w,
+                             preferred_element_type=pet)
+            y = acc.astype(out_dtype or x.dtype)
+        else:
+            y = matmul(x, w, strategy=s, plan=plan, backend=backend,
+                       out_dtype=out_dtype or x.dtype)
+    else:
+        x2 = x.reshape(-1, k)
+        y = matmul(x2, w, strategy=s, plan=plan, backend=backend,
+                   out_dtype=out_dtype or x.dtype)
+        y = y.reshape(*lead, n)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+__all__ = ["matmul", "linear", "resolve_strategy", "default_backend",
+           "plan_gemm", "GemmPlan"]

@@ -1,0 +1,94 @@
+"""LayeredGemm — the paper's contribution as a composable JAX module.
+
+Bundles planner + packing + micro kernel + epilogue into one reusable object
+(the "compiler pass" as a library citizen). Also provides
+:class:`PackedWeight`, a beyond-paper extension natural to frameworks: model
+weights are static across calls, so the macro-level packing can be *hoisted to
+load time* and amortized over every step — something a per-call library (or
+per-loop compiler rewrite) cannot do. Serving uses this for the LM head.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import strategy as strat
+from repro.core.epilogue import apply_epilogue
+from repro.core.gemm import default_backend
+from repro.core.planner import GemmPlan, plan_gemm, should_pack
+from repro.kernels import ref
+from repro.kernels.gemm_packed import gemm_packed
+from repro.kernels.pack import pack_b
+
+
+@dataclasses.dataclass
+class LayeredGemm:
+    """Plan-once, run-many layered GEMM for a fixed problem signature."""
+
+    m: int
+    k: int
+    n: int
+    dtype: str = "float32"
+    strategy: Optional[str] = None        # None -> paper's size heuristic
+    backend: Optional[str] = None
+    epilogue: str = "none"
+    plan: Optional[GemmPlan] = None
+
+    def __post_init__(self):
+        self.plan = self.plan or plan_gemm(self.m, self.k, self.n, self.dtype)
+        if self.strategy is None:
+            self.strategy = ("tiling_packing"
+                             if should_pack(self.m, self.k, self.n, self.dtype)
+                             else "tiling")
+        self.backend = self.backend or default_backend()
+
+    def __call__(self, a, b, c=None, *, alpha=1.0, beta=0.0, out_dtype=None):
+        assert a.shape == (self.m, self.k) and b.shape == (self.k, self.n), (
+            a.shape, b.shape, (self.m, self.k, self.n))
+        out = strat.run(self.strategy, a, b, c, alpha=alpha, beta=beta,
+                        plan=self.plan, backend=self.backend,
+                        out_dtype=out_dtype)
+        return apply_epilogue(self.epilogue, out)
+
+
+@dataclasses.dataclass
+class PackedWeight:
+    """A weight matrix stored pre-packed in tile-major order (load-time packing)."""
+
+    packed: jnp.ndarray     # [Nb, Kb, bk, bn] (row) per pack_b
+    k: int
+    n: int
+    plan: GemmPlan
+
+    @classmethod
+    def pack(cls, w: jnp.ndarray, *, m_hint: int = 1024,
+             plan: Optional[GemmPlan] = None,
+             backend: Optional[str] = None) -> "PackedWeight":
+        k, n = w.shape
+        plan = plan or plan_gemm(m_hint, k, n, w.dtype)
+        be = backend or default_backend()
+        if be == "pallas":
+            packed = pack_b(w, plan.bk, plan.bn, layout=plan.layout_b)
+        else:
+            packed = ref.pack_b_ref(w, plan.bk, plan.bn, plan.layout_b)
+        return cls(packed=packed, k=k, n=n, plan=plan)
+
+    def matmul(self, a: jnp.ndarray, *, out_dtype=None,
+               backend: Optional[str] = None) -> jnp.ndarray:
+        """a[M,K] @ W using the pre-packed buffer (packing cost amortized)."""
+        be = backend or default_backend()
+        if be == "pallas":
+            ap = None
+            from repro.kernels.pack import pack_a
+            ap = pack_a(a, self.plan.bm, self.plan.bk, layout=self.plan.layout_a)
+            return gemm_packed(ap, self.packed, a.shape[0], self.n,
+                               layout_a=self.plan.layout_a,
+                               layout_b=self.plan.layout_b,
+                               out_dtype=out_dtype or a.dtype)
+        ap = ref.pack_a_ref(a, self.plan.bm, self.plan.bk, self.plan.layout_a)
+        out = ref.packed_matmul_ref(ap, self.packed, a.shape[0], self.n,
+                                    self.plan.layout_a, self.plan.layout_b,
+                                    out_dtype=out_dtype or a.dtype)
+        return out

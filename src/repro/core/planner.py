@@ -1,0 +1,154 @@
+"""Block-size planner — the paper's constraint system (Eq. 1-7) re-derived for
+the TPU memory hierarchy.
+
+The paper's macro algorithm reads L1/L2/L3 sizes from LLVM's target tables and
+solves:            kc from L1, mc from L2, nc from L3, all rounded to register
+tile multiples (mr, kr, nr) chosen from the matrix-engine geometry.
+
+On TPU the hierarchy collapses to a single software-managed VMEM with Pallas
+double-buffering the HBM streams, and the register tile becomes the MXU tile:
+
+  (C1)  working set fits VMEM:
+        dbuf*(bm*bk + bk*bn)*itemsize + bm*bn*acc_itemsize <= vmem_budget
+  (C2)  MXU feeding geometry:  bm % sublane == 0, bn % lane == 0, bk % lane == 0
+  (C3)  accumulator grid:      bm, bn multiples of the 128x128 MXU tile when
+        possible (VAccs = bm/128, HAccs = bn/128 — paper Fig. 3 generalized)
+  (C5-7) padded problem dims are multiples of (bm, bk, bn) — guaranteed by the
+        packer's zero-fill rather than constraining the problem.
+
+Heuristic order is the paper's: maximize the contraction depth bk first (their
+kc), then bm (their mc), then bn (their nc) — deep K amortizes the accumulator
+setup exactly like MMA's kr maximizes in-accumulator operations.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import dtypes as mdt
+from repro.roofline.hw import V5E, TpuTarget
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    bm: int
+    bk: int
+    bn: int
+    dtype: str
+    acc_dtype: str
+    layout_a: str = "row"
+    layout_b: str = "row"
+    double_buffer: int = 2
+    vmem_budget: int = V5E.vmem_bytes
+
+    @property
+    def vaccs(self) -> int:
+        return max(self.bm // V5E.mxu_dim, 1)
+
+    @property
+    def haccs(self) -> int:
+        return max(self.bn // V5E.mxu_dim, 1)
+
+    def vmem_working_set(self) -> int:
+        item = mdt.info(self.dtype).itemsize
+        acc_item = jnp.dtype(self.acc_dtype).itemsize
+        streams = self.double_buffer * (self.bm * self.bk + self.bk * self.bn) * item
+        return streams + self.bm * self.bn * acc_item
+
+    def validate(self, target: TpuTarget = V5E) -> None:
+        sub, lane = mdt.alignment(self.dtype, target)
+        if self.vmem_working_set() > self.vmem_budget:
+            raise ValueError(
+                f"plan {self} exceeds VMEM budget: "
+                f"{self.vmem_working_set()} > {self.vmem_budget}")
+        for name, val, mult in (("bm", self.bm, sub), ("bn", self.bn, lane),
+                                ("bk", self.bk, lane)):
+            if val % mult and val >= mult:
+                raise ValueError(f"{name}={val} not aligned to {mult}")
+
+    def kwargs(self) -> dict:
+        return dict(bm=self.bm, bk=self.bk, bn=self.bn)
+
+
+def _round_down(x: int, mult: int) -> int:
+    return max((x // mult) * mult, mult)
+
+
+def plan_gemm(m: int, k: int, n: int, dtype="float32", *,
+              target: TpuTarget = V5E,
+              vmem_budget: int | None = None,
+              double_buffer: int = 2,
+              layout_a: str = "row",
+              layout_b: str = "row") -> GemmPlan:
+    """Solve the TPU-translated constraint system for a concrete problem."""
+    d = mdt.info(jnp.dtype(dtype).name if not isinstance(dtype, str) else dtype)
+    budget = vmem_budget or target.vmem_bytes
+    sub, lane = target.sublane(d.itemsize), target.lane
+    acc_item = jnp.dtype(d.acc_dtype).itemsize
+    mxu = target.mxu_dim
+
+    # Clip targets to the (padded) problem.
+    def clipped(value: int, dim: int, mult: int) -> int:
+        dim_padded = -(-dim // mult) * mult
+        return min(value, dim_padded)
+
+    # Start from the MXU-native accumulator tile (paper: one ACC = 4x4; here
+    # one MXU tile = 128x128) and the paper's 2x4 VAccs x HAccs arrangement.
+    bm = clipped(2 * mxu, m, sub)
+    bn = clipped(4 * mxu, n, lane)
+
+    # (C1) maximize bk first — the paper's "larger kc" insight (Eq. 1).
+    def max_bk(bm_: int, bn_: int) -> int:
+        avail = budget - bm_ * bn_ * acc_item
+        per_k = double_buffer * (bm_ + bn_) * d.itemsize
+        return max(avail // per_k, lane)
+
+    bk = clipped(_round_down(max_bk(bm, bn), lane), k, lane)
+
+    # Then grow bm (paper Eq. 3: mc from L2), then bn (Eq. 4: nc from L3),
+    # re-checking the budget after each growth step.
+    def fits(bm_, bk_, bn_):
+        ws = (double_buffer * (bm_ * bk_ + bk_ * bn_) * d.itemsize
+              + bm_ * bn_ * acc_item)
+        return ws <= budget
+
+    for cand in (8 * mxu, 4 * mxu, 2 * mxu):
+        c = clipped(cand, m, sub)
+        if c > bm and fits(c, bk, bn):
+            bm = c
+            break
+    for cand in (8 * mxu, 6 * mxu, 4 * mxu):
+        c = clipped(cand, n, lane)
+        if c > bn and fits(bm, bk, c):
+            bn = c
+            break
+
+    # Small problems: shrink to the aligned problem envelope.
+    bm = min(bm, _round_down(-(-m // sub) * sub, sub))
+    bn = min(bn, _round_down(-(-n // lane) * lane, lane))
+    bk = min(bk, _round_down(-(-k // lane) * lane, lane))
+
+    while not fits(bm, bk, bn) and bk > lane:
+        bk = _round_down(bk // 2, lane)
+    while not fits(bm, bk, bn) and bn > lane:
+        bn = _round_down(bn // 2, lane)
+    while not fits(bm, bk, bn) and bm > sub:
+        bm = _round_down(bm // 2, sub)
+
+    plan = GemmPlan(bm=bm, bk=bk, bn=bn, dtype=d.name, acc_dtype=d.acc_dtype,
+                    layout_a=layout_a, layout_b=layout_b,
+                    double_buffer=double_buffer, vmem_budget=budget)
+    plan.validate(target)
+    return plan
+
+
+def should_pack(m: int, k: int, n: int, dtype="float32", *,
+                target: TpuTarget = V5E) -> bool:
+    """Strategy heuristic from the paper's own results: packing pays off once
+    operands exceed the fast-memory envelope (Figs. 4-6: Tiling wins small,
+    Tiling+Packing wins medium/large)."""
+    item = mdt.info(jnp.dtype(dtype).name if not isinstance(dtype, str)
+                    else dtype).itemsize
+    total = (m * k + k * n + m * n) * item
+    return total > target.vmem_bytes

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Layout:
+  ref.py            — pure-jnp oracles (the correctness contract)
+  pack.py           — macro-level packing (paper §3.1)
+  gemm_tiled.py     — "Tiling" strategy kernel
+  gemm_packed.py    — "Tiling+Packing" strategy kernel
+  gemm_vsx_like.py  — generic vector-unit lowering (paper's VSX baseline)
+  flash_attention.py— blocked online-softmax attention (long-context hot spot)
+  ops.py            — jit'd wrappers (the dispatch surface for repro.core)
+"""
+from repro.kernels import ops, ref  # noqa: F401

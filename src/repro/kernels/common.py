@@ -1,0 +1,67 @@
+"""Shared Pallas utilities: compiler-params compat, padding, interpret policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental import pallas as pl  # noqa: F401  (re-exported)
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode on non-TPU backends (CPU CI)."""
+    return jax.default_backend() != "tpu"
+
+
+def tpu_compiler_params(dimension_semantics):
+    """Version-robust pltpu.CompilerParams constructor (None off-TPU)."""
+    if pltpu is None:
+        return None
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        return None
+    try:
+        return cls(dimension_semantics=dimension_semantics)
+    except TypeError:  # pragma: no cover
+        return None
+
+
+def pallas_kwargs(*, interpret: bool, dimension_semantics=None):
+    """kwargs dict for pl.pallas_call, dropping TPU params under interpret."""
+    kw = {"interpret": interpret}
+    if not interpret and dimension_semantics is not None:
+        params = tpu_compiler_params(dimension_semantics)
+        if params is not None:
+            kw["compiler_params"] = params
+    return kw
+
+
+def vmem_scratch(shape, dtype):
+    if pltpu is not None:
+        return pltpu.VMEM(shape, dtype)
+    raise RuntimeError("pallas TPU memory spaces unavailable")
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad2d(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    """Zero-pad a 2-D array to multiples of (m0, m1) — paper's remainder fill."""
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def acc_dtype_for(dtype) -> jnp.dtype:
+    """Accumulator dtype (paper Table 1: i32 for integer inputs, f32 else)."""
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.int32
+    return jnp.float32

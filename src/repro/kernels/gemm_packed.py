@@ -1,0 +1,107 @@
+"""Blocked GEMM Pallas kernel over PACKED operands — the paper's
+**"Tiling+Packing"** strategy (§3.1 + §3.2 combined, Algorithm 1 in full).
+
+Operands come from ``repro.kernels.pack`` in tile-major order, so every grid
+step's HBM→VMEM DMA is one contiguous [bm,bk] / [bk,bn] block (unit-stride
+stream), the TPU analogue of the paper's packed-buffer locality win (on CPU the
+win was cache/TLB behaviour; on TPU it is strided-vs-contiguous DMA).
+
+Supports the paper's per-target intra-tile layouts: layout_a="col" stores A
+tiles transposed (MMA's preferred A layout) and the micro kernel contracts
+accordingly without any in-VMEM transpose.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (acc_dtype_for, cdiv, default_interpret,
+                                  pad2d, pallas_kwargs, vmem_scratch)
+
+
+def _packed_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, alpha, beta,
+                   k_steps, layout_a, layout_b):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[0, 0]  # [bm,bk] ("row") or [bk,bm] ("col")
+    b = b_ref[0, 0]  # [bk,bn] ("row") or [bn,bk] ("col")
+    lhs_contract = 1 if layout_a == "row" else 0
+    rhs_contract = 0 if layout_b == "row" else 1
+    # Result is [bm, bn] for every layout combination (contraction over bk).
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((lhs_contract,), (rhs_contract,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        out = alpha * acc_ref[...]
+        if beta != 0:
+            out = out + beta * c_ref[...].astype(acc_ref.dtype)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def gemm_packed(a_packed: jnp.ndarray,
+                b_packed: jnp.ndarray,
+                m: int,
+                n: int,
+                c: jnp.ndarray | None = None,
+                *,
+                alpha: float = 1.0,
+                beta: float = 0.0,
+                layout_a: str = "row",
+                layout_b: str = "row",
+                out_dtype=None,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """C[:m,:n] <- alpha * unpack(A)@unpack(B) + beta * C.
+
+    a_packed: [Mb, Kb, bm, bk] (row) / [Mb, Kb, bk, bm] (col)
+    b_packed: [Nb, Kb, bk, bn] (row) / [Nb, Kb, bn, bk] (col)
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    mb, kb = a_packed.shape[:2]
+    nb, kb2 = b_packed.shape[:2]
+    assert kb == kb2, (a_packed.shape, b_packed.shape)
+    if layout_a == "row":
+        bm, bk = a_packed.shape[2:]
+    else:
+        bk, bm = a_packed.shape[2:]
+    if layout_b == "row":
+        bk2, bn = b_packed.shape[2:]
+    else:
+        bn, bk2 = b_packed.shape[2:]
+    assert bk == bk2
+    out_dtype = out_dtype or (c.dtype if c is not None else a_packed.dtype)
+    acc_dtype = acc_dtype_for(a_packed.dtype)
+    if c is None:
+        beta = 0
+        c_p = jnp.zeros((mb * bm, nb * bn), out_dtype)
+    else:
+        assert c.shape == (m, n)
+        c_p = pad2d(c, bm, bn)
+
+    grid = (mb, nb, kb)  # K innermost: revolving accumulator, one HBM store
+    ta = a_packed.shape[2:]
+    tb = b_packed.shape[2:]
+    out = pl.pallas_call(
+        functools.partial(_packed_kernel, alpha=alpha, beta=beta, k_steps=kb,
+                          layout_a=layout_a, layout_b=layout_b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1) + ta, lambda i, j, kk: (i, kk, 0, 0)),
+            pl.BlockSpec((1, 1) + tb, lambda i, j, kk: (j, kk, 0, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mb * bm, nb * bn), out_dtype),
+        scratch_shapes=[vmem_scratch((bm, bn), acc_dtype)],
+        **pallas_kwargs(
+            interpret=interpret,
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(a_packed, b_packed, c_p)
+    return out[:m, :n]

@@ -1,0 +1,64 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+These are the callable surface used by ``repro.core`` (the strategy dispatch).
+Block sizes arrive from the planner; everything here is shape-static so the
+wrappers jit cleanly and can be lowered inside larger programs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gemm_packed import gemm_packed
+from repro.kernels.gemm_tiled import gemm_tiled
+from repro.kernels.gemm_vsx_like import matmul_vsx_like
+from repro.kernels.pack import pack_a, pack_b
+
+__all__ = [
+    "tiled_matmul", "packed_matmul", "vsx_matmul", "attention",
+    "pack_a_op", "pack_b_op",
+]
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "alpha", "beta",
+                                   "out_dtype", "interpret"))
+def tiled_matmul(a, b, c=None, *, bm=128, bk=128, bn=128, alpha=1.0, beta=0.0,
+                 out_dtype=None, interpret=None):
+    return gemm_tiled(a, b, c, alpha=alpha, beta=beta, bm=bm, bk=bk, bn=bn,
+                      out_dtype=out_dtype, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "layout_a", "layout_b",
+                                   "alpha", "beta", "out_dtype", "interpret"))
+def packed_matmul(a, b, c=None, *, bm=128, bk=128, bn=128,
+                  layout_a="row", layout_b="row", alpha=1.0, beta=0.0,
+                  out_dtype=None, interpret=None):
+    """Full Tiling+Packing pipeline: pack both operands, then packed GEMM."""
+    m, n = a.shape[0], b.shape[1]
+    ap = pack_a(a, bm, bk, layout=layout_a, interpret=interpret)
+    bp = pack_b(b, bk, bn, layout=layout_b, interpret=interpret)
+    return gemm_packed(ap, bp, m, n, c, alpha=alpha, beta=beta,
+                       layout_a=layout_a, layout_b=layout_b,
+                       out_dtype=out_dtype, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "out_dtype", "interpret"))
+def vsx_matmul(a, b, *, bm=128, bk=128, bn=128, out_dtype=None, interpret=None):
+    return matmul_vsx_like(a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
+                           interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "scale", "bq", "bkv",
+                                   "interpret"))
+def attention(q, k, v, *, causal=True, window=None, scale=None,
+              bq=128, bkv=128, interpret=None):
+    return flash_attention(q, k, v, causal=causal, window=window, scale=scale,
+                           bq=bq, bkv=bkv, interpret=interpret)
+
+
+pack_a_op = jax.jit(pack_a, static_argnames=("bm", "bk", "layout", "interpret"))
+pack_b_op = jax.jit(pack_b, static_argnames=("bk", "bn", "layout", "interpret"))

@@ -1,0 +1,73 @@
+"""Pallas packing kernels — the paper's macro-level data reorganization (§3.1).
+
+``pack_a`` copies A[M,K] into a tile-major buffer [Mb, Kb, bm, bk] whose tiles
+lie in memory in row-of-tiles order — the exact order the micro kernel consumes
+them (paper Fig. 2b). ``pack_b`` produces [Nb, Kb, bk, bn] in column-of-tiles
+order. Remainder tiles are zero-filled (paper: "the remainder elements are
+filled with zeroes in the packing buffers").
+
+``layout`` chooses the element order *within* each tile ("row" | "col"),
+mirroring the paper's flexible per-target tile layout (MMA wants col-major A,
+row-major B). On TPU the packed buffer makes every grid step's HBM→VMEM DMA a
+single contiguous block instead of a strided gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import cdiv, default_interpret, pad2d, pallas_kwargs
+
+
+def _pack_kernel(x_ref, o_ref, *, transpose: bool):
+    tile = x_ref[...]
+    if transpose:
+        tile = tile.T
+    o_ref[0, 0] = tile
+
+
+def _pack(x: jnp.ndarray, b0: int, b1: int, *, grid_order: str, layout: str,
+          interpret: bool | None):
+    """Shared packer. grid_order 'row': out [G0, G1, ...] = [dim0-tiles, dim1-tiles]
+    (A's row-of-tiles order); 'col': out [G1, G0, ...] (B's column-of-tiles order).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    transpose = layout == "col"
+    x_p = pad2d(x, b0, b1)
+    g0, g1 = cdiv(x.shape[0], b0), cdiv(x.shape[1], b1)
+    t0, t1 = (b1, b0) if transpose else (b0, b1)
+    if grid_order == "row":
+        grid = (g0, g1)
+        out_index = lambda i, j: (i, j, 0, 0)
+        out_shape = (g0, g1, t0, t1)
+    else:
+        grid = (g1, g0)
+        out_index = lambda j, i: (j, i, 0, 0)
+        out_shape = (g1, g0, t0, t1)
+    in_index = (lambda i, j: (i, j)) if grid_order == "row" else (lambda j, i: (i, j))
+
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, transpose=transpose),
+        grid=grid,
+        in_specs=[pl.BlockSpec((b0, b1), in_index)],
+        out_specs=pl.BlockSpec((1, 1, t0, t1), out_index),
+        out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
+        **pallas_kwargs(interpret=interpret,
+                        dimension_semantics=("parallel", "parallel")),
+    )(x_p)
+
+
+def pack_a(a: jnp.ndarray, bm: int, bk: int, layout: str = "row",
+           interpret: bool | None = None) -> jnp.ndarray:
+    """A[M,K] -> [Mb, Kb, bm, bk] ("row") or [Mb, Kb, bk, bm] ("col")."""
+    return _pack(a, bm, bk, grid_order="row", layout=layout, interpret=interpret)
+
+
+def pack_b(b: jnp.ndarray, bk: int, bn: int, layout: str = "row",
+           interpret: bool | None = None) -> jnp.ndarray:
+    """B[K,N] -> [Nb, Kb, bk, bn] ("row") or [Nb, Kb, bn, bk] ("col")."""
+    return _pack(b, bk, bn, grid_order="col", layout=layout, interpret=interpret)

@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's correctness test sweeps shapes/dtypes and asserts allclose against
+these references (interpret=True on CPU, per the validation protocol).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    """C = A @ B with f32 accumulation (the micro-kernel contract)."""
+    acc = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype or a.dtype)
+
+
+def gemm_ref(a, b, c, alpha: float = 1.0, beta: float = 1.0, out_dtype=None):
+    """Full GEMM semantics: C <- alpha * A@B + beta * C (paper Alg. 1)."""
+    acc = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    out = alpha * acc + beta * c.astype(jnp.float32)
+    return out.astype(out_dtype or c.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Packing (paper §3.1, Figure 2)
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, m0: int, m1: int):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))  # paper: zero-fill remainder tiles
+    return x
+
+
+def pack_a_ref(a: jnp.ndarray, bm: int, bk: int, layout: str = "row"):
+    """Pack A[M,K] into tile-major [Mb, Kb, bm, bk] (row) or [Mb, Kb, bk, bm] (col).
+
+    Tiles are stored in row-of-tiles order (the order the micro kernel consumes
+    them — paper Fig. 2b), zero-padded to full tiles.
+    """
+    a = _pad_to(a, bm, bk)
+    mb, kb = a.shape[0] // bm, a.shape[1] // bk
+    t = a.reshape(mb, bm, kb, bk).transpose(0, 2, 1, 3)  # [Mb, Kb, bm, bk]
+    if layout == "col":   # column-major elements inside each tile (MMA's A layout)
+        t = t.transpose(0, 1, 3, 2)
+    elif layout != "row":
+        raise ValueError(f"bad layout {layout!r}")
+    return t
+
+
+def pack_b_ref(b: jnp.ndarray, bk: int, bn: int, layout: str = "row"):
+    """Pack B[K,N] into [Nb, Kb, bk, bn] (row) / [Nb, Kb, bn, bk] (col).
+
+    Grid-major order is [Nb, Kb]: all tiles of one *column of tiles* are
+    contiguous over k — the paper's column-of-tiles packing order for B
+    (Fig. 2b), which makes the micro kernel's B stream unit-stride.
+    """
+    b = _pad_to(b, bk, bn)
+    kb, nb = b.shape[0] // bk, b.shape[1] // bn
+    t = b.reshape(kb, bk, nb, bn).transpose(2, 0, 1, 3)  # [Nb, Kb, bk, bn]
+    if layout == "col":
+        t = t.transpose(0, 1, 3, 2)
+    elif layout != "row":
+        raise ValueError(f"bad layout {layout!r}")
+    return t
+
+
+def unpack_a_ref(ap: jnp.ndarray, m: int, k: int, layout: str = "row"):
+    if layout == "col":
+        ap = ap.transpose(0, 1, 3, 2)
+    mb, kb, bm, bk = ap.shape
+    return ap.transpose(0, 2, 1, 3).reshape(mb * bm, kb * bk)[:m, :k]
+
+
+def unpack_b_ref(bp: jnp.ndarray, k: int, n: int, layout: str = "row"):
+    if layout == "col":
+        bp = bp.transpose(0, 1, 3, 2)
+    nb, kb, bk, bn = bp.shape
+    return bp.transpose(1, 2, 0, 3).reshape(kb * bk, nb * bn)[:k, :n]
+
+
+def packed_matmul_ref(ap, bp, m: int, n: int, layout_a="row", layout_b="row",
+                      out_dtype=None):
+    kdim = ap.shape[1] * ap.shape[3 if layout_a == "row" else 2]
+    a = unpack_a_ref(ap, m, kdim, layout_a)
+    b = unpack_b_ref(bp, kdim, n, layout_b)
+    return matmul_ref(a, b, out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  scale: float | None = None):
+    """Softmax attention oracle. q:[B,Sq,H,D] k/v:[B,Skv,Hkv,D] (GQA via repeat).
+
+    ``window``: sliding-window size (tokens attend to the previous ``window``
+    positions inclusive of self).
+    """
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    if h != hkv:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq)  # right-aligned (decode)
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,51 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) cell.
+
+Weak-type-correct, shardable, zero device allocation — the dry-run lowers
+against these. Modality frontends are STUBS per the assignment: whisper gets
+precomputed frame embeddings, paligemma gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import Model, build
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, s), jnp.int32),
+             "labels": sds((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = sds((b, cfg.num_patches, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+def params_specs(model: Model) -> Any:
+    """Abstract parameter tree via eval_shape (no allocation)."""
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def decode_state_specs(model: Model, cfg: ModelConfig, shape: InputShape,
+                       cache_dtype=jnp.bfloat16) -> Tuple[Any, Any, Any]:
+    """(caches, token, pos) abstract values for a serve_step cell."""
+    b, s = shape.global_batch, shape.seq_len
+    params = params_specs(model)
+    batch = train_batch_specs(cfg, shape)
+
+    caches = jax.eval_shape(
+        lambda p, bt: model.init_decode_state(p, bt, s, cache_dtype),
+        params, batch)
+    token = sds((b, 1), jnp.int32)
+    pos = sds((b,), jnp.int32)
+    return caches, token, pos

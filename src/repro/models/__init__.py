@@ -1,0 +1,4 @@
+"""Model zoo: every assigned architecture as a functional JAX model whose
+dense contractions all route through ``repro.core`` (the paper's layered GEMM).
+"""
+from repro.models.model_registry import Model, build  # noqa: F401

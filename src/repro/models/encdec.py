@@ -1,0 +1,204 @@
+"""Encoder-decoder (Whisper-style) assembly.
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings [B, encoder_seq, d_model] (what the two conv
+layers would emit). Everything downstream — bidirectional encoder, causal
+decoder with cross-attention — is implemented in full.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.transformer import cast_layer_params
+from repro.models.layers import (apply_mlp, apply_norm, embed_params,
+                                 embed_tokens, lm_logits, mlp_params,
+                                 norm_params, sinusoidal_embedding)
+from repro.parallel.mesh import shard
+
+
+def _enc_layer_params(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, 4)
+    return {
+        "norm1": norm_params(cfg, keys[0]),
+        "attn": attn.attn_params(cfg, keys[1]),
+        "norm2": norm_params(cfg, keys[2]),
+        "mlp": mlp_params(cfg, keys[3]),
+    }
+
+
+def _dec_layer_params(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, 6)
+    return {
+        "norm1": norm_params(cfg, keys[0]),
+        "attn": attn.attn_params(cfg, keys[1]),
+        "norm2": norm_params(cfg, keys[2]),
+        "xattn": attn.attn_params(cfg, keys[3], cross=True),
+        "norm3": norm_params(cfg, keys[4]),
+        "mlp": mlp_params(cfg, keys[5]),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    k_embed, k_enc, k_dec = jax.random.split(key, 3)
+    params = embed_params(cfg, k_embed)
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    params["encoder"] = {
+        "layers": jax.vmap(lambda k: _enc_layer_params(cfg, k))(enc_keys),
+        "final_norm": norm_params(cfg, jax.random.fold_in(k_enc, 1)),
+    }
+    params["layers"] = jax.vmap(lambda k: _dec_layer_params(cfg, k))(dec_keys)
+    params["final_norm"] = norm_params(cfg, jax.random.fold_in(k_dec, 1))
+    return params
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jnp.ndarray,
+           remat: bool = True) -> jnp.ndarray:
+    """frames: [B, Se, d] (precomputed conv-frontend embeddings, stub)."""
+    compute = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(compute)
+    x = x + sinusoidal_embedding(x.shape[1], cfg.d_model).astype(compute)[None]
+    x = shard(x, "batch")
+
+    def body(c, lp):
+        c = shard(c, "batch", "seq")
+        h = apply_norm(cfg, lp["norm1"], c)
+        c = c + attn.self_attention(cfg, lp["attn"], h,
+                                    positions=None, causal=False)
+        h = apply_norm(cfg, lp["norm2"], c)
+        return c + apply_mlp(cfg, lp["mlp"], h), None
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    x, _ = jax.lax.scan(fn, x,
+                        cast_layer_params(cfg, params["encoder"]["layers"]))
+    return apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+
+def _dec_block(cfg: ModelConfig, lp: dict, x, enc_k, enc_v, positions):
+    x = shard(x, "batch", "seq")
+    h = apply_norm(cfg, lp["norm1"], x)
+    x = x + attn.self_attention(cfg, lp["attn"], h, positions, causal=True)
+    h = apply_norm(cfg, lp["norm2"], x)
+    x = x + attn.cross_attention(cfg, lp["xattn"], h, enc_k, enc_v)
+    h = apply_norm(cfg, lp["norm3"], x)
+    return x + apply_mlp(cfg, lp["mlp"], h)
+
+
+def forward(cfg: ModelConfig, params: dict, frames: jnp.ndarray,
+            tokens: jnp.ndarray, remat: bool = True
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (logits [B,S,V] fp32, aux=0)."""
+    compute = jnp.dtype(cfg.compute_dtype)
+    enc_out = encode(cfg, params, frames, remat=remat)
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params, tokens, compute)
+    x = x + sinusoidal_embedding(s, cfg.d_model).astype(compute)[None]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(c, lp):
+        enc_k, enc_v = attn.encode_kv(cfg, lp["xattn"], enc_out)
+        return _dec_block(cfg, lp, c, enc_k, enc_v, positions), None
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    x, _ = jax.lax.scan(fn, x, cast_layer_params(cfg, params["layers"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    return lm_logits(cfg, params, x), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (decoder prompt + cross-KV precompute)
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params: dict, frames: jnp.ndarray,
+            tokens: jnp.ndarray, *, max_len: Optional[int] = None,
+            cache_dtype=None) -> Tuple[jnp.ndarray, dict]:
+    """Encoder pass + decoder prompt pass, emitting decode caches."""
+    compute = jnp.dtype(cfg.compute_dtype)
+    cache_dtype = cache_dtype or compute
+    enc_out = encode(cfg, params, frames, remat=False)
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = embed_tokens(cfg, params, tokens, compute)
+    x = x + sinusoidal_embedding(s, cfg.d_model).astype(compute)[None]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(c, lp):
+        h = apply_norm(cfg, lp["norm1"], c)
+        a_out, (k, v) = attn.self_attention(cfg, lp["attn"], h, positions,
+                                            causal=True, return_kv=True)
+        kv = attn.cache_from_prefill(cfg, k, v, max_len, cache_dtype)
+        c = c + a_out
+        h = apply_norm(cfg, lp["norm2"], c)
+        ck, cv = attn.encode_kv(cfg, lp["xattn"], enc_out)
+        c = c + attn.cross_attention(cfg, lp["xattn"], h, ck, cv)
+        h = apply_norm(cfg, lp["norm3"], c)
+        c = c + apply_mlp(cfg, lp["mlp"], h)
+        return c, {"kv": kv, "cross_k": ck.astype(cache_dtype),
+                   "cross_v": cv.astype(cache_dtype)}
+
+    x, caches = jax.lax.scan(body, x,
+                             cast_layer_params(cfg, params["layers"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, params: dict, frames: jnp.ndarray,
+                max_len: int, dtype) -> dict:
+    """Self-attn ring caches + cross K/V precomputed once from the encoder."""
+    b = frames.shape[0]
+    enc_out = encode(cfg, params, frames, remat=False)
+
+    def per_layer(lp):
+        k, v = attn.encode_kv(cfg, lp["xattn"], enc_out)
+        return {"cross_k": k.astype(dtype), "cross_v": v.astype(dtype)}
+
+    cross = jax.vmap(lambda lp: per_layer(lp))(params["layers"])
+
+    def self_cache(_):
+        return {"kv": attn.init_kv_cache(cfg, b, max_len, dtype)}
+
+    selfc = jax.vmap(self_cache)(jnp.arange(cfg.num_layers))
+    return {"kv": selfc["kv"], "cross_k": cross["cross_k"],
+            "cross_v": cross["cross_v"]}
+
+
+def decode(cfg: ModelConfig, params: dict, caches: dict, token: jnp.ndarray,
+           pos: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
+    compute = jnp.dtype(cfg.compute_dtype)
+    x = embed_tokens(cfg, params, token, compute)
+    pos_emb = sinusoidal_embedding(int(caches["kv"]["k"].shape[2]) + 1,
+                                   cfg.d_model).astype(compute)
+    x = x + jnp.take(pos_emb, jnp.minimum(pos, pos_emb.shape[0] - 1),
+                     axis=0)[:, None]
+
+    def scan_fn(carry, layer_in):
+        lp, lc = layer_in
+        h = apply_norm(cfg, lp["norm1"], carry)
+        a_out, new_kv = attn.decode_attention(cfg, lp["attn"], h,
+                                              lc["kv"], pos)
+        c = carry + a_out
+        h = apply_norm(cfg, lp["norm2"], c)
+        c = c + attn.cross_attention(cfg, lp["xattn"], h,
+                                     lc["cross_k"], lc["cross_v"])
+        h = apply_norm(cfg, lp["norm3"], c)
+        c = c + apply_mlp(cfg, lp["mlp"], h)
+        return c, {"kv": new_kv, "cross_k": lc["cross_k"],
+                   "cross_v": lc["cross_v"]}
+
+    x, new_caches = jax.lax.scan(
+        scan_fn, x, (cast_layer_params(cfg, params["layers"]), caches))
+    x = apply_norm(cfg, params["final_norm"], x)
+    return lm_logits(cfg, params, x), new_caches

@@ -1,0 +1,93 @@
+"""Uniform model API over all assigned architectures.
+
+``build(cfg)`` returns a :class:`Model` exposing:
+  init(key) -> params
+  forward(params, batch, remat=True) -> (logits [B,S,V] fp32, moe_aux)
+  init_decode_state(params, batch_hint, max_len) -> caches
+  decode(params, caches, token, pos) -> (logits, caches)
+
+Batch formats (all int32 tokens):
+  lm families:  {"tokens": [B,S], "labels": [B,S]}
+  vlm:          + {"patches": [B,P,d]}   (SigLIP stub — precomputed)
+  audio:        + {"frames": [B,Se,d]}   (conv frontend stub — precomputed)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable            # (params, batch, remat=True) -> (logits, aux)
+    prefill: Callable            # (params, batch, max_len) -> (last logits, caches)
+    init_decode_state: Callable  # (params, batch, max_len, dtype) -> caches
+    decode: Callable             # (params, caches, token, pos) -> (logits, caches)
+
+
+def _lm_forward(cfg: ModelConfig):
+    def fwd(params, batch, remat: bool = True):
+        prefix = batch.get("patches") if cfg.family == "vlm" else None
+        logits, aux = transformer.forward(cfg, params, batch["tokens"],
+                                          prefix_embeds=prefix, remat=remat)
+        if prefix is not None:
+            logits = logits[:, prefix.shape[1]:]  # text positions only
+        return logits, aux
+    return fwd
+
+
+def _audio_forward(cfg: ModelConfig):
+    def fwd(params, batch, remat: bool = True):
+        return encdec.forward(cfg, params, batch["frames"], batch["tokens"],
+                              remat=remat)
+    return fwd
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.is_encoder_decoder:
+        def init_state(params, batch, max_len, dtype):
+            return encdec.init_caches(cfg, params, batch["frames"], max_len,
+                                      dtype)
+
+        def prefill_fn(params, batch, max_len=None, cache_dtype=None):
+            return encdec.prefill(cfg, params, batch["frames"],
+                                  batch["tokens"], max_len=max_len,
+                                  cache_dtype=cache_dtype)
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            forward=_audio_forward(cfg),
+            prefill=prefill_fn,
+            init_decode_state=init_state,
+            decode=lambda params, caches, token, pos: encdec.decode(
+                cfg, params, caches, token, pos),
+        )
+
+    def init_state(params, batch, max_len, dtype):
+        b = batch["tokens"].shape[0]
+        return transformer.init_caches(cfg, b, max_len, dtype)
+
+    def prefill_fn(params, batch, max_len=None, cache_dtype=None):
+        prefix = batch.get("patches") if cfg.family == "vlm" else None
+        return transformer.prefill(cfg, params, batch["tokens"],
+                                   prefix_embeds=prefix, max_len=max_len,
+                                   cache_dtype=cache_dtype)
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        forward=_lm_forward(cfg),
+        prefill=prefill_fn,
+        init_decode_state=init_state,
+        decode=lambda params, caches, token, pos: transformer.decode(
+            cfg, params, caches, token, pos),
+    )

@@ -1,0 +1,113 @@
+"""Mixture-of-experts FFN with grouped, capacity-bounded dense dispatch.
+
+GShard/Switch-style routing: tokens are split into groups (sharded over the
+data axes), routed top-k within each group, and dispatched to experts through
+one-hot capacity tensors. Expert FFN weights are batched GEMMs — when the
+expert count divides the model axis (llama4-scout: 16e on a 16-way axis) the
+expert dim is sharded (true EP, all-to-all dispatch); otherwise (mixtral: 8e)
+the inner FFN dim is TP-sharded within every expert.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_param
+from repro.parallel.mesh import shard
+
+GROUP_SIZE = 2048  # routing group (tokens); bounds the dispatch tensor
+
+
+def moe_params(cfg: ModelConfig, key) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    init = jax.nn.initializers.normal(stddev=0.02)
+    # Separate gate/up expert projections (see layers.mlp_params rationale).
+    return {
+        "router": dense_param(k1, d, e),
+        "wg": init(k2, (e, d, f), jnp.float32),
+        "wu": init(k4, (e, d, f), jnp.float32),
+        "wo": init(k3, (e, f, d), jnp.float32),
+    }
+
+
+def _capacity(group: int, cfg: ModelConfig) -> int:
+    c = int(group * cfg.num_experts_per_tok * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # pad to a sublane multiple
+
+
+def route(cfg: ModelConfig, router_w, x_grp) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x_grp: [G, g, d] -> dispatch [G,g,E,C] (bool-ish), combine [G,g,E,C], aux.
+
+    Position-in-expert comes from a cumulative sum over the group (tokens past
+    capacity are dropped — standard GShard semantics).
+    """
+    g_tokens = x_grp.shape[1]
+    e = cfg.num_experts
+    k = cfg.num_experts_per_tok
+    cap = _capacity(g_tokens, cfg)
+
+    logits = jnp.einsum("gtd,de->gte", x_grp.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    weights, experts = jax.lax.top_k(logits, k)             # [G,g,k]
+    weights = jax.nn.softmax(weights, axis=-1)              # mixtral-style renorm
+
+    onehot = jax.nn.one_hot(experts, e, dtype=jnp.int32)    # [G,g,k,E]
+    # Position of each (token, choice) in its expert queue: cumulative count
+    # in (token, choice) priority order.
+    flat = onehot.reshape(x_grp.shape[0], g_tokens * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                   # [G, g*k, E]
+    pos = pos.reshape(x_grp.shape[0], g_tokens, k, e)
+    keep = (pos < cap) * onehot                             # drop overflow
+    # A token picks an expert at most once, so the k axis can be folded away
+    # BEFORE forming the capacity one-hot — keeps dispatch tensors 4-D.
+    pos_e = (pos * keep).sum(axis=2)                        # [G,g,E]
+    chosen = keep.sum(axis=2)                               # [G,g,E] in {0,1}
+    gate_e = (weights[..., None] * keep).sum(axis=2)        # [G,g,E]
+    dispatch = (chosen[..., None]
+                * jax.nn.one_hot(pos_e, cap, dtype=jnp.int32))  # [G,g,E,C]
+    combine = gate_e[..., None] * dispatch                  # [G,g,E,C]
+    # load-balancing auxiliary loss (Switch): E * mean(frac_tokens * frac_prob)
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tokens = jnp.mean(onehot.sum(2).astype(jnp.float32), axis=1)  # [G,E]
+    frac_probs = jnp.mean(probs, axis=1)                    # [G, E]
+    aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    return dispatch, combine, aux
+
+
+def apply_moe(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,S,d] -> ([B,S,d], aux_loss)."""
+    b, s, d = x.shape
+    tokens = b * s
+    g = min(GROUP_SIZE, tokens)
+    assert tokens % g == 0, (tokens, g)
+    n_groups = tokens // g
+    x_grp = x.reshape(n_groups, g, d)
+    x_grp = shard(x_grp, "batch")
+
+    dispatch, combine, aux = route(cfg, p["router"], x_grp)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, x_grp)
+    expert_in = shard(expert_in, "batch", "model")  # EP when E divides axis
+    gate = jnp.einsum("gecd,edf->gecf", expert_in, p["wg"].astype(x.dtype))
+    up = jnp.einsum("gecd,edf->gecf", expert_in, p["wu"].astype(x.dtype))
+    h = jax.nn.silu(gate) * up
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+    # NOTE: no sharding constraint on expert_out — pinning it would force the
+    # TP partial-sum all-reduce onto the capacity tensor [G,E,C,d], which is
+    # k*capacity_factor (2.5x) larger than the token tensor the combine
+    # einsum produces; leaving it free lets the partitioner defer the
+    # reduction to [G,t,d] (§Perf H6).
+    out = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
+    out = out.reshape(b, s, d)
+    # reduce-scatter the TP/EP-partial combine into the seq-sharded stream;
+    # saved under remat so backward skips the collective (§Perf H4)
+    out = checkpoint_name(shard(out, "batch", "seq"), "mixer_out")
+    return out, aux.astype(jnp.float32)

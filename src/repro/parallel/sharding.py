@@ -1,0 +1,137 @@
+"""Parameter/activation sharding rules for the (pod, data, model) mesh.
+
+Policy (see DESIGN.md §4):
+  * FSDP: every weight's d_model-like dim shards over "data" (ZeRO-3 style;
+    optimizer state inherits the same spec).
+  * TP:   heads / FFN inner / expert dims shard over "model"; attention TP is
+    disabled per-arch when head counts don't divide the axis
+    (cfg.shard_attention).
+  * EP:   MoE expert dim shards over "model" when divisible (llama4 16e),
+    otherwise TP shards the expert FFN inner dim (mixtral 8e).
+  * "pod" never shards parameters — pure DP across pods (grads all-reduce
+    across the pod axis once per step).
+
+Divisibility fallbacks are automatic (``logical_spec`` replicates any dim the
+mesh can't divide), so one rule set serves every architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
+
+from repro.configs.base import ModelConfig
+from repro.parallel.mesh import logical_spec, use_mesh
+
+
+def _path_names(path) -> list:
+    return [p.key if isinstance(p, DictKey) else str(p) for p in path]
+
+
+def logical_axes_for(cfg: ModelConfig, path, ndim: int) -> tuple:
+    """Logical axis names for one parameter leaf, by tree path."""
+    names = _path_names(path)
+    leaf = names[-1]
+    attn_tp = "model" if cfg.shard_attention else None
+    in_layer = "layers" in names
+
+    def stacked(*axes):  # stacked layer params carry a leading L dim
+        return ((None,) + axes) if in_layer else axes
+
+    if leaf == "table":            # embed / lm head [V, d]
+        return ("model", "fsdp")
+    if "attn" in names or "xattn" in names:
+        if leaf in ("wq", "wk", "wv"):
+            return stacked("fsdp", attn_tp)
+        if leaf == "wo":
+            return stacked(attn_tp, "fsdp")
+        return stacked(*(None,) * (ndim - (1 if in_layer else 0)))
+    if "moe" in names:
+        if leaf == "router":
+            return stacked("fsdp", None)
+        if leaf in ("wi", "wg", "wu"):   # [L, E, d, f]
+            return stacked("model", "fsdp", None)   # EP layout (default)
+        if leaf == "wo":                 # [L, E, f, d]
+            return stacked("model", None, "fsdp")
+    if "mlp" in names:
+        if leaf in ("wi", "wg", "wu"):
+            return stacked("fsdp", "model")
+        if leaf == "wo":
+            return stacked("model", "fsdp")
+        return stacked(*(None,) * (ndim - (1 if in_layer else 0)))
+    if "ssm" in names:
+        if leaf == "in_proj":
+            return stacked("fsdp", None)
+        if leaf == "out_proj":
+            return stacked("model", "fsdp")
+        return stacked(*(None,) * (ndim - (1 if in_layer else 0)))
+    # norms, biases, scalars: replicated
+    return (None,) * ndim
+
+
+def _ep_effective(cfg: ModelConfig, mesh: Mesh) -> bool:
+    if cfg.num_experts <= 0 or "model" not in mesh.axis_names:
+        return False
+    return cfg.num_experts % mesh.shape["model"] == 0
+
+
+def param_specs(cfg: ModelConfig, params_tree: Any, mesh: Mesh):
+    """PartitionSpec tree matching ``params_tree`` (shapes or arrays)."""
+    ep = _ep_effective(cfg, mesh)
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        axes = logical_axes_for(cfg, path, len(shape))
+        if not ep:
+            # fall back from EP to TP rules for the MoE weights
+            names = _path_names(path)
+            if "moe" in names and names[-1] in ("wi", "wg", "wu"):
+                axes = (None, None, "fsdp", "model")
+            if "moe" in names and names[-1] == "wo":
+                axes = (None, None, "model", "fsdp")
+        return logical_spec(shape, axes, mesh)
+
+    with use_mesh(mesh):
+        return tree_map_with_path(spec_for, params_tree)
+
+
+def named_shardings(cfg: ModelConfig, params_tree: Any, mesh: Mesh):
+    specs = param_specs(cfg, params_tree, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_tree: Any, mesh: Mesh):
+    """Shard every batch leaf's leading (batch) dim over (pod, data)."""
+    def spec_for(leaf):
+        axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return logical_spec(leaf.shape, axes, mesh)
+
+    with use_mesh(mesh):
+        return jax.tree.map(spec_for, batch_tree)
+
+
+def cache_specs(cfg: ModelConfig, cache_tree: Any, mesh: Mesh):
+    """KV/SSM cache sharding: batch over (pod,data); KV seq over model (SP);
+    falls back automatically when dims don't divide."""
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        if names[-1] in ("k", "v", "cross_k", "cross_v"):
+            axes = (None, "batch", "kv_seq", None, None)[:len(shape)]
+            if len(shape) == 4:  # unstacked [B,S,H,D]
+                axes = ("batch", "kv_seq", None, None)
+        elif names[-1] == "state":   # [L,B,H,P,N] or [B,H,P,N]
+            lead = len(shape) - 4
+            axes = (None,) * lead + ("batch", None, None, None)
+        elif names[-1] == "conv":
+            lead = len(shape) - 3
+            axes = (None,) * lead + ("batch", None, None)
+        else:
+            axes = (None,) * len(shape)
+        return logical_spec(shape, axes, mesh)
+
+    with use_mesh(mesh):
+        return tree_map_with_path(spec_for, cache_tree)

@@ -1,0 +1,53 @@
+"""TPU v5e hardware model (the TARGET; this container only hosts the dry-run).
+
+Sources: assignment-specified constants (197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI) plus public TPU v5e documentation. Everything here is a
+parameter — the planner reads these the way the paper's macro algorithm reads
+LLVM's cache-size tables, and both expose overrides (the paper's
+"command line options to provide the effective cache sizes").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuTarget:
+    name: str = "tpu-v5e"
+
+    # Compute.
+    peak_bf16_flops: float = 197e12      # per chip, bf16 on the MXU
+    peak_f32_flops: float = 197e12 / 4   # f32 passes cost ~4x on the MXU
+    peak_int8_ops: float = 394e12        # 2x bf16
+    peak_vpu_flops: float = 197e12 / 32  # VPU-only (the "VSX lowering" ceiling)
+
+    # Memory.
+    hbm_bytes: int = 16 * 1024**3        # 16 GiB
+    hbm_bw: float = 819e9                # bytes/s
+    vmem_bytes: int = 64 * 1024**2       # usable VMEM budget for the planner
+    vmem_bw: float = 11.4e12             # ~VREG-side bandwidth (approx)
+
+    # Interconnect.
+    ici_link_bw: float = 50e9            # bytes/s per link (assignment constant)
+    ici_links_per_chip: int = 4          # 2D torus on v5e
+
+    # MXU geometry.
+    mxu_dim: int = 128                   # 128x128 systolic array
+    lane: int = 128                      # vector lane count (last-dim tile)
+    sublane_bytes: int = 32              # second-minor tile = 32 bytes / lane
+
+    def sublane(self, itemsize: int) -> int:
+        """Second-minor tiling multiple for a dtype (8 f32 / 16 bf16 / 32 i8)."""
+        return max(self.sublane_bytes // itemsize, 1)
+
+
+V5E = TpuTarget()
+
+
+def peak_flops(dtype: str, target: TpuTarget = V5E) -> float:
+    return {
+        "bfloat16": target.peak_bf16_flops,
+        "float16": target.peak_bf16_flops,
+        "float32": target.peak_f32_flops,
+        "int8": target.peak_int8_ops,
+    }.get(str(dtype), target.peak_bf16_flops)

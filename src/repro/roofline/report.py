@@ -1,0 +1,91 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+
+def load(results_dir: str = RESULTS, tag: Optional[str] = None) -> List[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(f) as fh:
+            d = json.load(fh)
+        if (d.get("tag") or "") != (tag or ""):
+            continue
+        rows.append(d)
+    return rows
+
+
+def _fmt_bytes(n) -> str:
+    if n is None:
+        return "-"
+    return f"{n/2**30:.2f}"
+
+
+def dryrun_table(rows: List[dict]) -> str:
+    out = ["| arch | shape | mesh | chips | status | compile s | args GiB | "
+           "temp GiB | peak GiB (raw) | peak GiB (TPU est.) | fits 16G |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d["status"] != "ok":
+            out.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | - | "
+                       f"FAILED: {d.get('error','')[:60]} | | | | | | |")
+            continue
+        m = d["memory"]
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {d['chips']} | ok "
+            f"| {d.get('compile_s', 0):.0f} | {_fmt_bytes(m['argument_bytes'])} "
+            f"| {_fmt_bytes(m['temp_bytes'])} "
+            f"| {_fmt_bytes(m['peak_per_device'])} "
+            f"| {_fmt_bytes(m.get('peak_per_device_tpu_estimate'))} "
+            f"| {'yes' if d.get('fits_hbm') else 'NO'} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: List[dict], mesh: str = "single") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s (raw / "
+           "bf16-adj) | bottleneck | MODEL_FLOPS | useful ratio "
+           "| roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d["status"] != "ok" or d["mesh"] != mesh:
+            continue
+        r = d["roofline"]
+        coll_adj = r.get("collective_s_tpu", r["collective_s"])
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} / "
+            f"{coll_adj:.4f} "
+            f"| **{r['bottleneck']}** | {r['model_flops']:.3e} "
+            f"| {r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def bottleneck_summary(rows: List[dict], mesh: str = "single") -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for d in rows:
+        if d["status"] == "ok" and d["mesh"] == mesh:
+            b = d["roofline"]["bottleneck"]
+            counts[b] = counts.get(b, 0) + 1
+    return counts
+
+
+def worst_cells(rows: List[dict], mesh: str = "single", k: int = 5):
+    ok = [d for d in rows if d["status"] == "ok" and d["mesh"] == mesh]
+    by_frac = sorted(ok, key=lambda d: d["roofline"]["roofline_fraction"])
+    by_coll = sorted(ok, key=lambda d: -d["roofline"]["collective_s"])
+    return by_frac[:k], by_coll[:k]
+
+
+if __name__ == "__main__":
+    rows = load()
+    print(dryrun_table(rows))
+    print()
+    print(roofline_table(rows))
+    print()
+    print("bottlenecks:", bottleneck_summary(rows))

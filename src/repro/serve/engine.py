@@ -1,0 +1,68 @@
+"""Batched serving engine: jit'd prefill + greedy/sampled decode loop.
+
+Production posture:
+  * prefill and decode are separate jit'd programs (the two dry-run shapes);
+  * KV caches live on device across steps; the host loop only moves tokens;
+  * requests are served in fixed-size batches with left-padded prompts
+    (continuous batching's static-batch ancestor — slot recycling is a
+    documented extension point);
+  * LM-head weights can be served pre-packed (``PackedWeight``) — load-time
+    packing amortized over every decode step (see core/layered.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 512
+    temperature: float = 0.0      # 0 => greedy
+    cache_dtype: str = "float32"
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(
+            lambda p, batch: model.prefill(
+                p, batch, max_len=cfg.max_len,
+                cache_dtype=jnp.dtype(cfg.cache_dtype)))
+        self._decode = jax.jit(model.decode)
+
+    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, batch: dict, max_new_tokens: int,
+                 prompt_len: Optional[int] = None) -> np.ndarray:
+        """batch: model-format prompt batch; returns [B, max_new_tokens]."""
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        prompt_len = prompt_len or t
+        prefix = (self.model.cfg.num_patches
+                  if self.model.cfg.family == "vlm" else 0)
+        last_logits, caches = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        out = []
+        tok = self._sample(last_logits, key)[:, None]
+        for i in range(max_new_tokens):
+            out.append(np.asarray(tok))
+            pos = jnp.full((b,), prefix + prompt_len + i, jnp.int32)
+            logits, caches = self._decode(self.params, caches, tok, pos)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits[:, 0], sub)[:, None]
+        return np.concatenate(out, axis=1)

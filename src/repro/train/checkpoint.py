@@ -1,0 +1,143 @@
+"""Fault-tolerant checkpointing: atomic writes, manifest integrity hashes,
+latest-valid discovery, mesh-agnostic restore (resharding at load).
+
+Layout per step:
+  <dir>/step_<N>.npz          flat path-keyed arrays (params + opt state + extra)
+  <dir>/step_<N>.json         manifest: step, leaf index, sha256 of the npz
+
+Writes go to ``*.tmp`` then ``os.replace`` — a crash mid-save can never
+corrupt the latest checkpoint. ``restore`` verifies the hash and falls back to
+the previous step if verification fails (torn-write tolerance). Restores
+accept target shardings, so a run may resume on a different mesh (elastic
+rescale) — arrays are re-placed with ``jax.device_put``.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.tree_util import DictKey, SequenceKey, tree_flatten_with_path
+
+_STEP_RE = re.compile(r"step_(\d+)\.json$")
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _flatten(tree: Any) -> dict:
+    leaves, _ = tree_flatten_with_path(tree)
+    return {_leaf_name(path): np.asarray(jax.device_get(leaf))
+            for path, leaf in leaves}
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def save(ckpt_dir: str, step: int, state: Any) -> str:
+    """Atomically persist a pytree ``state`` for ``step``."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(state)
+    npz_path = os.path.join(ckpt_dir, f"step_{step}.npz")
+    man_path = os.path.join(ckpt_dir, f"step_{step}.json")
+    tmp = npz_path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, npz_path)
+    manifest = {"step": step, "leaves": sorted(flat),
+                "sha256": _sha256(npz_path)}
+    tmp = man_path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, man_path)
+    return npz_path
+
+
+def available_steps(ckpt_dir: str) -> list:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m:
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def _verify(ckpt_dir: str, step: int) -> bool:
+    man_path = os.path.join(ckpt_dir, f"step_{step}.json")
+    npz_path = os.path.join(ckpt_dir, f"step_{step}.npz")
+    try:
+        with open(man_path) as f:
+            manifest = json.load(f)
+        return manifest["sha256"] == _sha256(npz_path)
+    except (OSError, KeyError, json.JSONDecodeError):
+        return False
+
+
+def latest_valid_step(ckpt_dir: str) -> Optional[int]:
+    for step in reversed(available_steps(ckpt_dir)):
+        if _verify(ckpt_dir, step):
+            return step
+    return None
+
+
+def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` (shapes/dtypes validated).
+
+    ``shardings``: optional tree congruent with template — enables restoring
+    onto a different mesh than the one that saved (elastic restart).
+    """
+    if step is None:
+        step = latest_valid_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint in {ckpt_dir}")
+    if not _verify(ckpt_dir, step):
+        raise IOError(f"checkpoint step {step} failed integrity check")
+    data = np.load(os.path.join(ckpt_dir, f"step_{step}.npz"))
+
+    leaves, treedef = tree_flatten_with_path(template)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    out = []
+    for (path, leaf), sh in zip(leaves, shard_leaves):
+        name = _leaf_name(path)
+        if name not in data:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = data[name]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{name}: shape {arr.shape} != {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out), step
+
+
+def cleanup(ckpt_dir: str, keep_last: int = 3) -> None:
+    steps = [s for s in available_steps(ckpt_dir) if _verify(ckpt_dir, s)]
+    for step in steps[:-keep_last]:
+        for suffix in (".npz", ".json"):
+            try:
+                os.remove(os.path.join(ckpt_dir, f"step_{step}{suffix}"))
+            except OSError:
+                pass

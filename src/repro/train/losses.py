@@ -1,0 +1,41 @@
+"""Losses: next-token cross entropy (vocab-sharding-friendly) + MoE aux."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+MOE_AUX_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-4
+
+
+def next_token_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                    mask: jnp.ndarray | None = None
+                    ) -> Tuple[jnp.ndarray, dict]:
+    """logits: [B,S,V] fp32; labels: [B,S] (already shifted by the pipeline).
+
+    Cross entropy via logsumexp (reduces cleanly over a vocab-sharded axis)
+    plus a small z-loss for logit drift control (production standard).
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1)                   # [B,S]
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]               # [B,S]
+    xent = lse - gold
+    zloss = Z_LOSS_WEIGHT * jnp.square(lse)
+    per_tok = xent + zloss
+    if mask is None:
+        mask = jnp.ones_like(xent)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (per_tok * mask).sum() / denom
+    acc = ((jnp.argmax(logits, -1) == labels) * mask).sum() / denom
+    return loss, {"xent": (xent * mask).sum() / denom, "accuracy": acc}
+
+
+def train_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+               moe_aux: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
+    loss, metrics = next_token_xent(logits, labels)
+    total = loss + MOE_AUX_WEIGHT * moe_aux
+    metrics = dict(metrics, loss=total, moe_aux=moe_aux)
+    return total, metrics

@@ -1,0 +1,76 @@
+"""Strategy registry: every lowering of the same GEMM agrees with the oracle
+(paper §4.1.3's six-way comparison, as a correctness property)."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LayeredGemm, PackedWeight, STRATEGIES, linear, matmul,
+                        plan_gemm, run_strategy)
+from repro.core.gemm import resolve_strategy
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_all_strategies_match_oracle(rng, strategy, backend):
+    a = jnp.asarray(rng.normal(size=(96, 160)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(160, 224)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(96, 224)), jnp.float32)
+    got = run_strategy(strategy, a, b, c, alpha=1.5, beta=0.5, backend=backend)
+    want = ref.gemm_ref(a, b, c, 1.5, 0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64),
+       strategy=st.sampled_from(["tiling", "tiling_packing", "intrinsic"]))
+def test_property_strategy_equivalence(m, k, n, strategy):
+    r = np.random.default_rng(m * 131 + k * 17 + n)
+    a = jnp.asarray(r.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(r.normal(size=(k, n)), jnp.float32)
+    got = run_strategy(strategy, a, b, backend="jnp")
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_env_override(rng, monkeypatch):
+    monkeypatch.setenv("REPRO_GEMM_STRATEGY", "tiling")
+    assert resolve_strategy(32, 32, 32, jnp.float32, "auto") == "tiling"
+    monkeypatch.delenv("REPRO_GEMM_STRATEGY")
+    assert resolve_strategy(32, 32, 32, jnp.float32, "auto") == "xla"
+
+
+def test_linear_batched(rng):
+    x = jnp.asarray(rng.normal(size=(4, 7, 160)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(160, 96)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(96,)), jnp.float32)
+    y = linear(x, w, bias)
+    want = np.asarray(x).reshape(-1, 160) @ np.asarray(w) + np.asarray(bias)
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, 96), want,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_packed_weight_amortized_serving(rng):
+    w = jnp.asarray(rng.normal(size=(160, 96)), jnp.float32)
+    pw = PackedWeight.pack(w)
+    x = jnp.asarray(rng.normal(size=(24, 160)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(pw.matmul(x)),
+                               np.asarray(ref.matmul_ref(x, w)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_layered_gemm_module(rng):
+    lg = LayeredGemm(96, 160, 224, epilogue="relu")
+    a = jnp.asarray(rng.normal(size=(96, 160)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(160, 224)), jnp.float32)
+    got = lg(a, b)
+    want = np.maximum(np.asarray(ref.matmul_ref(a, b)), 0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+    # paper heuristic: small problems choose Tiling (no packing)
+    assert lg.strategy == "tiling"
+    assert LayeredGemm(4096, 4096, 4096).strategy == "tiling_packing"

@@ -1,0 +1,122 @@
+"""Serving-path equivalence: incremental decode must reproduce the parallel
+forward pass exactly, through every cache type (KV ring, SWA, SSM, cross)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import build
+from repro.models.ssm import ssd_chunked
+
+# paligemma is NOT in the decode-from-empty list: a VLM's patch prefix only
+# enters the cache via prefill (covered below in prefill_then_decode).
+ARCHS = ["qwen3-4b", "command-r-plus-104b", "mixtral-8x22b", "mamba2-130m",
+         "hymba-1.5b", "whisper-base", "olmo-1b"]
+
+
+def _setup(arch, rng, window=None):
+    cfg = reduced_config(arch)
+    cfg = dataclasses.replace(
+        cfg, compute_dtype="float32",
+        capacity_factor=16.0,  # no MoE drops => exact equivalence
+        sliding_window=window if cfg.sliding_window else None)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 12
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    prefix = 0
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_patches, cfg.d_model)), jnp.float32)
+        prefix = cfg.num_patches
+    return cfg, model, params, batch, prefix
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(rng, arch):
+    cfg, model, params, batch, prefix = _setup(arch, rng, window=8)
+    B, S = batch["tokens"].shape
+    full, _ = model.forward(params, batch, remat=False)
+    caches = model.init_decode_state(params, batch, max_len=S + prefix,
+                                     dtype=jnp.float32)
+    for t in range(S):
+        logits, caches = model.decode(params, caches,
+                                      batch["tokens"][:, t:t + 1],
+                                      jnp.full((B,), prefix + t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "mixtral-8x22b", "mamba2-130m",
+                                  "hymba-1.5b", "whisper-base",
+                                  "paligemma-3b"])
+def test_prefill_then_decode_matches_forward(rng, arch):
+    cfg, model, params, batch, prefix = _setup(arch, rng, window=8)
+    B, S = batch["tokens"].shape
+    T = 6
+    full, _ = model.forward(params, batch, remat=False)
+    pb = {**batch, "tokens": batch["tokens"][:, :T]}
+    last, caches = model.prefill(params, pb, max_len=S + prefix,
+                                 cache_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, T - 1]),
+                               rtol=2e-4, atol=2e-4)
+    for t in range(T, S):
+        logits, caches = model.decode(params, caches,
+                                      batch["tokens"][:, t:t + 1],
+                                      jnp.full((B,), prefix + t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_swa_ring_cache_evicts_old_positions(rng):
+    """With window W, positions older than W must not influence decode."""
+    cfg, model, params, batch, _ = _setup("mixtral-8x22b", rng, window=4)
+    B, S = batch["tokens"].shape
+    caches = model.init_decode_state(params, batch, max_len=S,
+                                     dtype=jnp.float32)
+    assert caches["kv"]["k"].shape[2] == 4  # ring slots bounded by window
+
+
+def test_ssd_chunked_equals_sequential_recurrence(rng):
+    B, L, H, P, N = 2, 37, 3, 4, 5
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, L, H)), jnp.float32)
+    a_log = jnp.asarray(rng.normal(size=(H,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    y, fs = ssd_chunked(x, dt, a_log, b, c, chunk=8)
+    state = np.zeros((B, H, P, N), np.float32)
+    da = np.asarray(dt) * (-np.exp(np.asarray(a_log)))[None, None, :]
+    for t in range(L):
+        state = (state * np.exp(da[:, t])[:, :, None, None]
+                 + np.einsum("bhp,bn,bh->bhpn", np.asarray(x)[:, t],
+                             np.asarray(b)[:, t], np.asarray(dt)[:, t]))
+        yt = np.einsum("bhpn,bn->bhp", state, np.asarray(c)[:, t])
+        np.testing.assert_allclose(np.asarray(y)[:, t], yt, rtol=2e-4,
+                                   atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fs), state, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunk_size_invariance(rng):
+    B, L, H, P, N = 1, 48, 2, 4, 8
+    x = jnp.asarray(rng.normal(size=(B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, L, H)), jnp.float32)
+    a_log = jnp.asarray(rng.normal(size=(H,)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    y8, _ = ssd_chunked(x, dt, a_log, b, c, chunk=8)
+    y16, _ = ssd_chunked(x, dt, a_log, b, c, chunk=16)
+    y48, _ = ssd_chunked(x, dt, a_log, b, c, chunk=48)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y16), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y48), rtol=2e-4,
+                               atol=2e-4)

@@ -1,0 +1,75 @@
+"""Fused GEMM epilogues (beyond-paper) + narrow int4 path (paper Table 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dtypes as mdt
+from repro.core.epilogue import EPILOGUES, apply_epilogue
+from repro.kernels import ref
+from repro.kernels.gemm_tiled import gemm_tiled
+
+
+@pytest.mark.parametrize("epilogue", ["relu", "gelu", "silu", "tanh"])
+def test_fused_epilogue_kernel(rng, epilogue):
+    a = jnp.asarray(rng.normal(size=(64, 96)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(96, 64)), jnp.float32)
+    got = gemm_tiled(a, b, bm=32, bk=32, bn=32, epilogue=epilogue)
+    want = apply_epilogue(epilogue, ref.matmul_ref(a, b, jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_epilogue_applied_after_beta(rng):
+    a = jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(32, 32)), jnp.float32)
+    got = gemm_tiled(a, b, c, alpha=1.0, beta=1.0, bm=32, bk=32, bn=32,
+                     epilogue="relu")
+    want = np.maximum(np.asarray(ref.gemm_ref(a, b, c, 1.0, 1.0)), 0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-4, atol=5e-4)
+
+
+def test_epilogue_registry_matches_kernel_table():
+    from repro.kernels.gemm_tiled import _EPILOGUES
+    assert set(_EPILOGUES) == set(EPILOGUES)
+
+
+def test_int4_rank8_via_int8_path(rng):
+    """Paper Table 1: i4 computes rank-8 updates; our lowering widens i4->i8
+    (Table note: 'unpacked to i8') and accumulates in i32 exactly."""
+    info = mdt.info("int4")
+    assert info.rank == 8 and info.acc_dtype == "int32" and not info.native
+    a4 = jnp.asarray(rng.integers(-8, 8, (32, 64)), jnp.int4)
+    b4 = jnp.asarray(rng.integers(-8, 8, (64, 48)), jnp.int4)
+    got = gemm_tiled(a4.astype(jnp.int8), b4.astype(jnp.int8),
+                     bm=32, bk=32, bn=48, out_dtype=jnp.int32)
+    want = (np.asarray(a4, np.int32) @ np.asarray(b4, np.int32))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_int8_serving_weights_cast_in_layer_scan(rng):
+    """int8-quantized serving weights widen to the compute dtype at use
+    (§Perf H9); the forward pass must run and produce finite logits."""
+    import dataclasses
+    import jax
+    from repro.configs import reduced_config
+    from repro.models import build
+    from repro.models.transformer import cast_layer_params
+
+    cfg = dataclasses.replace(reduced_config("olmo-1b"),
+                              compute_dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # quantize matrix weights to int8 (structure-only stand-in)
+    q = jax.tree.map(
+        lambda w: (w * 127).astype(jnp.int8) if w.ndim >= 2 else w,
+        params["layers"])
+    casted = cast_layer_params(cfg, q)
+    dtypes = {x.dtype for x in jax.tree.leaves(casted) if x.ndim >= 2}
+    assert jnp.int8 not in dtypes  # all widened for compute
+    params_q = dict(params, layers=q)
+    logits, _ = model.forward(params_q, {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)),
+                              jnp.int32)})
+    assert bool(jnp.isfinite(logits).all())

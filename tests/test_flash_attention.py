@@ -1,0 +1,55 @@
+"""Flash-attention kernel vs the jnp oracle: causal / window / GQA / decode."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+
+CASES = [
+    # (B, Sq, Skv, H, Hkv, D, causal, window)
+    (2, 128, 128, 4, 2, 32, True, None),
+    (1, 100, 100, 4, 4, 16, True, None),
+    (2, 64, 64, 4, 1, 32, True, 24),        # MQA + sliding window
+    (1, 1, 96, 4, 2, 16, True, None),       # decode: one right-aligned query
+    (2, 48, 48, 2, 2, 16, False, None),     # bidirectional (encoder)
+    (1, 37, 111, 3, 1, 8, True, None),      # ragged + cross-ish lengths
+]
+
+
+@pytest.mark.parametrize("b,sq,skv,h,hkv,d,causal,window", CASES)
+def test_flash_matches_oracle(rng, b, sq, skv, h, hkv, d, causal, window):
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, skv, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, skv, hkv, d)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window, bq=32, bkv=32)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(sq=st.integers(1, 70), bq=st.sampled_from([16, 32, 64]),
+       bkv=st.sampled_from([16, 32, 64]))
+def test_property_block_size_invariance(sq, bq, bkv):
+    """Output must not depend on the kernel's block decomposition."""
+    r = np.random.default_rng(sq * 7 + bq + bkv)
+    q = jnp.asarray(r.normal(size=(1, sq, 2, 16)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(1, sq, 2, 16)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(1, sq, 2, 16)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, bq=bq, bkv=bkv)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_bf16_inputs(rng):
+    q = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 32, 2, 16)), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, bq=16, bkv=16)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=0.1, atol=0.1)

@@ -1,0 +1,78 @@
+"""Planner: the paper's constraint system (Eq. 1-7 translated to VMEM/MXU)
+must hold for every plan the solver emits — property-based."""
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dtypes as mdt
+from repro.core.planner import GemmPlan, plan_gemm, should_pack
+from repro.roofline.hw import V5E
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=st.integers(1, 16384), k=st.integers(1, 16384),
+       n=st.integers(1, 16384),
+       dtype=st.sampled_from(["float32", "bfloat16", "int8"]),
+       budget_mb=st.sampled_from([8, 16, 32, 64, 128]))
+def test_property_plans_satisfy_constraints(m, k, n, dtype, budget_mb):
+    plan = plan_gemm(m, k, n, dtype, vmem_budget=budget_mb * 2**20)
+    # (C1) VMEM residency with double buffering
+    assert plan.vmem_working_set() <= plan.vmem_budget
+    # (C2) MXU feeding geometry
+    sub, lane = mdt.alignment(dtype)
+    if plan.bm >= sub:
+        assert plan.bm % sub == 0
+    if plan.bn >= lane:
+        assert plan.bn % lane == 0
+    if plan.bk >= lane:
+        assert plan.bk % lane == 0
+    # blocks never exceed the (aligned) problem envelope
+    assert plan.bm <= -(-m // sub) * sub
+    assert plan.bn <= -(-n // lane) * lane
+    assert plan.bk <= -(-k // lane) * lane
+    plan.validate()
+
+
+def test_kc_maximized_first():
+    """Paper: 'This strategy produces a larger value for kc' — the contraction
+    depth gets the fast-memory budget before the output tile grows."""
+    plan = plan_gemm(4096, 65536, 4096, "float32")
+    assert plan.bk >= plan.bm
+    assert plan.bk >= plan.bn
+
+
+def test_paper_mma_analogue_arrangement():
+    """The default accumulator arrangement generalizes MMA's 2x4 grid."""
+    plan = plan_gemm(4096, 4096, 4096, "float32")
+    assert plan.vaccs >= 2 and plan.haccs >= 4
+
+
+def test_small_problem_shrinks_blocks():
+    plan = plan_gemm(16, 16, 16, "float32")
+    assert plan.bm <= 16
+    assert plan.vmem_working_set() < 2**20
+
+
+def test_should_pack_crossover():
+    """Paper Figs. 4-6: packing pays beyond the fast-memory envelope only."""
+    assert not should_pack(64, 64, 64, "float32")
+    assert should_pack(4096, 4096, 4096, "float32")
+
+
+def test_validate_rejects_overflow():
+    bad = GemmPlan(bm=4096, bk=8192, bn=4096, dtype="float32",
+                   acc_dtype="float32", vmem_budget=2**20)
+    with pytest.raises(ValueError):
+        bad.validate()
+
+
+def test_narrow_dtype_alignment_table():
+    assert mdt.alignment("float32") == (8, 128)
+    assert mdt.alignment("bfloat16") == (16, 128)
+    assert mdt.alignment("int8") == (32, 128)
+    # paper Table 1 rank analogue
+    assert mdt.info("float32").rank == 1
+    assert mdt.info("bfloat16").rank == 2
+    assert mdt.info("int8").rank == 4
+    assert mdt.info("int4").rank == 8
+    assert mdt.info("int8").acc_dtype == "int32"

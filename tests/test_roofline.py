@@ -1,0 +1,93 @@
+"""Roofline extraction: HLO parser units + scan trip-count amplification."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.analysis import (HloCostModel, Roofline,
+                                     _collective_traffic, _group_size,
+                                     _shape_bytes, parse_collectives)
+from repro.roofline.hw import V5E
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert _shape_bytes("bf16[64]") == 128
+    assert _shape_bytes("(f32[8]{0}, s32[4])") == 32 + 16
+    assert _shape_bytes("pred[]") == 1  # scalar = one element
+
+
+def test_group_size_formats():
+    assert _group_size("replica_groups=[2,4]<=[8]") == 4
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+
+
+def test_collective_traffic_model():
+    assert _collective_traffic("all-gather", 100, 4) == 100
+    assert _collective_traffic("all-reduce", 100, 4) == 150
+    assert _collective_traffic("reduce-scatter", 100, 4) == 300
+    assert _collective_traffic("collective-permute", 100, 2) == 100
+
+
+def test_parse_collectives_synthetic():
+    text = """
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%add
+  %ag = bf16[512,2]{1,0} all-gather(%y), replica_groups={{0,1},{2,3}}
+  %done = f32[8] all-gather-done(%h)
+"""
+    stats = parse_collectives(text)
+    assert stats.op_counts == {"all-reduce": 1, "all-gather": 1}
+    assert stats.op_bytes["all-reduce"] == 2 * 4096 * 3 / 4
+    assert stats.op_bytes["all-gather"] == 2048
+
+
+def test_scan_amplification_matches_unroll():
+    def f_scan(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        out, _ = jax.lax.scan(body, x, w)
+        return out.sum()
+
+    def f_unroll(x, w):
+        c = x
+        for i in range(8):
+            c = jnp.tanh(c @ w[i])
+        return c.sum()
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+    rs = HloCostModel(jax.jit(f_scan).lower(x, w).compile().as_text()).rollup()
+    ru = HloCostModel(
+        jax.jit(f_unroll).lower(x, w).compile().as_text()).rollup()
+    assert rs.flops == ru.flops == 8 * 2 * 64 ** 3
+    # XLA's own analysis counts the body once (the bug this model fixes)
+    ca = jax.jit(f_scan).lower(x, w).compile().cost_analysis()
+    assert ca["flops"] < rs.flops / 4
+
+
+def test_nested_scan_amplification():
+    def f(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ c2), None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out.sum()
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    r = HloCostModel(jax.jit(f).lower(x).compile().as_text()).rollup()
+    assert r.flops == 5 * 3 * 2 * 32 ** 3
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", shape="s", mesh="single", chips=256,
+                 flops_per_device=V5E.peak_bf16_flops,      # 1s compute
+                 bytes_per_device=V5E.hbm_bw / 2,           # 0.5s memory
+                 collective_bytes_per_device=V5E.ici_link_bw / 4,  # 0.25s
+                 model_flops=V5E.peak_bf16_flops * 256 * 0.5)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 0.5) < 1e-9
+    assert abs(r.collective_s - 0.25) < 1e-9
+    assert r.bottleneck == "compute"
+    assert abs(r.useful_flops_ratio - 0.5) < 1e-9
+    assert abs(r.roofline_fraction - 1.0) < 1e-9

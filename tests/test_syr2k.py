@@ -1,0 +1,53 @@
+"""SYR2K — the paper's §5.1 extension of the layered strategy."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.syr2k import syr2k_flops, syr2k_layered, syr2k_ref
+
+
+def _nk(rng, n, k):
+    a = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    c = (c + c.T) / 2  # symmetric C, as SYR2K requires
+    return a, b, c
+
+
+@pytest.mark.parametrize("n,k", [(64, 32), (100, 70), (33, 65)])
+@pytest.mark.parametrize("uplo", ["lower", "upper"])
+def test_layered_matches_ref(rng, n, k, uplo):
+    a, b, c = _nk(rng, n, k)
+    got = syr2k_layered(a, b, c, alpha=0.5, beta=2.0, uplo=uplo)
+    want = syr2k_ref(a, b, c, alpha=0.5, beta=2.0, uplo=uplo)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_triangles_reassemble_symmetric(rng):
+    """lower + upper - diag reproduces the full symmetric product."""
+    a, b, _ = _nk(rng, 48, 24)
+    lo = np.asarray(syr2k_layered(a, b, uplo="lower"))
+    up = np.asarray(syr2k_layered(a, b, uplo="upper"))
+    full = np.asarray(jnp.matmul(a, b.T) + jnp.matmul(b, a.T))
+    np.testing.assert_allclose(lo + up - np.diag(np.diag(lo)), full,
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 64), k=st.integers(1, 48))
+def test_property_layered_equals_ref(n, k):
+    r = np.random.default_rng(n * 101 + k)
+    a = jnp.asarray(r.normal(size=(n, k)), jnp.float32)
+    b = jnp.asarray(r.normal(size=(n, k)), jnp.float32)
+    got = syr2k_layered(a, b)
+    want = syr2k_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_flops_counts_triangle_only():
+    # full product would be 2 * 2 * n^2 * k; the triangle is ~half
+    assert syr2k_flops(100, 10) == 2 * 100 * 101 * 10
+    assert syr2k_flops(100, 10) < 2 * 2 * 100 * 100 * 10
