@@ -22,7 +22,8 @@ from repro.core import run_strategy
 # cap them like the paper caps Intrinsic on large sizes.
 SLOW_STRATEGY_CAP = 512
 
-STRATEGIES = ("naive", "pluto", "intrinsic", "tiling", "tiling_packing", "xla")
+STRATEGIES = ("naive", "pluto", "intrinsic", "tiling", "tiling_packing",
+              "tiling_packing_fused", "xla")
 
 
 def bench_size(n: int, rng) -> dict:

@@ -4,9 +4,22 @@ Small sizes: Tiling beats Tiling+Packing (packing is pure overhead when the
 operands fit fast memory). Large sizes: packing pays for itself. This bench
 measures (a) the standalone packing cost, (b) the amortization effect of
 pre-packed weights (PackedWeight, load-time packing — the framework extension
-the paper's per-call model cannot express).
+the paper's per-call model cannot express), and (c) the fused-A pipeline:
+with B pre-packed, ``pack_a + gemm_packed`` (A materialized tile-major
+through HBM, two kernels) vs ``gemm_packed_fused_a`` (A streamed from its
+natural layout, one kernel). The unfused pipeline is timed as two separately
+jitted stages so the packed-A buffer is really materialized, exactly as the
+two-kernel Pallas pipeline materializes it in HBM.
+
+Emits the fused-vs-unfused rows to ``BENCH_fused_gemm.json`` at the repo root
+so the perf trajectory is tracked across PRs. ``REPRO_BENCH_SMOKE=1`` shrinks
+the sweep (CI smoke job).
 """
 from __future__ import annotations
+
+import json
+import os
+import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -16,28 +29,104 @@ from benchmarks.common import emit, time_fn
 from repro.core import PackedWeight, plan_gemm, run_strategy
 from repro.kernels import ref
 
+def _artifact_path() -> pathlib.Path:
+    """Smoke runs (CI) write a separate file so they never clobber the
+    tracked full-sweep trajectory artifact."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    name = ("BENCH_fused_gemm.smoke.json" if os.environ.get("REPRO_BENCH_SMOKE")
+            else "BENCH_fused_gemm.json")
+    return root / name
+
+
+def _sizes():
+    if os.environ.get("REPRO_BENCH_SMOKE"):
+        return (64, 256)
+    return (64, 256, 1024, 2048)
+
+
+def _a_bytes(n: int, plan, itemsize: int = 4) -> dict:
+    """Analytic A-traffic (bytes) per call for each pipeline."""
+    mb = -(-n // plan.bm) * plan.bm
+    kb = -(-n // plan.bk) * plan.bk
+    packed = mb * kb * itemsize
+    return {
+        # pack_a reads A once and writes the tile-major copy; the GEMM then
+        # reads the copy back: 3x A through HBM.
+        "unfused": n * n * itemsize + 2 * packed,
+        # fused: the GEMM streams A directly (padded envelope), once.
+        "fused": packed,
+    }
+
 
 def main() -> None:
     rng = np.random.default_rng(0)
-    for n in (64, 256, 1024):
+    rows = []
+    for n in _sizes():
         a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
         b = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
         plan = plan_gemm(n, n, n, "float32")
         t_pack = time_fn(jax.jit(
-            lambda x: ref.pack_b_ref(x, plan.bk, plan.bn)), b)
+            lambda x, plan=plan: ref.pack_b_ref(x, plan.bk, plan.bn)), b)
         t_tiling = time_fn(jax.jit(
             lambda x, y: run_strategy("tiling", x, y, backend="jnp")), a, b)
         t_packed = time_fn(jax.jit(
             lambda x, y: run_strategy("tiling_packing", x, y,
                                       backend="jnp")), a, b)
-        pw = PackedWeight.pack(b, m_hint=n, backend="jnp")
-        t_prepacked = time_fn(jax.jit(lambda x: pw.matmul(x)), a)
+        t_fused_strategy = time_fn(jax.jit(
+            lambda x, y: run_strategy("tiling_packing_fused", x, y,
+                                      backend="jnp")), a, b)
         emit(f"pack_cost_n{n}", t_pack, f"bk={plan.bk};bn={plan.bn}")
         emit(f"tiling_n{n}", t_tiling, "")
         emit(f"tiling_packing_n{n}", t_packed,
              f"overhead_vs_tiling={t_packed/t_tiling:.2f}x")
-        emit(f"prepacked_weight_n{n}", t_prepacked,
-             f"speedup_vs_per_call_packing={t_packed/t_prepacked:.2f}x")
+        emit(f"tiling_packing_fused_n{n}", t_fused_strategy,
+             f"speedup_vs_unfused={t_packed/t_fused_strategy:.2f}x")
+
+        # --- weight pre-packed (the serving path): fused vs per-call pack_a.
+        pw = PackedWeight.pack(b, m_hint=n, backend="jnp")
+        # Unfused: two jitted stages — the packed-A buffer is materialized
+        # between them, as the two-kernel Pallas pipeline materializes it in
+        # HBM (a single jit would let XLA fold the pack into the contraction).
+        pack_a_fn = jax.jit(lambda x, plan=plan: ref.pack_a_ref(
+            x, plan.bm, plan.bk, plan.layout_a))
+        ein_a = "ikab" if plan.layout_a == "row" else "ikba"
+        ein_b = "jkbc" if plan.layout_b == "row" else "jkcb"
+
+        bm_, bn_ = plan.bm, plan.bn  # static closure (not traced jit args)
+
+        @jax.jit
+        def packed_gemm_fn(ap, bp):
+            acc = jnp.einsum(f"{ein_a},{ein_b}->iajc",
+                             ap.astype(jnp.float32), bp.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+            return acc.reshape(ap.shape[0] * bm_, bp.shape[0] * bn_)[:n, :n]
+
+        t_unfused = time_fn(
+            lambda x: packed_gemm_fn(pack_a_fn(x), pw.packed), a)
+        t_fused = time_fn(jax.jit(lambda x: pw.matmul(x)), a)
+        bytes_moved = _a_bytes(n, plan)
+        emit(f"prepacked_unfused_n{n}", t_unfused,
+             f"a_bytes={bytes_moved['unfused']}")
+        emit(f"prepacked_fused_n{n}", t_fused,
+             f"a_bytes={bytes_moved['fused']};"
+             f"speedup_vs_per_call_packing={t_unfused/t_fused:.2f}x")
+        rows.append({
+            "n": n,
+            "backend": "jnp",
+            "t_unfused_us": t_unfused,
+            "t_fused_us": t_fused,
+            "speedup_fused": t_unfused / t_fused,
+            "t_strategy_unfused_us": t_packed,
+            "t_strategy_fused_us": t_fused_strategy,
+            "a_bytes_unfused": bytes_moved["unfused"],
+            "a_bytes_fused": bytes_moved["fused"],
+        })
+
+    artifact = _artifact_path()
+    artifact.write_text(json.dumps(
+        {"bench": "fused_gemm", "unit_time": "us_per_call",
+         "results": rows}, indent=2) + "\n")
+    print(f"# wrote {artifact}")
 
 
 if __name__ == "__main__":

@@ -3,27 +3,46 @@
   bench_gemm_strategies   — Figs. 4-9 (strategy sweep, small/medium/large)
   bench_micro_lowering    — Fig. 10b (matrix engine vs generic vector lowering)
   bench_dtypes            — Table 1 (dtype/rank table)
-  bench_packing_overhead  — §4.2/4.3 packing cost decomposition (+PackedWeight)
+  bench_packing_overhead  — §4.2/4.3 packing cost decomposition
+                            (+PackedWeight, +fused-A pipeline; writes
+                            BENCH_fused_gemm.json)
   bench_syr2k             — §5.1 SYR2K extension of the layered strategy
   bench_models            — end-to-end model step times (CPU observation)
   bench_roofline          — TPU-target roofline rows from the dry-run
 
 Prints ``name,us_per_call,derived`` CSV.
+
+``--smoke``: quick CI mode — runs only the packing/fused bench on shrunken
+sizes (sets REPRO_BENCH_SMOKE=1) so the scripts can't silently rot.
 """
+import os
+import pathlib
 import sys
 import traceback
 
-from benchmarks import (bench_dtypes, bench_gemm_strategies,
-                        bench_micro_lowering, bench_models,
-                        bench_packing_overhead, bench_roofline, bench_syr2k)
-from benchmarks.common import header
+# Allow both `python -m benchmarks.run` and `python benchmarks/run.py`.
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 
 def main() -> None:
+    smoke = "--smoke" in sys.argv[1:]
+    if smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
+    # Import after the env flag so modules can read it at run time.
+    from benchmarks import (bench_dtypes, bench_gemm_strategies,
+                            bench_micro_lowering, bench_models,
+                            bench_packing_overhead, bench_roofline,
+                            bench_syr2k)
+    from benchmarks.common import header
+
     header()
-    modules = [bench_micro_lowering, bench_dtypes, bench_packing_overhead,
-               bench_syr2k, bench_gemm_strategies, bench_models,
-               bench_roofline]
+    if smoke:
+        modules = [bench_packing_overhead]
+    else:
+        modules = [bench_micro_lowering, bench_dtypes, bench_packing_overhead,
+                   bench_syr2k, bench_gemm_strategies, bench_models,
+                   bench_roofline]
     failures = 0
     for mod in modules:
         try:

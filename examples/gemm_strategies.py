@@ -18,7 +18,8 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks.common import time_fn  # noqa: E402
 from repro.core import run_strategy  # noqa: E402
 
-STRATEGIES = ("pluto", "intrinsic", "tiling", "tiling_packing", "xla")
+STRATEGIES = ("pluto", "intrinsic", "tiling", "tiling_packing",
+              "tiling_packing_fused", "xla")
 
 
 def main() -> None:

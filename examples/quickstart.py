@@ -29,7 +29,7 @@ def main() -> None:
     b = jnp.asarray(rng.normal(size=(160, 224)), jnp.float32)
     want = ref.matmul_ref(a, b)
     for s in ("naive", "pluto", "intrinsic", "tiling", "tiling_packing",
-              "xla"):
+              "tiling_packing_fused", "xla"):
         got = run_strategy(s, a, b, backend="jnp")
         err = float(jnp.abs(got - want).max())
         print(f"  {s:16s} max|err| = {err:.2e}")

@@ -24,6 +24,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--pack-weights", action="store_true",
+                    help="tile-major pack all dense weights at load time "
+                         "(fused pack-free-A GEMM on every step)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
@@ -31,7 +34,8 @@ def main() -> None:
     params = model.init(jax.random.PRNGKey(0))
     engine = Engine(model, params, ServeConfig(
         max_len=args.prompt_len + args.new + 8,
-        temperature=args.temperature))
+        temperature=args.temperature,
+        pack_weights=args.pack_weights))
 
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(

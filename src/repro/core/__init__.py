@@ -5,5 +5,5 @@ in this framework uses.
 """
 from repro.core.gemm import linear, matmul, plan_gemm, resolve_strategy  # noqa: F401
 from repro.core.layered import LayeredGemm, PackedWeight  # noqa: F401
-from repro.core.planner import GemmPlan, should_pack  # noqa: F401
+from repro.core.planner import GemmPlan, choose_strategy, should_pack  # noqa: F401
 from repro.core.strategy import STRATEGIES, run as run_strategy  # noqa: F401

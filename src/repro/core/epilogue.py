@@ -1,8 +1,13 @@
 """Fused GEMM epilogues (beyond-paper: the paper stops at alpha/beta).
 
-Frameworks fuse bias/activation into the GEMM's final store; we expose the
-same registry both for the jnp lowering (XLA fuses it) and as the epilogue of
-the Pallas kernels' last grid step (hillclimb item — see EXPERIMENTS.md §Perf).
+Frameworks fuse bias/activation into the GEMM's final store. This registry is
+the single source of truth for epilogue names; the Pallas kernels mirror it as
+``repro.kernels.common.KERNEL_EPILOGUES`` (applied to the VMEM-resident f32
+accumulator in the final grid step, before the single HBM store — see
+gemm_tiled / gemm_packed / gemm_packed_fused_a), and the jnp lowerings apply
+it as trailing ops that XLA fuses. Strategy lowerings take ``epilogue=`` and
+``bias=`` directly (``repro.core.strategy.run``), so no caller on the kernel
+path needs a post-kernel bias/activation op.
 """
 from __future__ import annotations
 

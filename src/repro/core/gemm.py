@@ -6,12 +6,19 @@ compiler pass: the "pattern" (a GEMM) is explicit at this call site, and the
 strategy/planner decide how it is lowered.
 
 Resolution of ``strategy="auto"``:
-  * on TPU: ``tiling`` for problems that fit VMEM, ``tiling_packing`` beyond
-    (the paper's own small/large crossover), via the Pallas kernels;
+  * on TPU: ``tiling`` for problems whose streams behave unpacked,
+    ``tiling_packing_fused`` beyond (the fused crossover — packing A is free,
+    so the packed kernel wins earlier than the paper's Figs. 4-6 crossover),
+    via the Pallas kernels;
   * elsewhere (CPU dry-run/tests): ``xla`` — XLA's GEMM is the correct
     "library" lowering for a backend we are not hand-scheduling for.
 Overrides: env ``REPRO_GEMM_STRATEGY`` / ``REPRO_GEMM_BACKEND`` (used by the
 integration tests to force the Pallas path inside jitted models).
+
+``linear`` also accepts a :class:`repro.core.layered.PackedWeight` for ``w``:
+the weight was packed tile-major once at load time, so every call runs the
+pack-free-A fused kernel with bias + activation applied in the kernel's final
+grid step — no per-call packing, no post-kernel elementwise ops.
 """
 from __future__ import annotations
 
@@ -22,7 +29,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import strategy as strat
-from repro.core.planner import GemmPlan, plan_gemm, should_pack
+from repro.core.epilogue import apply_epilogue
+from repro.core.planner import (GemmPlan, choose_strategy, plan_gemm,
+                                should_pack)
 
 _ENV_STRATEGY = "REPRO_GEMM_STRATEGY"
 _ENV_BACKEND = "REPRO_GEMM_BACKEND"
@@ -42,28 +51,50 @@ def resolve_strategy(m: int, k: int, n: int, dtype, strategy: str = "auto") -> s
     if strategy != "auto":
         return strategy
     if jax.default_backend() == "tpu":
-        return "tiling_packing" if should_pack(m, k, n, dtype) else "tiling"
+        return choose_strategy(m, k, n, dtype)
     return "xla"
 
 
-def matmul(a: jnp.ndarray, b: jnp.ndarray, c: Optional[jnp.ndarray] = None, *,
+def _is_packed_weight(w) -> bool:
+    from repro.core.layered import PackedWeight  # local: layered imports us
+    return isinstance(w, PackedWeight)
+
+
+def matmul(a: jnp.ndarray, b, c: Optional[jnp.ndarray] = None, *,
            alpha: float = 1.0, beta: float = 0.0, strategy: str = "auto",
            plan: Optional[GemmPlan] = None, backend: Optional[str] = None,
-           out_dtype=None) -> jnp.ndarray:
-    """C <- alpha * A @ B (+ beta * C). 2-D operands."""
+           out_dtype=None, bias: Optional[jnp.ndarray] = None,
+           epilogue: str = "none") -> jnp.ndarray:
+    """C <- epilogue(alpha * A @ B (+ beta * C) + bias). 2-D operands.
+
+    ``b`` may be a raw [K,N] array or a pre-packed :class:`PackedWeight` (the
+    latter always routes through the fused pack-free-A kernel).
+    """
+    if _is_packed_weight(b):
+        if c is not None or alpha != 1.0 or beta != 0.0:
+            raise ValueError(
+                "PackedWeight matmul supports the linear-layer epilogue only "
+                "(no c/alpha/beta)")
+        return b.matmul(a, bias=bias, epilogue=epilogue, out_dtype=out_dtype,
+                        backend=backend)
     m, k = a.shape
     n = b.shape[1]
     s = resolve_strategy(m, k, n, a.dtype, strategy)
     be = backend or default_backend()
     return strat.run(s, a, b, c, alpha=alpha, beta=beta, plan=plan,
-                     backend=be, out_dtype=out_dtype)
+                     backend=be, out_dtype=out_dtype, bias=bias,
+                     epilogue=epilogue)
 
 
-def linear(x: jnp.ndarray, w: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
+def linear(x: jnp.ndarray, w, bias: Optional[jnp.ndarray] = None,
            *, strategy: str = "auto", plan: Optional[GemmPlan] = None,
            backend: Optional[str] = None, out_dtype=None,
-           accum: str = "native") -> jnp.ndarray:
-    """y = x @ w (+ bias) with arbitrary leading batch dims on x.
+           accum: str = "native", epilogue: str = "none") -> jnp.ndarray:
+    """y = epilogue(x @ w + bias) with arbitrary leading batch dims on x.
+
+    ``w``: raw [K,N] weight or :class:`PackedWeight` (load-time tile-major
+    packing; runs the fused pack-free-A kernel with the epilogue applied in
+    VMEM before the single output store).
 
     The XLA lowering keeps leading dims UNFLATTENED: collapsing [B, S, d] to
     [B*S, d] merges two differently-sharded dims, which GSPMD on a 3-axis mesh
@@ -80,6 +111,16 @@ def linear(x: jnp.ndarray, w: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
     """
     lead = x.shape[:-1]
     k = x.shape[-1]
+    if _is_packed_weight(w):
+        # Like every kernel strategy, the fused kernel takes the flattened
+        # 2-D view (explicitly selected by packing the weight — the GSPMD
+        # unflattened-dims caveat below applies only to the auto/XLA path).
+        # The kernel accumulates in f32 regardless, matching accum="f32"'s
+        # einsum precision; the output dtype mirrors the raw-weight path.
+        x2 = x if x.ndim == 2 else x.reshape(-1, k)
+        y = w.matmul(x2, bias=bias, epilogue=epilogue,
+                     out_dtype=out_dtype or x.dtype, backend=backend)
+        return y.reshape(*lead, w.n)
     n = w.shape[-1]
     s = resolve_strategy(int(jnp.size(x) // max(k, 1)), k, n, x.dtype, strategy)
     if s == "xla" or x.ndim == 2:
@@ -88,18 +129,18 @@ def linear(x: jnp.ndarray, w: jnp.ndarray, bias: Optional[jnp.ndarray] = None,
             acc = jnp.einsum("...k,kn->...n", x, w,
                              preferred_element_type=pet)
             y = acc.astype(out_dtype or x.dtype)
-        else:
-            y = matmul(x, w, strategy=s, plan=plan, backend=backend,
-                       out_dtype=out_dtype or x.dtype)
-    else:
-        x2 = x.reshape(-1, k)
-        y = matmul(x2, w, strategy=s, plan=plan, backend=backend,
-                   out_dtype=out_dtype or x.dtype)
-        y = y.reshape(*lead, n)
-    if bias is not None:
-        y = y + bias.astype(y.dtype)
-    return y
+            if bias is not None:
+                y = y + bias.astype(y.dtype)
+            return apply_epilogue(epilogue, y)
+        y = matmul(x, w, strategy=s, plan=plan, backend=backend,
+                   out_dtype=out_dtype or x.dtype, bias=bias,
+                   epilogue=epilogue)
+        return y
+    x2 = x.reshape(-1, k)
+    y = matmul(x2, w, strategy=s, plan=plan, backend=backend,
+               out_dtype=out_dtype or x.dtype, bias=bias, epilogue=epilogue)
+    return y.reshape(*lead, n)
 
 
 __all__ = ["matmul", "linear", "resolve_strategy", "default_backend",
-           "plan_gemm", "GemmPlan"]
+           "plan_gemm", "GemmPlan", "choose_strategy", "should_pack"]

@@ -5,21 +5,31 @@ Bundles planner + packing + micro kernel + epilogue into one reusable object
 :class:`PackedWeight`, a beyond-paper extension natural to frameworks: model
 weights are static across calls, so the macro-level packing can be *hoisted to
 load time* and amortized over every step — something a per-call library (or
-per-loop compiler rewrite) cannot do. Serving uses this for the LM head.
+per-loop compiler rewrite) cannot do.
+
+``PackedWeight`` is registered as a JAX pytree node (the packed buffer is the
+leaf; (k, n, plan) are static aux data), so packed weights can live inside
+jit'd/scanned model parameter trees: the serving engine packs every dense
+weight once at load time and each layer's slice flows through ``jax.lax.scan``
+like any other array. Its :meth:`matmul` runs the pack-free-A fused kernel
+(``gemm_packed_fused_a``): A streams from its natural layout, and bias +
+activation are applied in the kernel's final grid step.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
+from repro.core import dtypes as mdt
 from repro.core import strategy as strat
 from repro.core.epilogue import apply_epilogue
 from repro.core.gemm import default_backend
-from repro.core.planner import GemmPlan, plan_gemm, should_pack
+from repro.core.planner import GemmPlan, choose_strategy, plan_gemm
 from repro.kernels import ref
-from repro.kernels.gemm_packed import gemm_packed
+from repro.kernels.gemm_packed import gemm_packed_fused_a
 from repro.kernels.pack import pack_b
 
 
@@ -31,7 +41,7 @@ class LayeredGemm:
     k: int
     n: int
     dtype: str = "float32"
-    strategy: Optional[str] = None        # None -> paper's size heuristic
+    strategy: Optional[str] = None        # None -> fused size heuristic
     backend: Optional[str] = None
     epilogue: str = "none"
     plan: Optional[GemmPlan] = None
@@ -39,18 +49,19 @@ class LayeredGemm:
     def __post_init__(self):
         self.plan = self.plan or plan_gemm(self.m, self.k, self.n, self.dtype)
         if self.strategy is None:
-            self.strategy = ("tiling_packing"
-                             if should_pack(self.m, self.k, self.n, self.dtype)
-                             else "tiling")
+            self.strategy = choose_strategy(self.m, self.k, self.n, self.dtype)
         self.backend = self.backend or default_backend()
 
-    def __call__(self, a, b, c=None, *, alpha=1.0, beta=0.0, out_dtype=None):
+    def __call__(self, a, b, c=None, *, alpha=1.0, beta=0.0, bias=None,
+                 out_dtype=None):
         assert a.shape == (self.m, self.k) and b.shape == (self.k, self.n), (
             a.shape, b.shape, (self.m, self.k, self.n))
-        out = strat.run(self.strategy, a, b, c, alpha=alpha, beta=beta,
-                        plan=self.plan, backend=self.backend,
-                        out_dtype=out_dtype)
-        return apply_epilogue(self.epilogue, out)
+        # epilogue/bias ride inside the lowering (kernel strategies fuse them
+        # into the final grid step; jnp strategies let XLA fuse them).
+        return strat.run(self.strategy, a, b, c, alpha=alpha, beta=beta,
+                         plan=self.plan, backend=self.backend,
+                         out_dtype=out_dtype, bias=bias,
+                         epilogue=self.epilogue)
 
 
 @dataclasses.dataclass
@@ -75,20 +86,49 @@ class PackedWeight:
             packed = ref.pack_b_ref(w, plan.bk, plan.bn, plan.layout_b)
         return cls(packed=packed, k=k, n=n, plan=plan)
 
-    def matmul(self, a: jnp.ndarray, *, out_dtype=None,
-               backend: Optional[str] = None) -> jnp.ndarray:
-        """a[M,K] @ W using the pre-packed buffer (packing cost amortized)."""
+    def matmul(self, a: jnp.ndarray, *, bias=None, epilogue: str = "none",
+               out_dtype=None, backend: Optional[str] = None) -> jnp.ndarray:
+        """epilogue(a[M,K] @ W + bias) via the pack-free-A fused pipeline.
+
+        B's packing cost was paid once at load time; A is consumed directly
+        from its natural layout (no pack_a materialization on any backend),
+        and bias + activation are fused into the store epilogue.
+        """
+        if a.shape[1] != self.k:
+            # Padded tile envelopes can coincide for different K, so the
+            # kernels below cannot catch this — check the true K here.
+            raise ValueError(
+                f"contraction mismatch: a has K={a.shape[1]}, weight was "
+                f"packed with K={self.k}")
         be = backend or default_backend()
+        # The plan's bm reflects the pack-time m_hint; the packed B buffer is
+        # independent of it, so clamp the M-block to the *runtime* batch
+        # (aligned up to the sublane) — a decode step with 4 rows must not be
+        # padded to a 1024-row macro tile.
+        sub, _ = mdt.alignment(a.dtype)
+        bm = min(self.plan.bm, max(-(-a.shape[0] // sub) * sub, sub))
         if be == "pallas":
-            ap = None
-            from repro.kernels.pack import pack_a
-            ap = pack_a(a, self.plan.bm, self.plan.bk, layout=self.plan.layout_a)
-            return gemm_packed(ap, self.packed, a.shape[0], self.n,
-                               layout_a=self.plan.layout_a,
-                               layout_b=self.plan.layout_b,
-                               out_dtype=out_dtype or a.dtype)
-        ap = ref.pack_a_ref(a, self.plan.bm, self.plan.bk, self.plan.layout_a)
-        out = ref.packed_matmul_ref(ap, self.packed, a.shape[0], self.n,
-                                    self.plan.layout_a, self.plan.layout_b,
-                                    out_dtype=out_dtype or a.dtype)
-        return out
+            return gemm_packed_fused_a(a, self.packed, self.n, bm=bm,
+                                       layout_b=self.plan.layout_b, bias=bias,
+                                       epilogue=epilogue,
+                                       out_dtype=out_dtype or a.dtype)
+        acc = ref.fused_packed_acc_ref(a, self.packed, self.n,
+                                       layout_b=self.plan.layout_b,
+                                       bm=bm)
+        if bias is not None:
+            acc = acc + bias.astype(acc.dtype)
+        out = apply_epilogue(epilogue, acc)
+        return out.astype(out_dtype or a.dtype)
+
+
+def _packed_weight_flatten(pw: PackedWeight):
+    return (pw.packed,), (pw.k, pw.n, pw.plan)
+
+
+def _packed_weight_unflatten(aux, children):
+    k, n, plan = aux
+    return PackedWeight(packed=children[0], k=k, n=n, plan=plan)
+
+
+jax.tree_util.register_pytree_node(PackedWeight, _packed_weight_flatten,
+                                   _packed_weight_unflatten)

@@ -144,11 +144,46 @@ def plan_gemm(m: int, k: int, n: int, dtype="float32", *,
 
 
 def should_pack(m: int, k: int, n: int, dtype="float32", *,
-                target: TpuTarget = V5E) -> bool:
+                target: TpuTarget = V5E, fused: bool = False) -> bool:
     """Strategy heuristic from the paper's own results: packing pays off once
     operands exceed the fast-memory envelope (Figs. 4-6: Tiling wins small,
-    Tiling+Packing wins medium/large)."""
+    Tiling+Packing wins medium/large).
+
+    ``fused=True`` models the pack-free-A pipeline (``tiling_packing_fused``):
+    A is never copied, so the per-call packing bill is only B's one tile-major
+    copy, amortized over every M-block that re-streams B. Two conditions:
+    (a) there must BE more than one M-block — with m inside the planner's
+    largest bm (8*mxu) each B tile is read exactly once and a per-call copy
+    buys nothing (decode-shaped GEMMs stay on ``tiling``; load-time-packed
+    weights bypass this function entirely via ``weights_prepacked``); and
+    (b) B is more than a small slice of VMEM, so it can't stay resident next
+    to the double-buffered A stream and the accumulator — each M-block then
+    re-reads it from HBM, and the contiguous tile-major stream beats the
+    strided gather. Together these move the crossover well before the paper's
+    Figs. 4-6 whole-working-set spill point.
+    """
     item = mdt.info(jnp.dtype(dtype).name if not isinstance(dtype, str)
                     else dtype).itemsize
+    if fused:
+        return (m > 8 * target.mxu_dim
+                and k * n * item > target.vmem_bytes // 32)
     total = (m * k + k * n + m * n) * item
     return total > target.vmem_bytes
+
+
+def choose_strategy(m: int, k: int, n: int, dtype="float32", *,
+                    target: TpuTarget = V5E,
+                    weights_prepacked: bool = False) -> str:
+    """Pick the kernel strategy for a problem signature.
+
+    With the fused-A kernel available, per-call A-packing is never worth it:
+    the auto path chooses between plain ``tiling`` (small: everything streams
+    fine unpacked) and ``tiling_packing_fused`` (medium/large: B tile-major,
+    A pack-free). ``weights_prepacked`` (PackedWeight) always takes the fused
+    kernel — B's packing cost was already paid at load time.
+    """
+    if weights_prepacked:
+        return "tiling_packing_fused"
+    if should_pack(m, k, n, dtype, target=target, fused=True):
+        return "tiling_packing_fused"
+    return "tiling"

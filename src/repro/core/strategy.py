@@ -10,6 +10,11 @@ Each strategy is a different *lowering* of the same GEMM, mirroring the paper:
                   (paper: unrolled completely; infeasible for large sizes)
   tiling          planner-blocked Pallas kernel, strided (unpacked) operands
   tiling_packing  planner-blocked Pallas kernel over packed tile-major buffers
+  tiling_packing_fused
+                  beyond-paper: B packed tile-major, A streamed pack-free from
+                  its natural [M,K] layout via the kernel's BlockSpec index
+                  map — pack_a's HBM round trip is eliminated (BLIS-style
+                  stream packing fused into the macro loop)
   vsx             generic vector-unit lowering (no matrix engine) — Fig. 10b
   xla             jnp.matmul under jit — the high-performance-library proxy
                   (XLA's own GEMM plays the role of OpenBLAS/Eigen)
@@ -19,7 +24,13 @@ Two execution backends:
     tests and by TPU deployments.
   * ``jnp``    — pure-jnp lowerings of the same layered algorithm; these run
     natively on CPU and make the paper's CPU experiments reproducible here
-    (benchmarks/). Packing is a real materialized copy in both backends.
+    (benchmarks/). Packing is a real materialized copy in both backends; the
+    fused strategy's A stays a strided view in both backends.
+
+Every lowering takes ``bias`` (length-N vector) and ``epilogue`` (a name from
+``repro.core.epilogue.EPILOGUES``): kernel strategies apply them inside the
+final grid step before the single HBM store; the rest apply them as trailing
+jnp ops (XLA fuses them) so all strategies compute the same function.
 """
 from __future__ import annotations
 
@@ -28,21 +39,26 @@ from typing import Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import dtypes as mdt
+from repro.core.epilogue import apply_epilogue
 from repro.core.planner import GemmPlan, plan_gemm
 from repro.kernels import ref
-from repro.kernels.gemm_packed import gemm_packed
+from repro.kernels.gemm_packed import gemm_packed, gemm_packed_fused_a
 from repro.kernels.gemm_tiled import gemm_tiled
 from repro.kernels.gemm_vsx_like import matmul_vsx_like
 from repro.kernels.pack import pack_a, pack_b
 
 STRATEGIES = ("naive", "pluto", "intrinsic", "tiling", "tiling_packing",
-              "vsx", "xla")
+              "tiling_packing_fused", "vsx", "xla")
 
 
-def _epilogue(acc, c, alpha, beta, out_dtype):
+def _epilogue(acc, c, alpha, beta, out_dtype, bias=None, epilogue="none"):
     out = alpha * acc
     if c is not None and beta != 0:
         out = out + beta * c.astype(acc.dtype)
+    if bias is not None:
+        out = out + bias.astype(acc.dtype)
+    out = apply_epilogue(epilogue, out)
     return out.astype(out_dtype)
 
 
@@ -50,7 +66,8 @@ def _epilogue(acc, c, alpha, beta, out_dtype):
 # jnp-backend lowerings (run natively everywhere)
 # ---------------------------------------------------------------------------
 
-def _naive_jnp(a, b, c, alpha, beta, plan, out_dtype):
+def _naive_jnp(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
+               epilogue="none", interpret=None):
     """Rank-1 update loop over K — unblocked scalar-style codegen."""
     m, k = a.shape
     n = b.shape[1]
@@ -61,10 +78,11 @@ def _naive_jnp(a, b, c, alpha, beta, plan, out_dtype):
             jax.lax.dynamic_slice_in_dim(b32, kk, 1, 0)
 
     acc = jax.lax.fori_loop(0, k, body, jnp.zeros((m, n), jnp.float32))
-    return _epilogue(acc, c, alpha, beta, out_dtype)
+    return _epilogue(acc, c, alpha, beta, out_dtype, bias, epilogue)
 
 
-def _pluto_jnp(a, b, c, alpha, beta, plan, out_dtype):
+def _pluto_jnp(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
+               epilogue="none", interpret=None):
     """Conservative loop tiling, vector-FMA micro kernel, NO packing.
 
     Mirrors PLuTo's auto-tiling: fixed small tiles regardless of the target's
@@ -94,17 +112,19 @@ def _pluto_jnp(a, b, c, alpha, beta, plan, out_dtype):
 
     out = jax.lax.fori_loop(0, mb * nb, body,
                             jnp.zeros((mb * t, nb * t), jnp.float32))
-    return _epilogue(out[:m, :n], c, alpha, beta, out_dtype)
+    return _epilogue(out[:m, :n], c, alpha, beta, out_dtype, bias, epilogue)
 
 
-def _intrinsic_jnp(a, b, c, alpha, beta, plan, out_dtype):
+def _intrinsic_jnp(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
+                   epilogue="none", interpret=None):
     """Whole GEMM as one matrix-multiply intrinsic call."""
     acc = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)
-    return _epilogue(acc, c, alpha, beta, out_dtype)
+    return _epilogue(acc, c, alpha, beta, out_dtype, bias, epilogue)
 
 
-def _tiling_jnp(a, b, c, alpha, beta, plan, out_dtype):
+def _tiling_jnp(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
+                epilogue="none", interpret=None):
     """Planner-blocked GEMM on strided (unpacked) operands, jnp lowering."""
     plan = plan or plan_gemm(a.shape[0], a.shape[1], b.shape[1], a.dtype)
     bm, bk, bn = plan.bm, plan.bk, plan.bn
@@ -118,10 +138,11 @@ def _tiling_jnp(a, b, c, alpha, beta, plan, out_dtype):
                      b4.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
     out = acc.reshape(mb * bm, nb * bn)[:m, :n]
-    return _epilogue(out, c, alpha, beta, out_dtype)
+    return _epilogue(out, c, alpha, beta, out_dtype, bias, epilogue)
 
 
-def _packing_jnp(a, b, c, alpha, beta, plan, out_dtype):
+def _packing_jnp(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
+                 epilogue="none", interpret=None):
     """Tiling+Packing, jnp lowering: materialized tile-major copies first."""
     plan = plan or plan_gemm(a.shape[0], a.shape[1], b.shape[1], a.dtype)
     bm, bk, bn = plan.bm, plan.bk, plan.bn
@@ -135,51 +156,91 @@ def _packing_jnp(a, b, c, alpha, beta, plan, out_dtype):
                      preferred_element_type=jnp.float32)
     mb, nb = ap.shape[0], bp.shape[0]
     out = acc.reshape(mb * bm, nb * bn)[:m, :n]
-    return _epilogue(out, c, alpha, beta, out_dtype)
+    return _epilogue(out, c, alpha, beta, out_dtype, bias, epilogue)
 
 
-def _xla(a, b, c, alpha, beta, plan, out_dtype):
+def _packing_fused_jnp(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
+                       epilogue="none", interpret=None):
+    """Fused-A Tiling+Packing, jnp lowering: B materialized tile-major, A
+    consumed as a strided blocked view of its natural layout (no copy)."""
+    plan = plan or plan_gemm(a.shape[0], a.shape[1], b.shape[1], a.dtype)
+    m, n = a.shape[0], b.shape[1]
+    bp = ref.pack_b_ref(b, plan.bk, plan.bn, plan.layout_b)
+    acc = ref.fused_packed_acc_ref(a, bp, n, layout_b=plan.layout_b,
+                                   bm=plan.bm)
+    return _epilogue(acc, c, alpha, beta, out_dtype, bias, epilogue)
+
+
+def _xla(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
+         epilogue="none", interpret=None):
     """The library proxy: let XLA's own GEMM path do everything."""
     acc = jnp.matmul(a, b, preferred_element_type=jnp.float32)
-    return _epilogue(acc, c, alpha, beta, out_dtype)
+    return _epilogue(acc, c, alpha, beta, out_dtype, bias, epilogue)
 
 
 # ---------------------------------------------------------------------------
 # pallas-backend lowerings (TPU target; interpret=True off-TPU)
 # ---------------------------------------------------------------------------
 
-def _tiling_pallas(a, b, c, alpha, beta, plan, out_dtype, interpret=None):
+def _tiling_pallas(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
+                   epilogue="none", interpret=None):
     plan = plan or plan_gemm(a.shape[0], a.shape[1], b.shape[1], a.dtype)
     return gemm_tiled(a, b, c, alpha=alpha, beta=beta, out_dtype=out_dtype,
-                      interpret=interpret, **plan.kwargs())
+                      epilogue=epilogue, bias=bias, interpret=interpret,
+                      **plan.kwargs())
 
 
-def _packing_pallas(a, b, c, alpha, beta, plan, out_dtype, interpret=None):
+def _packing_pallas(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
+                    epilogue="none", interpret=None):
     plan = plan or plan_gemm(a.shape[0], a.shape[1], b.shape[1], a.dtype)
     m, n = a.shape[0], b.shape[1]
     ap = pack_a(a, plan.bm, plan.bk, layout=plan.layout_a, interpret=interpret)
     bp = pack_b(b, plan.bk, plan.bn, layout=plan.layout_b, interpret=interpret)
     return gemm_packed(ap, bp, m, n, c, alpha=alpha, beta=beta,
                        layout_a=plan.layout_a, layout_b=plan.layout_b,
-                       out_dtype=out_dtype, interpret=interpret)
+                       out_dtype=out_dtype, epilogue=epilogue, bias=bias,
+                       interpret=interpret)
 
 
-def _intrinsic_pallas(a, b, c, alpha, beta, plan, out_dtype, interpret=None):
-    """One kernel invocation spanning the whole problem (no grid)."""
+def _packing_fused_pallas(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
+                          epilogue="none", interpret=None):
+    """Fused-A pipeline: only B goes through the packer; A streams pack-free."""
+    plan = plan or plan_gemm(a.shape[0], a.shape[1], b.shape[1], a.dtype)
+    bp = pack_b(b, plan.bk, plan.bn, layout=plan.layout_b, interpret=interpret)
+    return gemm_packed_fused_a(a, bp, b.shape[1], c, bm=plan.bm, alpha=alpha,
+                               beta=beta, layout_b=plan.layout_b,
+                               out_dtype=out_dtype, epilogue=epilogue,
+                               bias=bias, interpret=interpret)
+
+
+def _intrinsic_pallas(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
+                      epilogue="none", interpret=None):
+    """One kernel invocation spanning the whole problem (no grid).
+
+    Block shapes are the problem dims rounded UP to the dtype's (sublane,
+    lane) multiples — an unaligned block (e.g. bm=33) would violate the MXU
+    feeding geometry on hardware even though interpret mode tolerates it.
+    """
     m, k = a.shape
     n = b.shape[1]
+    sub, lane = mdt.alignment(a.dtype)
+    bm = max(-(-m // sub) * sub, sub)
+    bk = max(-(-k // lane) * lane, lane)
+    bn = max(-(-n // lane) * lane, lane)
     out = gemm_tiled(a, b, c, alpha=alpha, beta=beta, out_dtype=out_dtype,
-                     bm=max(m, 8), bk=max(k, 128), bn=max(n, 128),
+                     bm=bm, bk=bk, bn=bn, epilogue=epilogue, bias=bias,
                      interpret=interpret)
     return out
 
 
-def _vsx_pallas(a, b, c, alpha, beta, plan, out_dtype, interpret=None):
+def _vsx_pallas(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
+                epilogue="none", interpret=None):
     plan = plan or plan_gemm(a.shape[0], a.shape[1], b.shape[1], a.dtype)
     acc = matmul_vsx_like(a, b, out_dtype=jnp.float32, interpret=interpret,
                           **plan.kwargs())
     return _epilogue(acc, c, alpha, beta,
-                     out_dtype or (c.dtype if c is not None else a.dtype))
+                     out_dtype or (c.dtype if c is not None else a.dtype),
+                     bias, epilogue)
 
 
 _JNP: Dict[str, Callable] = {
@@ -188,6 +249,7 @@ _JNP: Dict[str, Callable] = {
     "intrinsic": _intrinsic_jnp,
     "tiling": _tiling_jnp,
     "tiling_packing": _packing_jnp,
+    "tiling_packing_fused": _packing_fused_jnp,
     "vsx": _naive_jnp,      # jnp lowering of rank-1-update code is the same
     "xla": _xla,
 }
@@ -198,6 +260,7 @@ _PALLAS: Dict[str, Callable] = {
     "intrinsic": _intrinsic_pallas,
     "tiling": _tiling_pallas,
     "tiling_packing": _packing_pallas,
+    "tiling_packing_fused": _packing_fused_pallas,
     "vsx": _vsx_pallas,
     "xla": _xla,
 }
@@ -205,13 +268,11 @@ _PALLAS: Dict[str, Callable] = {
 
 def run(strategy: str, a, b, c=None, *, alpha=1.0, beta=0.0,
         plan: Optional[GemmPlan] = None, backend: str = "jnp",
-        out_dtype=None, interpret=None):
+        out_dtype=None, interpret=None, bias=None, epilogue: str = "none"):
     if strategy not in STRATEGIES:
         raise KeyError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
     out_dtype = out_dtype or (c.dtype if c is not None else a.dtype)
     table = _PALLAS if backend == "pallas" else _JNP
     fn = table[strategy]
-    if table is _PALLAS and fn not in (_naive_jnp, _pluto_jnp, _xla,
-                                       _intrinsic_jnp):
-        return fn(a, b, c, alpha, beta, plan, out_dtype, interpret=interpret)
-    return fn(a, b, c, alpha, beta, plan, out_dtype)
+    return fn(a, b, c, alpha, beta, plan, out_dtype, bias=bias,
+              epilogue=epilogue, interpret=interpret)

@@ -3,8 +3,10 @@
 Layout:
   ref.py            — pure-jnp oracles (the correctness contract)
   pack.py           — macro-level packing (paper §3.1)
-  gemm_tiled.py     — "Tiling" strategy kernel
-  gemm_packed.py    — "Tiling+Packing" strategy kernel
+  gemm_tiled.py     — "Tiling" strategy kernel (fused bias/activation epilogue)
+  gemm_packed.py    — "Tiling+Packing" kernels: gemm_packed (both operands
+                      packed) and gemm_packed_fused_a (B packed, A streamed
+                      pack-free from its natural layout)
   gemm_vsx_like.py  — generic vector-unit lowering (paper's VSX baseline)
   flash_attention.py— blocked online-softmax attention (long-context hot spot)
   ops.py            — jit'd wrappers (the dispatch surface for repro.core)

@@ -47,6 +47,47 @@ def vmem_scratch(shape, dtype):
     raise RuntimeError("pallas TPU memory spaces unavailable")
 
 
+# In-kernel epilogue table shared by every GEMM kernel: applied to the f32
+# accumulator tile in VMEM during the final grid step, before the single HBM
+# store. Must stay in sync with repro.core.epilogue.EPILOGUES (tested).
+KERNEL_EPILOGUES = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0),
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "silu": lambda x: x * jax.nn.sigmoid(x),
+    "tanh": jnp.tanh,
+}
+
+
+def split_epilogue_refs(rest, has_bias: bool):
+    """Unpack a GEMM kernel's trailing (bias?, out, acc-scratch) refs."""
+    if has_bias:
+        bias_ref, o_ref, acc_ref = rest
+    else:
+        bias_ref, (o_ref, acc_ref) = None, rest
+    return bias_ref, o_ref, acc_ref
+
+
+def bias_spec_and_operand(bias, n, bn):
+    """BlockSpec + padded [1, N] operand for a fused bias vector (3-D grid)."""
+    assert bias.shape == (n,), (bias.shape, n)
+    spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+    return spec, pad2d(bias.reshape(1, n), 1, bn)
+
+
+def finalize_gemm(acc_ref, c_ref, bias_ref, o_ref, *, alpha, beta, epilogue):
+    """Shared fused store epilogue for every GEMM kernel: alpha/beta, then
+    bias, then activation — all on the VMEM-resident f32 accumulator, then
+    the single cast-and-store to HBM."""
+    out = alpha * acc_ref[...]
+    if beta != 0:
+        out = out + beta * c_ref[...].astype(acc_ref.dtype)
+    if bias_ref is not None:
+        out = out + bias_ref[...].astype(acc_ref.dtype)  # [1,bn] broadcast
+    out = KERNEL_EPILOGUES[epilogue](out)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
 

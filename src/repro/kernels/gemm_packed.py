@@ -1,4 +1,4 @@
-"""Blocked GEMM Pallas kernel over PACKED operands — the paper's
+"""Blocked GEMM Pallas kernels over PACKED operands — the paper's
 **"Tiling+Packing"** strategy (§3.1 + §3.2 combined, Algorithm 1 in full).
 
 Operands come from ``repro.kernels.pack`` in tile-major order, so every grid
@@ -9,6 +9,21 @@ win was cache/TLB behaviour; on TPU it is strided-vs-contiguous DMA).
 Supports the paper's per-target intra-tile layouts: layout_a="col" stores A
 tiles transposed (MMA's preferred A layout) and the micro kernel contracts
 accordingly without any in-VMEM transpose.
+
+Two kernels:
+
+  * :func:`gemm_packed` — both operands pre-packed (the paper's per-call
+    pipeline: pack_a + pack_b + this kernel).
+  * :func:`gemm_packed_fused_a` — B pre-packed, A consumed *directly from its
+    natural [M,K] layout* via the BlockSpec index map (BLIS-style stream
+    packing fused into the macro loop). This removes pack_a's full HBM
+    read+write of A per call — the right pipeline when A is a per-step
+    activation and B is a load-time-packed weight (see core/layered.py's
+    ``PackedWeight``).
+
+Both kernels fuse the full epilogue (alpha/beta, ``bias``, activation from
+``KERNEL_EPILOGUES``) into the final grid step: one HBM store, no post-kernel
+elementwise ops.
 """
 from __future__ import annotations
 
@@ -18,12 +33,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import (acc_dtype_for, cdiv, default_interpret,
-                                  pad2d, pallas_kwargs, vmem_scratch)
+from repro.kernels.common import (acc_dtype_for, bias_spec_and_operand, cdiv,
+                                  default_interpret, finalize_gemm, pad2d,
+                                  pallas_kwargs, split_epilogue_refs,
+                                  vmem_scratch)
 
 
-def _packed_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, alpha, beta,
-                   k_steps, layout_a, layout_b):
+def _packed_kernel(a_ref, b_ref, c_ref, *rest, alpha, beta, k_steps,
+                   layout_a, layout_b, epilogue="none", has_bias=False):
+    bias_ref, o_ref, acc_ref = split_epilogue_refs(rest, has_bias)
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -39,10 +58,29 @@ def _packed_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, alpha, beta,
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _epilogue():
-        out = alpha * acc_ref[...]
-        if beta != 0:
-            out = out + beta * c_ref[...].astype(acc_ref.dtype)
-        o_ref[...] = out.astype(o_ref.dtype)
+        finalize_gemm(acc_ref, c_ref, bias_ref, o_ref, alpha=alpha, beta=beta,
+                      epilogue=epilogue)
+
+
+def _fused_a_kernel(a_ref, b_ref, c_ref, *rest, alpha, beta, k_steps,
+                    layout_b, epilogue="none", has_bias=False):
+    bias_ref, o_ref, acc_ref = split_epilogue_refs(rest, has_bias)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]   # [bm,bk] strided block of the NATURAL [M,K] operand
+    b = b_ref[0, 0]  # [bk,bn] ("row") or [bn,bk] ("col") pre-packed tile
+    rhs_contract = 0 if layout_b == "row" else 1
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (rhs_contract,)), ((), ())),
+        preferred_element_type=acc_ref.dtype)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        finalize_gemm(acc_ref, c_ref, bias_ref, o_ref, alpha=alpha, beta=beta,
+                      epilogue=epilogue)
 
 
 def gemm_packed(a_packed: jnp.ndarray,
@@ -56,8 +94,10 @@ def gemm_packed(a_packed: jnp.ndarray,
                 layout_a: str = "row",
                 layout_b: str = "row",
                 out_dtype=None,
+                epilogue: str = "none",
+                bias: jnp.ndarray | None = None,
                 interpret: bool | None = None) -> jnp.ndarray:
-    """C[:m,:n] <- alpha * unpack(A)@unpack(B) + beta * C.
+    """C[:m,:n] <- epilogue(alpha * unpack(A)@unpack(B) + beta * C + bias).
 
     a_packed: [Mb, Kb, bm, bk] (row) / [Mb, Kb, bk, bm] (col)
     b_packed: [Nb, Kb, bk, bn] (row) / [Nb, Kb, bn, bk] (col)
@@ -88,20 +128,97 @@ def gemm_packed(a_packed: jnp.ndarray,
     grid = (mb, nb, kb)  # K innermost: revolving accumulator, one HBM store
     ta = a_packed.shape[2:]
     tb = b_packed.shape[2:]
+    in_specs = [
+        pl.BlockSpec((1, 1) + ta, lambda i, j, kk: (i, kk, 0, 0)),
+        pl.BlockSpec((1, 1) + tb, lambda i, j, kk: (j, kk, 0, 0)),
+        pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+    ]
+    operands = [a_packed, b_packed, c_p]
+    has_bias = bias is not None
+    if has_bias:
+        spec, op = bias_spec_and_operand(bias, n, bn)
+        in_specs.append(spec)
+        operands.append(op)
     out = pl.pallas_call(
         functools.partial(_packed_kernel, alpha=alpha, beta=beta, k_steps=kb,
-                          layout_a=layout_a, layout_b=layout_b),
+                          layout_a=layout_a, layout_b=layout_b,
+                          epilogue=epilogue, has_bias=has_bias),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1) + ta, lambda i, j, kk: (i, kk, 0, 0)),
-            pl.BlockSpec((1, 1) + tb, lambda i, j, kk: (j, kk, 0, 0)),
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mb * bm, nb * bn), out_dtype),
         scratch_shapes=[vmem_scratch((bm, bn), acc_dtype)],
         **pallas_kwargs(
             interpret=interpret,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(a_packed, b_packed, c_p)
+    )(*operands)
+    return out[:m, :n]
+
+
+def gemm_packed_fused_a(a: jnp.ndarray,
+                        b_packed: jnp.ndarray,
+                        n: int,
+                        c: jnp.ndarray | None = None,
+                        *,
+                        bm: int = 128,
+                        alpha: float = 1.0,
+                        beta: float = 0.0,
+                        layout_b: str = "row",
+                        out_dtype=None,
+                        epilogue: str = "none",
+                        bias: jnp.ndarray | None = None,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Pack-free-A GEMM: C[:m,:n] <- epilogue(alpha*A@unpack(B) + beta*C + bias).
+
+    A arrives in its natural [M,K] layout and is streamed block-by-block via
+    the BlockSpec index map (a strided HBM→VMEM DMA per grid step) — no
+    tile-major copy of A is ever materialized. B must be pre-packed with
+    ``pack_b`` (typically once, at weight-load time).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    m, k = a.shape
+    nb, kb = b_packed.shape[:2]
+    if layout_b == "row":
+        bk, bn = b_packed.shape[2:]
+    else:
+        bn, bk = b_packed.shape[2:]
+    assert cdiv(k, bk) == kb, (a.shape, b_packed.shape, bk)
+    out_dtype = out_dtype or (c.dtype if c is not None else a.dtype)
+    acc_dtype = acc_dtype_for(a.dtype)
+    a_p = pad2d(a, bm, bk)
+    mb = cdiv(m, bm)
+    if c is None:
+        beta = 0
+        c_p = jnp.zeros((mb * bm, nb * bn), out_dtype)
+    else:
+        assert c.shape == (m, n)
+        c_p = pad2d(c, bm, bn)
+
+    grid = (mb, nb, kb)
+    tb = b_packed.shape[2:]
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((1, 1) + tb, lambda i, j, kk: (j, kk, 0, 0)),
+        pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+    ]
+    operands = [a_p, b_packed, c_p]
+    has_bias = bias is not None
+    if has_bias:
+        spec, op = bias_spec_and_operand(bias, n, bn)
+        in_specs.append(spec)
+        operands.append(op)
+    out = pl.pallas_call(
+        functools.partial(_fused_a_kernel, alpha=alpha, beta=beta, k_steps=kb,
+                          layout_b=layout_b, epilogue=epilogue,
+                          has_bias=has_bias),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mb * bm, nb * bn), out_dtype),
+        scratch_shapes=[vmem_scratch((bm, bn), acc_dtype)],
+        **pallas_kwargs(
+            interpret=interpret,
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(*operands)
     return out[:m, :n]

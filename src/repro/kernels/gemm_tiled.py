@@ -12,7 +12,11 @@ Micro-level faithfulness (paper §3.2, Algorithm 2):
     `llvm.matrix.multiply` analogue, lowered by Mosaic to MXU passes; the
     (bm/128)×(bn/128) MXU-tile grid inside the block is the VAccs×HAccs
     accumulator arrangement;
-  * alpha/beta epilogue is fused into the final grid step (Alg. 1 lines 15-21).
+  * the full epilogue (alpha/beta, then ``bias``, then the activation from the
+    shared ``KERNEL_EPILOGUES`` registry) is fused into the final grid step
+    (Alg. 1 lines 15-21 extended): everything is applied to the f32
+    accumulator while it is still VMEM-resident, so the output takes exactly
+    one HBM store and no post-kernel elementwise ops.
 """
 from __future__ import annotations
 
@@ -22,21 +26,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import (acc_dtype_for, cdiv, default_interpret,
-                                  pad2d, pallas_kwargs, vmem_scratch)
+from repro.kernels.common import (KERNEL_EPILOGUES, acc_dtype_for,
+                                  bias_spec_and_operand, cdiv,
+                                  default_interpret, finalize_gemm, pad2d,
+                                  pallas_kwargs, split_epilogue_refs,
+                                  vmem_scratch)
+
+_EPILOGUES = KERNEL_EPILOGUES  # back-compat alias (tests import this name)
 
 
-_EPILOGUES = {
-    "none": lambda x: x,
-    "relu": lambda x: jnp.maximum(x, 0),
-    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
-    "silu": lambda x: x * jax.nn.sigmoid(x),
-    "tanh": jnp.tanh,
-}
+def _gemm_kernel(a_ref, b_ref, c_ref, *rest, alpha, beta, k_steps,
+                 epilogue="none", has_bias=False):
+    bias_ref, o_ref, acc_ref = split_epilogue_refs(rest, has_bias)
 
-
-def _gemm_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, alpha, beta, k_steps,
-                 epilogue="none"):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -49,14 +51,8 @@ def _gemm_kernel(a_ref, b_ref, c_ref, o_ref, acc_ref, *, alpha, beta, k_steps,
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _epilogue():
-        out = alpha * acc_ref[...]
-        if beta != 0:
-            out = out + beta * c_ref[...].astype(acc_ref.dtype)
-        # Fused activation epilogue: applied in the final grid step while the
-        # accumulator tile is still VMEM-resident (beyond-paper; the paper
-        # stops at alpha/beta).
-        out = _EPILOGUES[epilogue](out)
-        o_ref[...] = out.astype(o_ref.dtype)
+        finalize_gemm(acc_ref, c_ref, bias_ref, o_ref, alpha=alpha, beta=beta,
+                      epilogue=epilogue)
 
 
 def gemm_tiled(a: jnp.ndarray,
@@ -70,8 +66,9 @@ def gemm_tiled(a: jnp.ndarray,
                bn: int = 128,
                out_dtype=None,
                epilogue: str = "none",
+               bias: jnp.ndarray | None = None,
                interpret: bool | None = None) -> jnp.ndarray:
-    """C <- epilogue(alpha * A@B + beta * C) with (bm, bk, bn) VMEM blocking."""
+    """C <- epilogue(alpha * A@B + beta * C + bias) with (bm,bk,bn) blocking."""
     if interpret is None:
         interpret = default_interpret()
     m, k = a.shape
@@ -90,20 +87,28 @@ def gemm_tiled(a: jnp.ndarray,
     mb, kb, nb = cdiv(m, bm), cdiv(k, bk), cdiv(n, bn)
     grid = (mb, nb, kb)  # K innermost: revolving VMEM accumulator
 
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+    ]
+    operands = [a_p, b_p, c_p]
+    has_bias = bias is not None
+    if has_bias:
+        spec, op = bias_spec_and_operand(bias, n, bn)
+        in_specs.append(spec)
+        operands.append(op)
+
     out = pl.pallas_call(
         functools.partial(_gemm_kernel, alpha=alpha, beta=beta, k_steps=kb,
-                          epilogue=epilogue),
+                          epilogue=epilogue, has_bias=has_bias),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mb * bm, nb * bn), out_dtype),
         scratch_shapes=[vmem_scratch((bm, bn), acc_dtype)],
         **pallas_kwargs(
             interpret=interpret,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(a_p, b_p, c_p)
+    )(*operands)
     return out[:m, :n]

@@ -13,14 +13,14 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gemm_packed import gemm_packed
+from repro.kernels.gemm_packed import gemm_packed, gemm_packed_fused_a
 from repro.kernels.gemm_tiled import gemm_tiled
 from repro.kernels.gemm_vsx_like import matmul_vsx_like
 from repro.kernels.pack import pack_a, pack_b
 
 __all__ = [
-    "tiled_matmul", "packed_matmul", "vsx_matmul", "attention",
-    "pack_a_op", "pack_b_op",
+    "tiled_matmul", "packed_matmul", "packed_matmul_fused", "vsx_matmul",
+    "attention", "pack_a_op", "pack_b_op",
 ]
 
 
@@ -44,6 +44,24 @@ def packed_matmul(a, b, c=None, *, bm=128, bk=128, bn=128,
     return gemm_packed(ap, bp, m, n, c, alpha=alpha, beta=beta,
                        layout_a=layout_a, layout_b=layout_b,
                        out_dtype=out_dtype, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "layout_b", "alpha",
+                                   "beta", "out_dtype", "epilogue",
+                                   "interpret"))
+def packed_matmul_fused(a, b, c=None, *, bias=None, bm=128, bk=128, bn=128,
+                        layout_b="row", alpha=1.0, beta=0.0, out_dtype=None,
+                        epilogue="none", interpret=None):
+    """Fused-A pipeline: pack B tile-major, stream A pack-free from [M,K].
+
+    The per-call analogue of serving's load-time-packed path (PackedWeight
+    hoists the pack_b out of this function entirely).
+    """
+    bp = pack_b(b, bk, bn, layout=layout_b, interpret=interpret)
+    return gemm_packed_fused_a(a, bp, b.shape[1], c, bm=bm, alpha=alpha,
+                               beta=beta, layout_b=layout_b,
+                               out_dtype=out_dtype, epilogue=epilogue,
+                               bias=bias, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("bm", "bk", "bn", "out_dtype", "interpret"))

@@ -94,6 +94,28 @@ def packed_matmul_ref(ap, bp, m: int, n: int, layout_a="row", layout_b="row",
     return matmul_ref(a, b, out_dtype=out_dtype)
 
 
+def fused_packed_acc_ref(a, bp, n: int, layout_b="row", bm: int = 8):
+    """Pack-free-A contraction: natural-layout A against packed B.
+
+    Returns the f32 accumulator [m, n] — the jnp lowering of
+    ``gemm_packed_fused_a`` before its epilogue. A is consumed as a strided
+    blocked view (reshape only — no tile-major copy is materialized).
+    """
+    m, k = a.shape
+    nb, kb = bp.shape[:2]
+    bk = bp.shape[2] if layout_b == "row" else bp.shape[3]
+    bn = bp.shape[3] if layout_b == "row" else bp.shape[2]
+    assert -(-k // bk) == kb, (a.shape, bp.shape)
+    ap = _pad_to(a, bm, bk)
+    mb = ap.shape[0] // bm
+    a4 = ap.reshape(mb, bm, kb, bk)  # strided view of the natural layout
+    ein_b = "jkbc" if layout_b == "row" else "jkcb"
+    acc = jnp.einsum(f"iakb,{ein_b}->iajc", a4.astype(jnp.float32),
+                     bp.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return acc.reshape(mb * bm, nb * bn)[:m, :n]
+
+
 # ---------------------------------------------------------------------------
 # Attention
 # ---------------------------------------------------------------------------

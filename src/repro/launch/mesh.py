@@ -8,18 +8,30 @@ from __future__ import annotations
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """jax.make_mesh across jax versions.
+
+    Newer jax wants explicit ``axis_types=(AxisType.Auto, ...)`` to opt out of
+    explicit-sharding mode; older releases (<= 0.4.x) have neither the kwarg
+    nor ``jax.sharding.AxisType`` and default to the same auto behaviour.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """(16,16) single pod (256 chips) or (2,16,16) two pods (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Whatever this host actually has (tests / CPU examples)."""
     n = jax.device_count()
     assert n % model_parallel == 0
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((n // model_parallel, model_parallel),
+                            ("data", "model"))

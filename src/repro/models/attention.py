@@ -15,7 +15,8 @@ from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ModelConfig
 from repro.core import gemm
-from repro.models.layers import apply_rope, chunked_attention, dense_param
+from repro.models.layers import (apply_rope, chunked_attention, dense_param,
+                                 resolve_weight)
 from repro.parallel.mesh import shard
 
 
@@ -50,9 +51,9 @@ def project_qkv(cfg: ModelConfig, p: dict, x: jnp.ndarray,
                 rope: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """x: [B,S,d] -> q [B,S,H,D], k/v [B,S,Hkv,D] (rope + qk-norm applied)."""
     b, s, _ = x.shape
-    q = gemm.linear(x, p["wq"].astype(x.dtype), p.get("bq"))
-    k = gemm.linear(x, p["wk"].astype(x.dtype), p.get("bk"))
-    v = gemm.linear(x, p["wv"].astype(x.dtype), p.get("bv"))
+    q = gemm.linear(x, resolve_weight(p["wq"], x.dtype), p.get("bq"))
+    k = gemm.linear(x, resolve_weight(p["wk"], x.dtype), p.get("bk"))
+    v = gemm.linear(x, resolve_weight(p["wv"], x.dtype), p.get("bv"))
     q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
     k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
     v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
@@ -84,7 +85,7 @@ def self_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray,
     out = out.reshape(*x.shape[:-1], cfg.q_dim)
     heads_ax = "model" if cfg.shard_attention else None
     out = shard(out, "batch", None, heads_ax)
-    out = gemm.linear(out, p["wo"].astype(x.dtype), p.get("bo"))
+    out = gemm.linear(out, resolve_weight(p["wo"], x.dtype), p.get("bo"))
     if epilogue_shard:
         # Megatron-SP epilogue: the wo contraction is TP-partial; demanding a
         # seq-sharded output reduce-scatters it into the residual stream.
@@ -119,18 +120,18 @@ def cross_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray,
                     enc_k: jnp.ndarray, enc_v: jnp.ndarray) -> jnp.ndarray:
     """Decoder cross-attention against precomputed encoder K/V [B,Se,Hkv,D]."""
     b, s, _ = x.shape
-    q = gemm.linear(x, p["wq"].astype(x.dtype), p.get("bq"))
+    q = gemm.linear(x, resolve_weight(p["wq"], x.dtype), p.get("bq"))
     q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
     out = chunked_attention(q, enc_k, enc_v, causal=False)
     out = out.reshape(b, s, cfg.q_dim)
-    return gemm.linear(out, p["wo"].astype(x.dtype), p.get("bo"))
+    return gemm.linear(out, resolve_weight(p["wo"], x.dtype), p.get("bo"))
 
 
 def encode_kv(cfg: ModelConfig, p: dict, enc_out: jnp.ndarray):
     """Precompute cross-attention K/V from encoder output (once per request)."""
     b, se, _ = enc_out.shape
-    k = gemm.linear(enc_out, p["wk"].astype(enc_out.dtype), p.get("bk"))
-    v = gemm.linear(enc_out, p["wv"].astype(enc_out.dtype), p.get("bv"))
+    k = gemm.linear(enc_out, resolve_weight(p["wk"], enc_out.dtype), p.get("bk"))
+    v = gemm.linear(enc_out, resolve_weight(p["wv"], enc_out.dtype), p.get("bv"))
     return (k.reshape(b, se, cfg.num_kv_heads, cfg.head_dim),
             v.reshape(b, se, cfg.num_kv_heads, cfg.head_dim))
 
@@ -186,5 +187,5 @@ def decode_attention(cfg: ModelConfig, p: dict, x: jnp.ndarray,
                             k_positions=k_positions,
                             kv_valid=kv_valid, chunk=1)
     out = out.reshape(b, 1, cfg.q_dim)
-    out = gemm.linear(out, p["wo"].astype(x.dtype), p.get("bo"))
+    out = gemm.linear(out, resolve_weight(p["wo"], x.dtype), p.get("bo"))
     return out, {"k": k_cache, "v": v_cache}

@@ -1,7 +1,12 @@
 """Shared model building blocks: norms, RoPE, MLPs, embeddings, chunked attention.
 
 Every dense contraction routes through ``repro.core.gemm.linear`` — the
-paper's layered GEMM is the framework's single matmul entry point.
+paper's layered GEMM is the framework's single matmul entry point. Weights may
+be raw ``[K,N]`` arrays (training) or :class:`repro.core.PackedWeight` (tile-
+major, packed once at load time by :func:`pack_model_params`): the packed form
+routes through the pack-free-A fused kernel with bias and activation applied
+in the kernel's store epilogue, so the serving path has no per-call packing
+and no post-kernel elementwise ops.
 """
 from __future__ import annotations
 
@@ -13,7 +18,8 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ModelConfig
-from repro.core import gemm
+from repro.core import PackedWeight, gemm
+from repro.kernels import ref as kref
 from repro.parallel.mesh import shard
 
 Init = jax.nn.initializers.normal(stddev=0.02)
@@ -21,6 +27,79 @@ Init = jax.nn.initializers.normal(stddev=0.02)
 
 def dense_param(key, in_dim: int, out_dim: int, dtype=jnp.float32):
     return Init(key, (in_dim, out_dim), dtype)
+
+
+def resolve_weight(w, dtype):
+    """Dense-weight accessor: PackedWeight passes through (it was packed in
+    the compute dtype at load time); raw arrays are cast to the compute dtype."""
+    if isinstance(w, PackedWeight):
+        return w
+    return w.astype(dtype)
+
+
+# Dense [K,N] weight names eligible for load-time packing, across every
+# architecture family (attention/mlp/ssm). MoE expert stacks contract via
+# einsum (grouped dims) and stay unpacked — see ROADMAP "Open items".
+DENSE_WEIGHT_KEYS = frozenset(
+    {"wq", "wk", "wv", "wo", "wg", "wu", "wi", "in_proj", "out_proj"})
+
+
+def _pack_dense(w: jnp.ndarray, compute) -> PackedWeight:
+    """Pack one dense weight (2-D, or [L,K,N] scan-stacked) tile-major.
+
+    Uses the jnp packer on every backend: this runs once at load time, and the
+    buffer layout is identical to the Pallas packer's. Stacked weights pack
+    per layer under vmap so ``jax.lax.scan`` can slice the leading axis.
+    """
+    w = w.astype(compute)
+    if w.ndim == 2:
+        return PackedWeight.pack(w, backend="jnp")
+    assert w.ndim == 3, w.shape  # [L, K, N] (vmap-stacked layers)
+    k, n = w.shape[1:]
+    plan = gemm.plan_gemm(1024, k, n, jnp.dtype(w.dtype).name)
+    packed = jax.vmap(
+        lambda wl: kref.pack_b_ref(wl, plan.bk, plan.bn, plan.layout_b))(w)
+    return PackedWeight(packed=packed, k=k, n=n, plan=plan)
+
+
+def pack_model_params(cfg: ModelConfig, params: dict, *, dtype=None) -> dict:
+    """Load-time packing pass: replace every dense weight with a PackedWeight.
+
+    Returns a new params tree in which each ``DENSE_WEIGHT_KEYS`` leaf (float
+    dtypes only — int8 streams keep their narrow-HBM path) is tile-major
+    packed in the compute dtype, and ``head_packed`` holds the packed LM head
+    ([d_model, vocab], from the tied embedding or the separate head table).
+    Serving engines call this once at weight-load; every subsequent
+    prefill/decode step then runs the pack-free-A fused kernel.
+    """
+    compute = jnp.dtype(dtype or cfg.compute_dtype)
+
+    def walk(tree, packing=True):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for key, val in tree.items():
+            # MoE expert stacks ([E,K,N], +leading L when scan-stacked) share
+            # the dense key names but contract via grouped einsum — skip the
+            # whole subtree (ROADMAP open item).
+            sub_packing = packing and key != "moe"
+            if (packing and sub_packing and key in DENSE_WEIGHT_KEYS
+                    and hasattr(val, "ndim") and val.ndim in (2, 3)
+                    and jnp.issubdtype(val.dtype, jnp.floating)):
+                out[key] = _pack_dense(val, compute)
+            else:
+                out[key] = walk(val, sub_packing)
+        return out
+
+    out = walk(params)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["head"]["table"])
+    out["head_packed"] = _pack_dense(jnp.asarray(table).T, compute)
+    if not cfg.tie_embeddings:
+        # lm_logits always prefers head_packed; keeping the raw untied table
+        # would hold the model's largest matrix in memory twice.
+        out.pop("head", None)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -120,16 +199,18 @@ def mlp_params(cfg: ModelConfig, key) -> dict:
 def apply_mlp(cfg: ModelConfig, p: dict, x: jnp.ndarray,
               epilogue_shard: bool = True) -> jnp.ndarray:
     if cfg.mlp_type in ("swiglu", "geglu"):
-        act = jax.nn.silu if cfg.mlp_type == "swiglu" else (
-            lambda v: jax.nn.gelu(v, approximate=True))
-        gate = gemm.linear(x, p["wg"].astype(x.dtype), p.get("bi"))
-        up = gemm.linear(x, p["wu"].astype(x.dtype))
-        h = act(gate) * up
+        act = "silu" if cfg.mlp_type == "swiglu" else "gelu"
+        # Activation rides as the GEMM's fused epilogue (in-kernel on the
+        # Pallas path; XLA-fused on the jnp path) — no post-GEMM op.
+        gate = gemm.linear(x, resolve_weight(p["wg"], x.dtype), p.get("bi"),
+                           epilogue=act)
+        up = gemm.linear(x, resolve_weight(p["wu"], x.dtype))
+        h = gate * up
     else:
-        h = gemm.linear(x, p["wi"].astype(x.dtype), p.get("bi"))
-        h = jax.nn.gelu(h, approximate=True)
+        h = gemm.linear(x, resolve_weight(p["wi"], x.dtype), p.get("bi"),
+                        epilogue="gelu")
     h = shard(h, "batch", None, "model")
-    out = gemm.linear(h, p["wo"].astype(x.dtype), p.get("bo"))
+    out = gemm.linear(h, resolve_weight(p["wo"], x.dtype), p.get("bo"))
     if not epilogue_shard:
         return out  # TP-partial: caller fuses before one collective (H5)
     # Megatron-SP epilogue (see attention.self_attention): reduce-scatter the
@@ -160,10 +241,13 @@ def embed_tokens(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
 
 
 def lm_logits(cfg: ModelConfig, params: dict, x: jnp.ndarray) -> jnp.ndarray:
-    table = (params["embed"]["table"] if cfg.tie_embeddings
-             else params["head"]["table"])
+    head = params.get("head_packed")  # load-time-packed LM head (serving)
+    if head is None:
+        table = (params["embed"]["table"] if cfg.tie_embeddings
+                 else params["head"]["table"])
+        head = table.T.astype(x.dtype)
     # logits keep a full-precision cross-shard reduce (softmax sensitivity)
-    logits = gemm.linear(x, table.T.astype(x.dtype), accum="f32")
+    logits = gemm.linear(x, head, accum="f32")
     return shard(logits.astype(jnp.float32), "batch", None, "model")
 
 

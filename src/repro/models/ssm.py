@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import gemm
-from repro.models.layers import dense_param, rms_norm_gated
+from repro.models.layers import dense_param, resolve_weight, rms_norm_gated
 from repro.parallel.mesh import shard
 
 
@@ -123,7 +123,7 @@ def apply_ssm(cfg: ModelConfig, p: dict, x: jnp.ndarray,
     bsz, s, _ = x.shape
     di, n, nh, hp = (cfg.d_inner, cfg.ssm_state_size, cfg.ssm_num_heads,
                      cfg.ssm_head_dim)
-    proj = gemm.linear(x, p["in_proj"].astype(x.dtype))
+    proj = gemm.linear(x, resolve_weight(p["in_proj"], x.dtype))
     z, xin, b, c, dt = jnp.split(proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n],
                                  axis=-1)
     conv_in = jnp.concatenate([xin, b, c], axis=-1)
@@ -137,7 +137,7 @@ def apply_ssm(cfg: ModelConfig, p: dict, x: jnp.ndarray,
     y = y.reshape(bsz, s, di)
     y = rms_norm_gated(y, z.astype(jnp.float32), p["norm"])
     y = shard(y, "batch", None, "model")
-    out = gemm.linear(y.astype(x.dtype), p["out_proj"].astype(x.dtype))
+    out = gemm.linear(y.astype(x.dtype), resolve_weight(p["out_proj"], x.dtype))
     if return_state:
         w = cfg.ssm_conv_width - 1
         tail = conv_in.astype(jnp.float32)[:, -w:]
@@ -167,7 +167,7 @@ def decode_ssm(cfg: ModelConfig, p: dict, x: jnp.ndarray,
     bsz = x.shape[0]
     di, n, nh, hp = (cfg.d_inner, cfg.ssm_state_size, cfg.ssm_num_heads,
                      cfg.ssm_head_dim)
-    proj = gemm.linear(x[:, 0], p["in_proj"].astype(x.dtype))
+    proj = gemm.linear(x[:, 0], resolve_weight(p["in_proj"], x.dtype))
     z, xin, b, c, dt = jnp.split(proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n],
                                  axis=-1)
     conv_in = jnp.concatenate([xin, b, c], axis=-1).astype(jnp.float32)
@@ -183,5 +183,5 @@ def decode_ssm(cfg: ModelConfig, p: dict, x: jnp.ndarray,
     y = jnp.einsum("bhpn,bn->bhp", new_state, c) + p["D"][None, :, None] * xh
     y = y.reshape(bsz, di)
     y = rms_norm_gated(y, z.astype(jnp.float32), p["norm"])
-    out = gemm.linear(y.astype(x.dtype), p["out_proj"].astype(x.dtype))
+    out = gemm.linear(y.astype(x.dtype), resolve_weight(p["out_proj"], x.dtype))
     return out[:, None], {"state": new_state, "conv": window[:, 1:]}

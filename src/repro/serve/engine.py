@@ -6,8 +6,12 @@ Production posture:
   * requests are served in fixed-size batches with left-padded prompts
     (continuous batching's static-batch ancestor — slot recycling is a
     documented extension point);
-  * LM-head weights can be served pre-packed (``PackedWeight``) — load-time
-    packing amortized over every decode step (see core/layered.py).
+  * with ``ServeConfig.pack_weights=True`` every dense weight (attention,
+    MLP, SSM projections AND the LM head) is tile-major packed ONCE at
+    engine construction (``models.layers.pack_model_params``). Each
+    prefill/decode step then runs the pack-free-A fused GEMM kernel: no
+    per-call packing, bias/activation applied in the kernel's store epilogue
+    (see core/layered.py's PackedWeight).
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.models.layers import pack_model_params
 
 
 @dataclasses.dataclass
@@ -28,11 +33,15 @@ class ServeConfig:
     temperature: float = 0.0      # 0 => greedy
     cache_dtype: str = "float32"
     seed: int = 0
+    pack_weights: bool = False    # load-time tile-major packing of all
+                                  # dense weights (serving fast path)
 
 
 class Engine:
     def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
         self.model = model
+        if cfg.pack_weights:
+            params = pack_model_params(model.cfg, params)
         self.params = params
         self.cfg = cfg
         self._prefill = jax.jit(

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.gemm_packed import gemm_packed

@@ -4,7 +4,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypo import given, settings, st
 
 from repro.configs import reduced_config
 from repro.models.moe import _capacity, apply_moe, moe_params, route

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.pack import pack_a, pack_b

@@ -2,7 +2,7 @@
 must hold for every plan the solver emits — property-based."""
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo import given, settings, st
 
 from repro.core import dtypes as mdt
 from repro.core.planner import GemmPlan, plan_gemm, should_pack

@@ -19,10 +19,12 @@ def _mesh22():
 
 
 def _abstract_mesh(shape, names):
-    devs = np.asarray(jax.devices() * int(np.prod(shape)))[:int(np.prod(shape))]
-    # Mesh over repeated devices is invalid; use jax.sharding.AbstractMesh
+    # Mesh over repeated devices is invalid; use jax.sharding.AbstractMesh.
     from jax.sharding import AbstractMesh
-    return AbstractMesh(tuple(shape), tuple(names))
+    try:
+        return AbstractMesh(tuple(shape), tuple(names))
+    except TypeError:  # older jax: one shape_tuple of (name, size) pairs
+        return AbstractMesh(tuple(zip(names, shape)))
 
 
 def test_logical_spec_divisibility_fallback():

@@ -27,8 +27,8 @@ def _data(rng, b=2, s=32, h=4, hkv=2, d=16):
 
 def test_matches_full_attention_oracle(rng):
     q, k, v, kpos, qpos = _data(rng)
-    mesh = jax.make_mesh((jax.device_count(),), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((jax.device_count(),), ("model",))
     got = sp_decode_attention(q, k, v, kpos, qpos, mesh=mesh)
     want = attention_ref(q[:, None], k, v, causal=True)[:, 0]
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -38,8 +38,8 @@ def test_matches_full_attention_oracle(rng):
 def test_window_and_invalid_slots(rng):
     q, k, v, kpos, qpos = _data(rng)
     kpos = kpos.at[:, :4].set(-1)  # unwritten ring slots
-    mesh = jax.make_mesh((jax.device_count(),), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((jax.device_count(),), ("model",))
     got = sp_decode_attention(q, k, v, kpos, qpos, mesh=mesh, window=8)
     want = ref_decode_attention(q, k, v, kpos, qpos, window=8)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -62,8 +62,8 @@ def test_eight_way_seq_sharding_subprocess():
         v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
         kpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
         qpos = jnp.full((B,), S - 1, jnp.int32)
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((8,), ("model",))
         got = jax.jit(lambda *a: sp_decode_attention(
             *a, mesh=mesh, window=24))(q, k, v, kpos, qpos)
         want = ref_decode_attention(q, k, v, kpos, qpos, window=24)

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypo import given, settings, st
 
 from repro.core.syr2k import syr2k_flops, syr2k_layered, syr2k_ref
 
