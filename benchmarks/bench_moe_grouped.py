@@ -1,0 +1,152 @@
+"""MoE expert-contraction bench: grouped-packed pipeline vs batched einsum.
+
+The serving step's hottest GEMMs — the three [E,·,·] expert contractions in
+``models/moe.py`` — measured two ways at mixtral-8x22b / llama4-scout expert
+geometry (prefill-shaped per-expert capacity):
+
+  einsum          the historical lowering exactly as the unpacked model runs
+                  it per step: cast the f32 master stacks to the compute
+                  dtype (``cast_layer_params`` pays this every call), then
+                  gate/up/down batched einsums with the silu*mul in between.
+  grouped_packed  the layered pipeline: GroupedPackedWeight stacks packed
+                  tile-major ONCE at load time (outside the timer, in the
+                  compute dtype), gate/up fused into one silu-gate pass,
+                  A streamed pack-free.
+
+Times are CPU observations on the jnp backend in bfloat16 (the models'
+compute dtype) at bandwidth-preserving scaled shapes (d_model/d_ff divided by
+``scale``; expert count, top-k and capacity kept exact); the analytic
+weight-traffic columns are at FULL model scale. Emits
+``BENCH_moe_grouped.json`` at the repo root (``REPRO_BENCH_SMOKE=1`` shrinks
+the shapes and writes ``BENCH_moe_grouped.smoke.json``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import GroupedPackedWeight
+from repro.core.gemm import grouped_linear, grouped_silu_gate
+from repro.models.moe import GROUP_SIZE, _capacity
+
+COMPUTE = jnp.bfloat16
+
+
+def _artifact_path() -> pathlib.Path:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    name = ("BENCH_moe_grouped.smoke.json"
+            if os.environ.get("REPRO_BENCH_SMOKE") else
+            "BENCH_moe_grouped.json")
+    return root / name
+
+
+def _configs():
+    # (name, E, top_k, d_model, d_ff, scale): scale divides d/f for the
+    # CPU-runnable measurement; E/top-k/capacity stay exact so the grouped
+    # structure (expert loop, per-expert M) is the real one.
+    if os.environ.get("REPRO_BENCH_SMOKE"):
+        return [("mixtral_8x22b", 8, 2, 6144, 16384, 64),
+                ("llama4_scout", 16, 1, 5120, 8192, 64)]
+    return [("mixtral_8x22b", 8, 2, 6144, 16384, 8),
+            ("llama4_scout", 16, 1, 5120, 8192, 8)]
+
+
+class _Cfg:
+    def __init__(self, e, k):
+        self.num_experts = e
+        self.num_experts_per_tok = k
+        self.capacity_factor = 1.25
+
+
+def _full_scale_bytes(e, cap, d, f) -> dict:
+    """Analytic per-step weight + activation traffic (bytes) at FULL scale."""
+    w_elems = e * d * f * 3                  # wg + wu + wo stacks
+    a_elems = e * cap * d                    # the [E,C,d] capacity tensor
+    return {
+        # unpacked: read f32 master + write compute copy + GEMM reads the
+        # copy back (the per-call cast_layer_params bill), A read twice by
+        # the separate gate/up einsums.
+        "einsum": w_elems * (4 + 2 + 2) + a_elems * 2 * 2,
+        # grouped-packed: weights stream once from the load-time-packed
+        # compute-dtype stack; the fused silu-gate kernel reads A once.
+        "grouped_packed": w_elems * 2 + a_elems * 2,
+    }
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    rows = []
+    for name, e, top_k, d_full, f_full, scale in _configs():
+        d, f = d_full // scale, f_full // scale
+        cap = _capacity(min(GROUP_SIZE, 2048), _Cfg(e, top_k))
+        if os.environ.get("REPRO_BENCH_SMOKE"):
+            cap = min(cap, 64)
+        x = jnp.asarray(rng.normal(size=(e, cap, d)), COMPUTE)
+        wg = jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32)
+        wu = jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32)
+        wo = jnp.asarray(rng.normal(size=(e, f, d)), jnp.float32)
+
+        @jax.jit
+        def einsum_step(x, wg, wu, wo):
+            # the unpacked model's per-step pipeline (moe.apply_moe pre-pack):
+            # per-call master->compute cast, then the three batched einsums.
+            wg, wu, wo = (w.astype(x.dtype) for w in (wg, wu, wo))
+            gate = jnp.einsum("emk,ekn->emn", x, wg)
+            up = jnp.einsum("emk,ekn->emn", x, wu)
+            h = jax.nn.silu(gate) * up
+            return jnp.einsum("emf,efk->emk", h, wo)
+
+        # load-time packing (outside the timer — paid once per weight load)
+        pg = GroupedPackedWeight.pack(wg.astype(COMPUTE), m_hint=cap,
+                                      n_b_streams=2, backend="jnp")
+        pu = GroupedPackedWeight.pack(wu.astype(COMPUTE), m_hint=cap,
+                                      n_b_streams=2, backend="jnp")
+        po = GroupedPackedWeight.pack(wo.astype(COMPUTE), m_hint=cap,
+                                      backend="jnp")
+
+        @jax.jit
+        def grouped_step(x):
+            h = grouped_silu_gate(x, pg, pu)
+            return grouped_linear(h, po)
+
+        t_einsum = time_fn(einsum_step, x, wg, wu, wo)
+        t_grouped = time_fn(grouped_step, x)
+        hbm = _full_scale_bytes(e, _capacity(2048, _Cfg(e, top_k)),
+                                d_full, f_full)
+        emit(f"moe_einsum_{name}", t_einsum,
+             f"E={e};C={cap};d={d};f={f}")
+        emit(f"moe_grouped_packed_{name}", t_grouped,
+             f"speedup_vs_einsum={t_einsum / t_grouped:.2f}x;"
+             f"full_scale_w_bytes={hbm['grouped_packed']}")
+        rows.append({
+            "name": name,
+            "backend": "jnp",
+            "dtype": "bfloat16",
+            "e": e,
+            "top_k": top_k,
+            "c_per_expert": cap,
+            "d_model": d,
+            "d_ff": f,
+            "scale": scale,
+            "t_einsum_us": t_einsum,
+            "t_grouped_packed_us": t_grouped,
+            "speedup_grouped": t_einsum / t_grouped,
+            "full_scale_hbm_bytes_einsum": hbm["einsum"],
+            "full_scale_hbm_bytes_grouped": hbm["grouped_packed"],
+        })
+
+    artifact = _artifact_path()
+    artifact.write_text(json.dumps(
+        {"bench": "moe_grouped", "unit_time": "us_per_call",
+         "results": rows}, indent=2) + "\n")
+    print(f"# wrote {artifact}")
+
+
+if __name__ == "__main__":
+    main()

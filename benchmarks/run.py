@@ -6,14 +6,18 @@
   bench_packing_overhead  — §4.2/4.3 packing cost decomposition
                             (+PackedWeight, +fused-A pipeline; writes
                             BENCH_fused_gemm.json)
+  bench_moe_grouped       — grouped-packed MoE expert contraction vs the
+                            batched-einsum baseline (writes
+                            BENCH_moe_grouped.json)
   bench_syr2k             — §5.1 SYR2K extension of the layered strategy
   bench_models            — end-to-end model step times (CPU observation)
   bench_roofline          — TPU-target roofline rows from the dry-run
 
 Prints ``name,us_per_call,derived`` CSV.
 
-``--smoke``: quick CI mode — runs only the packing/fused bench on shrunken
-sizes (sets REPRO_BENCH_SMOKE=1) so the scripts can't silently rot.
+``--smoke``: quick CI mode — runs only the packing/fused and grouped-MoE
+benches on shrunken sizes (sets REPRO_BENCH_SMOKE=1) so the scripts can't
+silently rot.
 """
 import os
 import pathlib
@@ -32,17 +36,17 @@ def main() -> None:
     # Import after the env flag so modules can read it at run time.
     from benchmarks import (bench_dtypes, bench_gemm_strategies,
                             bench_micro_lowering, bench_models,
-                            bench_packing_overhead, bench_roofline,
-                            bench_syr2k)
+                            bench_moe_grouped, bench_packing_overhead,
+                            bench_roofline, bench_syr2k)
     from benchmarks.common import header
 
     header()
     if smoke:
-        modules = [bench_packing_overhead]
+        modules = [bench_packing_overhead, bench_moe_grouped]
     else:
         modules = [bench_micro_lowering, bench_dtypes, bench_packing_overhead,
-                   bench_syr2k, bench_gemm_strategies, bench_models,
-                   bench_roofline]
+                   bench_moe_grouped, bench_syr2k, bench_gemm_strategies,
+                   bench_models, bench_roofline]
     failures = 0
     for mod in modules:
         try:

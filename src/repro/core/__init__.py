@@ -3,7 +3,12 @@ service — planner (macro), kernels behind a clean intrinsic-like interface
 (micro), strategy registry, and the single matmul dispatch point every model
 in this framework uses.
 """
-from repro.core.gemm import linear, matmul, plan_gemm, resolve_strategy  # noqa: F401
-from repro.core.layered import LayeredGemm, PackedWeight  # noqa: F401
-from repro.core.planner import GemmPlan, choose_strategy, should_pack  # noqa: F401
-from repro.core.strategy import STRATEGIES, run as run_strategy  # noqa: F401
+from repro.core.gemm import (grouped_linear, grouped_silu_gate, linear,  # noqa: F401
+                             matmul, plan_gemm, resolve_strategy)
+from repro.core.layered import (GroupedPackedWeight, LayeredGemm,  # noqa: F401
+                                PackedWeight)
+from repro.core.planner import (GemmPlan, choose_strategy,  # noqa: F401
+                                plan_grouped_gemm, should_pack)
+from repro.core.strategy import (GROUPED_STRATEGIES, STRATEGIES,  # noqa: F401
+                                 run as run_strategy,
+                                 run_grouped as run_grouped_strategy)

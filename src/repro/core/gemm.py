@@ -19,6 +19,11 @@ integration tests to force the Pallas path inside jitted models).
 the weight was packed tile-major once at load time, so every call runs the
 pack-free-A fused kernel with bias + activation applied in the kernel's final
 grid step — no per-call packing, no post-kernel elementwise ops.
+
+``grouped_linear`` / ``grouped_silu_gate`` are the batched-expert analogues:
+every MoE expert contraction ([*lead, E, M, K] against an [E, K, N] stack or
+a load-time-packed :class:`GroupedPackedWeight`) routes through them, with
+the gate/up einsum pair fused into one silu-gate kernel pass.
 """
 from __future__ import annotations
 
@@ -58,6 +63,11 @@ def resolve_strategy(m: int, k: int, n: int, dtype, strategy: str = "auto") -> s
 def _is_packed_weight(w) -> bool:
     from repro.core.layered import PackedWeight  # local: layered imports us
     return isinstance(w, PackedWeight)
+
+
+def _is_grouped_packed_weight(w) -> bool:
+    from repro.core.layered import GroupedPackedWeight  # local (cycle)
+    return isinstance(w, GroupedPackedWeight)
 
 
 def matmul(a: jnp.ndarray, b, c: Optional[jnp.ndarray] = None, *,
@@ -142,5 +152,119 @@ def linear(x: jnp.ndarray, w, bias: Optional[jnp.ndarray] = None,
     return y.reshape(*lead, n)
 
 
-__all__ = ["matmul", "linear", "resolve_strategy", "default_backend",
+# ---------------------------------------------------------------------------
+# Grouped (batched-expert) entry points — the MoE contraction surface
+# ---------------------------------------------------------------------------
+
+def _fold_expert_lead(x: jnp.ndarray):
+    """[*lead, E, M, K] -> ([E, lead*M, K], restore_fn)."""
+    lead = x.shape[:-3]
+    e, m, k = x.shape[-3:]
+    x3 = jnp.moveaxis(x, -3, 0).reshape(e, -1, k)
+
+    def restore(y):
+        n = y.shape[-1]
+        return jnp.moveaxis(y.reshape((e,) + lead + (m, n)), 0, -3)
+
+    return x3, restore
+
+
+def resolve_grouped_strategy(e: int, m: int, k: int, n: int, dtype,
+                             strategy: str = "auto") -> str:
+    """Grouped analogue of :func:`resolve_strategy`.
+
+    An explicit ``strategy`` always wins. The env override is consulted only
+    for ``"auto"`` and only when it names a *grouped* strategy (a dense-path
+    value like ``tiling`` forced by the integration tests must not silently
+    re-route the grouped contractions). Auto on TPU crosses over to the
+    grouped kernel at ``should_pack(group=E)`` shapes — B resident
+    per-expert, per-call stack packing amortized like the 2-D fused path —
+    and stays on the batched einsum elsewhere.
+    """
+    if strategy != "auto":
+        return strategy
+    env = os.environ.get(_ENV_STRATEGY)
+    if env in strat.GROUPED_STRATEGIES:
+        return env
+    if jax.default_backend() == "tpu" and should_pack(
+            m, k, n, dtype, fused=True, group=e):
+        return "grouped_packed"
+    return "grouped_einsum"
+
+
+def grouped_linear(x: jnp.ndarray, w, bias: Optional[jnp.ndarray] = None, *,
+                   strategy: str = "auto", backend: Optional[str] = None,
+                   out_dtype=None, epilogue: str = "none") -> jnp.ndarray:
+    """out[..., e, m, :] = epilogue(x[..., e, m, :] @ w[e] + bias[e]).
+
+    The grouped analogue of :func:`linear`: one batch of per-expert GEMMs
+    sharing a single dispatch point. ``x``: [*lead, E, M, K] (the MoE path
+    passes its [G, E, C, d] capacity tensor directly); ``w``: a raw [E, K, N]
+    expert stack or a load-time-packed :class:`GroupedPackedWeight`.
+
+    Raw weights on the einsum strategy contract WITHOUT folding the leading
+    dims (the batched einsum keeps GSPMD's sharding choices intact — see the
+    :func:`linear` rematerialization caveat); kernel strategies fold the
+    leading dims into the per-expert M. The MoE model path therefore pins
+    ``strategy="grouped_einsum"`` for raw weights (training keeps the exact
+    historical lowering) and reaches the kernel by load-time packing; auto
+    only crosses a raw weight over on TPU at grouped-crossover shapes.
+    """
+    if _is_grouped_packed_weight(w):
+        x3, restore = _fold_expert_lead(x)
+        return restore(w.matmul(x3, bias=bias, epilogue=epilogue,
+                                out_dtype=out_dtype or x.dtype,
+                                backend=backend))
+    e, m, k = x.shape[-3:]
+    n = w.shape[-1]
+    lead = int(jnp.size(x) // max(e * m * k, 1))
+    s = resolve_grouped_strategy(e, lead * m, k, n, x.dtype, strategy)
+    if s == "grouped_einsum":
+        acc = jnp.einsum("...emk,ekn->...emn", x, w)
+        return strat.grouped_epilogue(acc, None, bias, epilogue,
+                                      out_dtype or x.dtype)
+    x3, restore = _fold_expert_lead(x)
+    return restore(strat.run_grouped(s, x3, w, backend=backend
+                                     or default_backend(), bias=bias,
+                                     epilogue=epilogue,
+                                     out_dtype=out_dtype or x.dtype))
+
+
+def grouped_silu_gate(x: jnp.ndarray, wg, wu, *,
+                      strategy: str = "auto", backend: Optional[str] = None,
+                      out_dtype=None) -> jnp.ndarray:
+    """silu(x @ wg) * (x @ wu), per expert — the fused MoE gate/up pair.
+
+    ``x``: [*lead, E, M, K]; ``wg``/``wu``: raw [E, K, N] stacks or a
+    :class:`GroupedPackedWeight` pair packed with ``n_b_streams=2``. On the
+    kernel path both packed stacks stream against ONE A read with the
+    silu*mul applied on the VMEM gate accumulator (one kernel, one store);
+    the einsum lowering computes the matching fused jnp expression so every
+    backend agrees.
+    """
+    gp, up = _is_grouped_packed_weight(wg), _is_grouped_packed_weight(wu)
+    if gp != up:
+        raise ValueError("gate/up pair must be both packed or both raw")
+    if gp:
+        x3, restore = _fold_expert_lead(x)
+        return restore(wg.silu_gate(wu, x3, out_dtype=out_dtype or x.dtype,
+                                    backend=backend))
+    e, m, k = x.shape[-3:]
+    n = wg.shape[-1]
+    lead = int(jnp.size(x) // max(e * m * k, 1))
+    s = resolve_grouped_strategy(e, lead * m, k, n, x.dtype, strategy)
+    if s == "grouped_einsum":
+        gate = jnp.einsum("...emk,ekn->...emn", x, wg)
+        upp = jnp.einsum("...emk,ekn->...emn", x, wu)
+        return strat.grouped_epilogue(gate, upp, None, "silu_gate",
+                                      out_dtype or x.dtype)
+    x3, restore = _fold_expert_lead(x)
+    return restore(strat.run_grouped(s, x3, wg, b2=wu, backend=backend
+                                     or default_backend(),
+                                     epilogue="silu_gate",
+                                     out_dtype=out_dtype or x.dtype))
+
+
+__all__ = ["matmul", "linear", "grouped_linear", "grouped_silu_gate",
+           "resolve_strategy", "resolve_grouped_strategy", "default_backend",
            "plan_gemm", "GemmPlan", "choose_strategy", "should_pack"]

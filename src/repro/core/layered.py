@@ -14,6 +14,11 @@ weight once at load time and each layer's slice flows through ``jax.lax.scan``
 like any other array. Its :meth:`matmul` runs the pack-free-A fused kernel
 (``gemm_packed_fused_a``): A streams from its natural layout, and bias +
 activation are applied in the kernel's final grid step.
+
+:class:`GroupedPackedWeight` extends the same idea one dimension: a stacked
+expert weight [E, K, N] (MoE) is packed per-expert into one tile-major stack
+and contracted by ``gemm_grouped_packed`` with the expert axis outermost on
+the kernel grid — including the fused silu-gate pair for MoE gate/up.
 """
 from __future__ import annotations
 
@@ -27,10 +32,12 @@ from repro.core import dtypes as mdt
 from repro.core import strategy as strat
 from repro.core.epilogue import apply_epilogue
 from repro.core.gemm import default_backend
-from repro.core.planner import GemmPlan, choose_strategy, plan_gemm
+from repro.core.planner import (GemmPlan, choose_strategy, plan_gemm,
+                                plan_grouped_gemm)
 from repro.kernels import ref
+from repro.kernels.gemm_grouped import gemm_grouped_packed
 from repro.kernels.gemm_packed import gemm_packed_fused_a
-from repro.kernels.pack import pack_b
+from repro.kernels.pack import pack_b, pack_b_grouped
 
 
 @dataclasses.dataclass
@@ -132,3 +139,139 @@ def _packed_weight_unflatten(aux, children):
 
 jax.tree_util.register_pytree_node(PackedWeight, _packed_weight_flatten,
                                    _packed_weight_unflatten)
+
+
+@dataclasses.dataclass
+class GroupedPackedWeight:
+    """A stacked expert weight [E, K, N] stored pre-packed tile-major.
+
+    The grouped extension of :class:`PackedWeight`: every expert's matrix is
+    packed with the same plan into one [E, Nb, Kb, bk, bn] buffer, paid once
+    at load time and consumed by ``gemm_grouped_packed`` with the expert axis
+    as the outermost grid dimension. Registered as a pytree node (the packed
+    stack is the leaf), so scan-stacked MoE layers ([L, E, K, N] at rest)
+    slice through ``jax.lax.scan`` like any other parameter leaf.
+
+    ``n_b_streams=2`` at pack time reserves VMEM for the fused silu-gate
+    kernel's second B stream + accumulator — use it for gate/up pairs so
+    both weights share one silu-gate-feasible plan.
+    """
+
+    packed: jnp.ndarray     # [E, Nb, Kb, bk, bn] (+ leading stack dims)
+    e: int
+    k: int
+    n: int
+    plan: GemmPlan
+
+    @classmethod
+    def pack(cls, w: jnp.ndarray, *, m_hint: int = 1024,
+             plan: Optional[GemmPlan] = None,
+             n_b_streams: int = 1,
+             backend: Optional[str] = None) -> "GroupedPackedWeight":
+        """w: [E, K, N], or [L, E, K, N] for scan-stacked MoE layers."""
+        assert w.ndim in (3, 4), w.shape
+        e, k, n = w.shape[-3:]
+        plan = plan or plan_grouped_gemm(
+            e, m_hint, k, n, jnp.dtype(w.dtype).name,
+            n_b_streams=n_b_streams)
+        be = backend or default_backend()
+        if w.ndim == 4:
+            # Load-time packing of the whole layer stack (jnp packer: runs
+            # once, identical buffer layout to the Pallas packer's).
+            packed = jax.vmap(lambda wl: ref.pack_b_grouped_ref(
+                wl, plan.bk, plan.bn, plan.layout_b))(w)
+        elif be == "pallas":
+            packed = pack_b_grouped(w, plan.bk, plan.bn,
+                                    layout=plan.layout_b)
+        else:
+            packed = ref.pack_b_grouped_ref(w, plan.bk, plan.bn,
+                                            plan.layout_b)
+        return cls(packed=packed, e=e, k=k, n=n, plan=plan)
+
+    def _check(self, a: jnp.ndarray) -> None:
+        if self.packed.ndim != 5:
+            raise ValueError(
+                f"grouped matmul needs a per-layer packed stack "
+                f"[E,Nb,Kb,bk,bn]; got ndim={self.packed.ndim} (still "
+                f"scan-stacked?)")
+        if a.ndim != 3 or a.shape[0] != self.e or a.shape[2] != self.k:
+            raise ValueError(
+                f"grouped operand mismatch: a={a.shape}, weight stack is "
+                f"E={self.e}, K={self.k}")
+
+    def _bm(self, a: jnp.ndarray) -> int:
+        # Clamp the M-block to the runtime per-expert row count (aligned up
+        # to the sublane) — the pack-time m_hint must not pad a small
+        # capacity dimension to a full macro tile.
+        sub, _ = mdt.alignment(a.dtype)
+        return min(self.plan.bm, max(-(-a.shape[1] // sub) * sub, sub))
+
+    def _use_kernel(self, a: jnp.ndarray, backend: Optional[str]) -> bool:
+        # Decode-shaped per-expert M (a single sublane block of capacity
+        # slots) stays on the jnp fallback: the padded-envelope A stream and
+        # grid overheads cannot amortize over so few rows.
+        be = backend or default_backend()
+        sub, _ = mdt.alignment(a.dtype)
+        return be == "pallas" and a.shape[1] > sub
+
+    def matmul(self, a: jnp.ndarray, *, bias=None, epilogue: str = "none",
+               out_dtype=None, backend: Optional[str] = None) -> jnp.ndarray:
+        """out[e] = epilogue(a[e] @ W[e] + bias[e]); a: [E, M, K].
+
+        Every expert's B tiles stream contiguously from the load-time-packed
+        stack; A is consumed directly from its natural [E, M, K] layout.
+        """
+        self._check(a)
+        if self._use_kernel(a, backend):
+            return gemm_grouped_packed(a, self.packed, self.n, bm=self._bm(a),
+                                       layout_b=self.plan.layout_b, bias=bias,
+                                       epilogue=epilogue,
+                                       out_dtype=out_dtype or a.dtype)
+        acc = ref.grouped_fused_acc_ref(a, self.packed, self.n,
+                                        layout_b=self.plan.layout_b,
+                                        bm=self._bm(a))
+        return strat.grouped_epilogue(acc, None, bias, epilogue,
+                                      out_dtype or a.dtype)
+
+    def silu_gate(self, up: "GroupedPackedWeight", a: jnp.ndarray, *,
+                  out_dtype=None,
+                  backend: Optional[str] = None) -> jnp.ndarray:
+        """silu(a @ self) * (a @ up) — the fused MoE gate/up pair.
+
+        One pass over the gate accumulator: the kernel streams both packed
+        stacks against a single A read and applies silu*mul in VMEM before
+        the one HBM store.
+        """
+        self._check(a)
+        up._check(a)
+        if self.plan != up.plan or self.packed.shape != up.packed.shape:
+            raise ValueError("silu_gate pair must share plan and geometry "
+                             f"({self.plan} vs {up.plan})")
+        if self._use_kernel(a, backend):
+            return gemm_grouped_packed(a, self.packed, self.n,
+                                       b2_packed=up.packed, bm=self._bm(a),
+                                       layout_b=self.plan.layout_b,
+                                       epilogue="silu_gate",
+                                       out_dtype=out_dtype or a.dtype)
+        gate = ref.grouped_fused_acc_ref(a, self.packed, self.n,
+                                         layout_b=self.plan.layout_b,
+                                         bm=self._bm(a))
+        up_acc = ref.grouped_fused_acc_ref(a, up.packed, up.n,
+                                           layout_b=up.plan.layout_b,
+                                           bm=self._bm(a))
+        return strat.grouped_epilogue(gate, up_acc, None, "silu_gate",
+                                      out_dtype or a.dtype)
+
+
+def _grouped_weight_flatten(gw: GroupedPackedWeight):
+    return (gw.packed,), (gw.e, gw.k, gw.n, gw.plan)
+
+
+def _grouped_weight_unflatten(aux, children):
+    e, k, n, plan = aux
+    return GroupedPackedWeight(packed=children[0], e=e, k=k, n=n, plan=plan)
+
+
+jax.tree_util.register_pytree_node(GroupedPackedWeight,
+                                   _grouped_weight_flatten,
+                                   _grouped_weight_unflatten)

@@ -143,8 +143,47 @@ def plan_gemm(m: int, k: int, n: int, dtype="float32", *,
     return plan
 
 
+def plan_grouped_gemm(e: int, m: int, k: int, n: int, dtype="float32", *,
+                      target: TpuTarget = V5E,
+                      n_b_streams: int = 1,
+                      double_buffer: int = 2,
+                      layout_b: str = "row") -> GemmPlan:
+    """Plan for the grouped kernel: one expert's [m,k,n] problem at a time.
+
+    The expert axis is the outermost grid dimension, so only one expert's
+    tiles are VMEM-resident per grid step and the per-expert tile constraints
+    are exactly the 2-D system's — but the expert-loop stream adds working
+    set when the kernel carries extra B operands (``n_b_streams=2`` for the
+    fused silu-gate pair: a second double-buffered B stream plus a second
+    revolving accumulator share VMEM with the first). The budget is solved
+    with that reservation subtracted, then re-validated.
+    """
+    d = mdt.info(jnp.dtype(dtype).name if not isinstance(dtype, str) else dtype)
+    acc_item = jnp.dtype(d.acc_dtype).itemsize
+
+    def extra_for(plan: GemmPlan) -> int:
+        return (n_b_streams - 1) * (
+            double_buffer * plan.bk * plan.bn * d.itemsize
+            + plan.bm * plan.bn * acc_item)
+
+    plan = plan_gemm(m, k, n, dtype, target=target,
+                     double_buffer=double_buffer, layout_b=layout_b)
+    if n_b_streams > 1 and (plan.vmem_working_set() + extra_for(plan)
+                            > target.vmem_bytes):
+        # Re-solve with an even budget split. Each extra stream's reservation
+        # is a strict subset of one plan's working-set terms (a B stream + an
+        # accumulator, no A stream), so a plan solved within budget/streams
+        # always fits n_b_streams-fold.
+        plan = plan_gemm(m, k, n, dtype, target=target,
+                         double_buffer=double_buffer, layout_b=layout_b,
+                         vmem_budget=target.vmem_bytes // n_b_streams)
+        assert plan.vmem_working_set() + extra_for(plan) <= target.vmem_bytes
+    return plan
+
+
 def should_pack(m: int, k: int, n: int, dtype="float32", *,
-                target: TpuTarget = V5E, fused: bool = False) -> bool:
+                target: TpuTarget = V5E, fused: bool = False,
+                group: int = 1) -> bool:
     """Strategy heuristic from the paper's own results: packing pays off once
     operands exceed the fast-memory envelope (Figs. 4-6: Tiling wins small,
     Tiling+Packing wins medium/large).
@@ -161,9 +200,21 @@ def should_pack(m: int, k: int, n: int, dtype="float32", *,
     re-reads it from HBM, and the contiguous tile-major stream beats the
     strided gather. Together these move the crossover well before the paper's
     Figs. 4-6 whole-working-set spill point.
+
+    ``group=E`` (> 1) models the grouped kernel over a stacked [E,K,N] B:
+    ``m`` is the PER-EXPERT row count. B is resident per-expert rather than
+    per-call — the expert loop streams the full E-times-larger stack through
+    VMEM once per call regardless of M-blocking — so condition (b) is tested
+    against the whole stack, and condition (a) collapses to "is there at
+    least one full sublane block of rows per expert": a decode-shaped
+    per-expert M (a handful of capacity slots) cannot amortize the grouped
+    kernel's padded-envelope A stream and stays on the einsum fallback.
     """
     item = mdt.info(jnp.dtype(dtype).name if not isinstance(dtype, str)
                     else dtype).itemsize
+    if group > 1:
+        return (m > target.sublane(item)
+                and group * k * n * item > target.vmem_bytes // 32)
     if fused:
         return (m > 8 * target.mxu_dim
                 and k * n * item > target.vmem_bytes // 32)

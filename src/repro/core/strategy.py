@@ -41,15 +41,24 @@ import jax.numpy as jnp
 
 from repro.core import dtypes as mdt
 from repro.core.epilogue import apply_epilogue
-from repro.core.planner import GemmPlan, plan_gemm
+from repro.core.planner import GemmPlan, plan_gemm, plan_grouped_gemm
 from repro.kernels import ref
+from repro.kernels.gemm_grouped import gemm_grouped_packed
 from repro.kernels.gemm_packed import gemm_packed, gemm_packed_fused_a
 from repro.kernels.gemm_tiled import gemm_tiled
 from repro.kernels.gemm_vsx_like import matmul_vsx_like
-from repro.kernels.pack import pack_a, pack_b
+from repro.kernels.pack import pack_a, pack_b, pack_b_grouped
 
 STRATEGIES = ("naive", "pluto", "intrinsic", "tiling", "tiling_packing",
               "tiling_packing_fused", "vsx", "xla")
+
+# Grouped (batched-expert) lowerings of out[e] = A[e] @ B[e]:
+#   grouped_einsum  — one batched einsum (the MoE path's historical lowering;
+#                     XLA's batched GEMM plays the library role)
+#   grouped_packed  — the layered pipeline grown one dimension: B packed
+#                     tile-major per expert, A streamed pack-free, expert
+#                     axis outermost on the kernel grid
+GROUPED_STRATEGIES = ("grouped_einsum", "grouped_packed")
 
 
 def _epilogue(acc, c, alpha, beta, out_dtype, bias=None, epilogue="none"):
@@ -276,3 +285,66 @@ def run(strategy: str, a, b, c=None, *, alpha=1.0, beta=0.0,
     fn = table[strategy]
     return fn(a, b, c, alpha, beta, plan, out_dtype, bias=bias,
               epilogue=epilogue, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Grouped (batched-expert) lowerings
+# ---------------------------------------------------------------------------
+
+def grouped_epilogue(acc, acc2, bias, epilogue, out_dtype):
+    """Shared grouped-GEMM epilogue for every jnp lowering (run_grouped and
+    the GroupedPackedWeight fallbacks): bias, then silu-gate or activation,
+    then the single output cast."""
+    if bias is not None:
+        acc = acc + bias[:, None, :].astype(acc.dtype)
+    if epilogue == "silu_gate":
+        out = jax.nn.silu(acc) * acc2
+    else:
+        out = apply_epilogue(epilogue, acc)
+    return out.astype(out_dtype)
+
+
+def run_grouped(strategy: str, a, b, *, b2=None, backend: str = "jnp",
+                plan: Optional[GemmPlan] = None, out_dtype=None,
+                bias=None, epilogue: str = "none", interpret=None):
+    """Grouped GEMM dispatch: out[e] = epilogue(A[e] @ B[e] (+ bias[e])).
+
+    a: [E, M, K]; b (and the silu-gate partner ``b2``): raw [E, K, N].
+    ``epilogue="silu_gate"`` computes silu(A@B) * (A@B2) — the MoE gate/up
+    pair — in one pass on the kernel path, and as the matching fused jnp
+    expression on the einsum path (CPU parity lowering).
+    """
+    if strategy not in GROUPED_STRATEGIES:
+        raise KeyError(
+            f"unknown grouped strategy {strategy!r}; one of {GROUPED_STRATEGIES}")
+    if (b2 is not None) != (epilogue == "silu_gate"):
+        raise ValueError("b2 goes with epilogue='silu_gate' (and only then)")
+    e, m, k = a.shape
+    n = b.shape[2]
+    out_dtype = out_dtype or a.dtype
+    if strategy == "grouped_einsum":
+        # The historical MoE lowering, dtype-preserving (XLA fuses the
+        # epilogue): batched matmul in the compute dtype.
+        acc = jnp.einsum("emk,ekn->emn", a, b)
+        acc2 = jnp.einsum("emk,ekn->emn", a, b2) if b2 is not None else None
+        return grouped_epilogue(acc, acc2, bias, epilogue, out_dtype)
+    plan = plan or plan_grouped_gemm(e, m, k, n, a.dtype,
+                                     n_b_streams=2 if b2 is not None else 1)
+    if backend == "pallas":
+        bp = pack_b_grouped(b, plan.bk, plan.bn, layout=plan.layout_b,
+                            interpret=interpret)
+        b2p = (pack_b_grouped(b2, plan.bk, plan.bn, layout=plan.layout_b,
+                              interpret=interpret) if b2 is not None else None)
+        return gemm_grouped_packed(a, bp, n, b2_packed=b2p, bm=plan.bm,
+                                   layout_b=plan.layout_b, out_dtype=out_dtype,
+                                   epilogue=epilogue, bias=bias,
+                                   interpret=interpret)
+    bp = ref.pack_b_grouped_ref(b, plan.bk, plan.bn, plan.layout_b)
+    acc = ref.grouped_fused_acc_ref(a, bp, n, layout_b=plan.layout_b,
+                                    bm=plan.bm)
+    acc2 = None
+    if b2 is not None:
+        b2p = ref.pack_b_grouped_ref(b2, plan.bk, plan.bn, plan.layout_b)
+        acc2 = ref.grouped_fused_acc_ref(a, b2p, n, layout_b=plan.layout_b,
+                                         bm=plan.bm)
+    return grouped_epilogue(acc, acc2, bias, epilogue, out_dtype)

@@ -7,7 +7,11 @@ Layout:
   gemm_packed.py    — "Tiling+Packing" kernels: gemm_packed (both operands
                       packed) and gemm_packed_fused_a (B packed, A streamed
                       pack-free from its natural layout)
-  gemm_vsx_like.py  — generic vector-unit lowering (paper's VSX baseline)
+  gemm_grouped.py   — grouped (batched-expert) GEMM over the packed expert
+                      stack [E,Nb,Kb,bk,bn], incl. the fused silu-gate pair
+                      (the MoE expert contraction as one layered kernel)
+  gemm_vsx_like.py  — generic vector-unit lowering (paper's VSX baseline),
+                      strided and packed-B variants
   flash_attention.py— blocked online-softmax attention (long-context hot spot)
   ops.py            — jit'd wrappers (the dispatch surface for repro.core)
 """

@@ -1,0 +1,164 @@
+"""Grouped (batched-expert) GEMM over load-time-packed weights.
+
+One Pallas kernel contracts a stacked activation tensor A[E, M, K] against a
+stack of tile-major-packed expert weights B[E, Nb, Kb, bk, bn] — the MoE
+expert contraction (``models/moe.py``) expressed as the paper's layered
+pipeline grown one dimension: the expert axis becomes the outermost grid
+dimension and the same micro kernel is composed across the whole batch of
+expert problems (the "compiler-composed nanokernel" direction of Library
+Liberation, applied to grouped GEMM).
+
+A streams pack-free from its natural [E, M, K] layout exactly as in
+``gemm_packed_fused_a`` — the BlockSpec index maps simply gain a leading
+expert coordinate — and every expert's B tiles arrive as contiguous
+HBM→VMEM DMAs from the load-time-packed buffer (``pack.pack_b_grouped``).
+
+Epilogues are fused into the final K-step as in the 2-D kernels, plus one
+grouped-only fusion: ``epilogue="silu_gate"`` takes a *second* packed weight
+stack and computes ``silu(A@Bg) * (A@Bu)`` with two revolving accumulators
+sharing a single A stream — the MoE gate/up einsum pair collapses into one
+pass over the gate accumulator (one kernel, one A read, one HBM store).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import (KERNEL_EPILOGUES, acc_dtype_for, cdiv,
+                                  default_interpret, pad2d, pallas_kwargs,
+                                  vmem_scratch)
+
+
+def _grouped_kernel(*refs, k_steps, layout_b, epilogue, has_bias, has_gate):
+    a_ref, b_ref = refs[0], refs[1]
+    idx = 2
+    b2_ref = None
+    if has_gate:
+        b2_ref = refs[idx]
+        idx += 1
+    bias_ref = None
+    if has_bias:
+        bias_ref = refs[idx]
+        idx += 1
+    o_ref = refs[idx]
+    acc_ref = refs[idx + 1]
+    acc2_ref = refs[idx + 2] if has_gate else None
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if has_gate:
+            acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    a = a_ref[0]       # [bm, bk] strided block of the NATURAL [E, M, K] layout
+    rhs_contract = 0 if layout_b == "row" else 1
+
+    def contract(b_tile):
+        return jax.lax.dot_general(
+            a, b_tile, (((1,), (rhs_contract,)), ((), ())),
+            preferred_element_type=acc_ref.dtype)
+
+    acc_ref[...] += contract(b_ref[0, 0, 0])
+    if has_gate:
+        acc2_ref[...] += contract(b2_ref[0, 0, 0])
+
+    @pl.when(pl.program_id(3) == k_steps - 1)
+    def _epilogue():
+        out = acc_ref[...]
+        if bias_ref is not None:
+            out = out + bias_ref[0].astype(out.dtype)   # [1,bn] broadcast
+        if has_gate:
+            # silu(gate) * up on the VMEM accumulators — the MoE pair fusion.
+            out = KERNEL_EPILOGUES["silu"](out) * acc2_ref[...]
+        else:
+            out = KERNEL_EPILOGUES[epilogue](out)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def gemm_grouped_packed(a: jnp.ndarray,
+                        b_packed: jnp.ndarray,
+                        n: int,
+                        *,
+                        b2_packed: jnp.ndarray | None = None,
+                        bm: int = 128,
+                        layout_b: str = "row",
+                        out_dtype=None,
+                        epilogue: str = "none",
+                        bias: jnp.ndarray | None = None,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Grouped pack-free-A GEMM: out[e] = epilogue(A[e] @ unpack(B[e]) + bias[e]).
+
+    a:        [E, M, K] activations in their natural layout (streamed
+              block-by-block per expert — no tile-major copy of A, ever).
+    b_packed: [E, Nb, Kb, bk, bn] (row) / [E, Nb, Kb, bn, bk] (col), from
+              ``pack.pack_b_grouped`` (typically once, at weight-load time).
+    bias:     optional per-expert bias [E, N].
+    epilogue: a name from ``KERNEL_EPILOGUES``, or ``"silu_gate"`` — then
+              ``b2_packed`` (same packed geometry) must be given and the
+              kernel returns ``silu(A@B) * (A@B2)`` computed in one pass.
+
+    Returns [E, M, n].
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    has_gate = epilogue == "silu_gate"
+    if has_gate != (b2_packed is not None):
+        raise ValueError("epilogue='silu_gate' requires b2_packed (and only "
+                         "silu_gate takes it)")
+    e, m, k = a.shape
+    eb, nb, kb = b_packed.shape[:3]
+    assert eb == e, (a.shape, b_packed.shape)
+    if layout_b == "row":
+        bk, bn = b_packed.shape[3:]
+    else:
+        bn, bk = b_packed.shape[3:]
+    assert cdiv(k, bk) == kb, (a.shape, b_packed.shape, bk)
+    if has_gate:
+        assert b2_packed.shape == b_packed.shape, (b2_packed.shape,
+                                                   b_packed.shape)
+    out_dtype = out_dtype or a.dtype
+    acc_dtype = acc_dtype_for(a.dtype)
+    a_p = jax.vmap(lambda ae: pad2d(ae, bm, bk))(a)   # [E, Mp, Kp]
+    mb = cdiv(m, bm)
+
+    grid = (e, mb, nb, kb)  # expert outermost; K innermost (revolving acc)
+    tb = b_packed.shape[3:]
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda ee, i, j, kk: (ee, i, kk)),
+        pl.BlockSpec((1, 1, 1) + tb, lambda ee, i, j, kk: (ee, j, kk, 0, 0)),
+    ]
+    operands = [a_p, b_packed]
+    if has_gate:
+        in_specs.append(
+            pl.BlockSpec((1, 1, 1) + tb,
+                         lambda ee, i, j, kk: (ee, j, kk, 0, 0)))
+        operands.append(b2_packed)
+    has_bias = bias is not None
+    if has_bias:
+        assert bias.shape == (e, n), (bias.shape, (e, n))
+        in_specs.append(
+            pl.BlockSpec((1, 1, bn), lambda ee, i, j, kk: (ee, 0, j)))
+        operands.append(jax.vmap(
+            lambda be: pad2d(be.reshape(1, n), 1, bn))(bias))
+    scratch = [vmem_scratch((bm, bn), acc_dtype)]
+    if has_gate:
+        scratch.append(vmem_scratch((bm, bn), acc_dtype))
+
+    out = pl.pallas_call(
+        functools.partial(_grouped_kernel, k_steps=kb, layout_b=layout_b,
+                          epilogue=epilogue, has_bias=has_bias,
+                          has_gate=has_gate),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda ee, i, j, kk: (ee, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, mb * bm, nb * bn), out_dtype),
+        scratch_shapes=scratch,
+        **pallas_kwargs(
+            interpret=interpret,
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(*operands)
+    return out[:, :m, :n]

@@ -13,14 +13,16 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gemm_grouped import gemm_grouped_packed
 from repro.kernels.gemm_packed import gemm_packed, gemm_packed_fused_a
 from repro.kernels.gemm_tiled import gemm_tiled
 from repro.kernels.gemm_vsx_like import matmul_vsx_like
-from repro.kernels.pack import pack_a, pack_b
+from repro.kernels.pack import pack_a, pack_b, pack_b_grouped
 
 __all__ = [
-    "tiled_matmul", "packed_matmul", "packed_matmul_fused", "vsx_matmul",
-    "attention", "pack_a_op", "pack_b_op",
+    "tiled_matmul", "packed_matmul", "packed_matmul_fused",
+    "grouped_matmul_packed", "vsx_matmul", "attention", "pack_a_op",
+    "pack_b_op", "pack_b_grouped_op",
 ]
 
 
@@ -64,6 +66,23 @@ def packed_matmul_fused(a, b, c=None, *, bias=None, bm=128, bk=128, bn=128,
                                bias=bias, interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "layout_b", "out_dtype",
+                                   "epilogue", "interpret"))
+def grouped_matmul_packed(a, b, *, b2=None, bias=None, bm=128, bk=128, bn=128,
+                          layout_b="row", out_dtype=None, epilogue="none",
+                          interpret=None):
+    """Per-call grouped pipeline: pack the expert stack, run the grouped
+    kernel (load-time packing hoists the pack — see GroupedPackedWeight)."""
+    n = b.shape[2]
+    bp = pack_b_grouped(b, bk, bn, layout=layout_b, interpret=interpret)
+    b2p = (pack_b_grouped(b2, bk, bn, layout=layout_b, interpret=interpret)
+           if b2 is not None else None)
+    return gemm_grouped_packed(a, bp, n, b2_packed=b2p, bm=bm,
+                               layout_b=layout_b, out_dtype=out_dtype,
+                               epilogue=epilogue, bias=bias,
+                               interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("bm", "bk", "bn", "out_dtype", "interpret"))
 def vsx_matmul(a, b, *, bm=128, bk=128, bn=128, out_dtype=None, interpret=None):
     return matmul_vsx_like(a, b, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
@@ -80,3 +99,5 @@ def attention(q, k, v, *, causal=True, window=None, scale=None,
 
 pack_a_op = jax.jit(pack_a, static_argnames=("bm", "bk", "layout", "interpret"))
 pack_b_op = jax.jit(pack_b, static_argnames=("bk", "bn", "layout", "interpret"))
+pack_b_grouped_op = jax.jit(
+    pack_b_grouped, static_argnames=("bk", "bn", "layout", "interpret"))

@@ -71,3 +71,40 @@ def pack_b(b: jnp.ndarray, bk: int, bn: int, layout: str = "row",
            interpret: bool | None = None) -> jnp.ndarray:
     """B[K,N] -> [Nb, Kb, bk, bn] ("row") or [Nb, Kb, bn, bk] ("col")."""
     return _pack(b, bk, bn, grid_order="col", layout=layout, interpret=interpret)
+
+
+def pack_b_grouped(b: jnp.ndarray, bk: int, bn: int, layout: str = "row",
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """B[E,K,N] -> [E, Nb, Kb, bk, bn] ("row") / [E, Nb, Kb, bn, bk] ("col").
+
+    The grouped packer for stacked expert weights: each expert's matrix gets
+    the same column-of-tiles treatment as :func:`pack_b`, with the expert
+    index as the outermost grid dimension — the packed stack is what
+    ``gemm_grouped_packed`` consumes (typically packed once at weight-load).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    transpose = layout == "col"
+    e = b.shape[0]
+    b_p = jax.vmap(lambda be: pad2d(be, bk, bn))(b)
+    kb, nb = cdiv(b.shape[1], bk), cdiv(b.shape[2], bn)
+    t0, t1 = (bn, bk) if transpose else (bk, bn)
+
+    return pl.pallas_call(
+        functools.partial(_pack_kernel_grouped, transpose=transpose),
+        grid=(e, nb, kb),
+        in_specs=[pl.BlockSpec((1, bk, bn), lambda ee, j, i: (ee, i, j))],
+        out_specs=pl.BlockSpec((1, 1, 1, t0, t1),
+                               lambda ee, j, i: (ee, j, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, nb, kb, t0, t1), b.dtype),
+        **pallas_kwargs(interpret=interpret,
+                        dimension_semantics=("parallel", "parallel",
+                                             "parallel")),
+    )(b_p)
+
+
+def _pack_kernel_grouped(x_ref, o_ref, *, transpose: bool):
+    tile = x_ref[0]
+    if transpose:
+        tile = tile.T
+    o_ref[0, 0, 0] = tile

@@ -117,6 +117,45 @@ def fused_packed_acc_ref(a, bp, n: int, layout_b="row", bm: int = 8):
 
 
 # ---------------------------------------------------------------------------
+# Grouped (batched-expert) GEMM
+# ---------------------------------------------------------------------------
+
+def grouped_matmul_ref(a, b, out_dtype=None):
+    """out[e] = A[e] @ B[e] with f32 accumulation — the grouped-GEMM oracle.
+
+    a: [E, M, K]; b: [E, K, N]. This is the einsum the MoE path contracted
+    with before the grouped packed pipeline existed.
+    """
+    acc = jnp.einsum("emk,ekn->emn", a.astype(jnp.float32),
+                     b.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype or a.dtype)
+
+
+def grouped_silu_gate_ref(a, bg, bu, out_dtype=None):
+    """silu(A@Bg) * (A@Bu), per expert, f32 accumulation (the MoE pair)."""
+    gate = jnp.einsum("emk,ekn->emn", a.astype(jnp.float32),
+                      bg.astype(jnp.float32))
+    up = jnp.einsum("emk,ekn->emn", a.astype(jnp.float32),
+                    bu.astype(jnp.float32))
+    return (jax.nn.silu(gate) * up).astype(out_dtype or a.dtype)
+
+
+def pack_b_grouped_ref(b: jnp.ndarray, bk: int, bn: int, layout: str = "row"):
+    """B[E,K,N] -> [E, Nb, Kb, bk, bn] — vmapped :func:`pack_b_ref`."""
+    return jax.vmap(lambda be: pack_b_ref(be, bk, bn, layout))(b)
+
+
+def grouped_fused_acc_ref(a, bp, n: int, layout_b="row", bm: int = 8):
+    """Grouped pack-free-A contraction: natural [E,M,K] A against the packed
+    expert stack [E,Nb,Kb,bk,bn]. Returns the f32 accumulator [E, m, n] —
+    the jnp lowering of ``gemm_grouped_packed`` before its epilogue."""
+    return jax.vmap(
+        lambda ae, bpe: fused_packed_acc_ref(ae, bpe, n, layout_b=layout_b,
+                                             bm=bm))(a, bp)
+
+
+# ---------------------------------------------------------------------------
 # Attention
 # ---------------------------------------------------------------------------
 

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ModelConfig
-from repro.core import PackedWeight, gemm
+from repro.core import GroupedPackedWeight, PackedWeight, gemm
 from repro.kernels import ref as kref
 from repro.parallel.mesh import shard
 
@@ -38,10 +38,16 @@ def resolve_weight(w, dtype):
 
 
 # Dense [K,N] weight names eligible for load-time packing, across every
-# architecture family (attention/mlp/ssm). MoE expert stacks contract via
-# einsum (grouped dims) and stay unpacked — see ROADMAP "Open items".
+# architecture family (attention/mlp/ssm). MoE expert stacks ([E,K,N], same
+# key names inside the "moe" subtree) pack separately as GroupedPackedWeight.
 DENSE_WEIGHT_KEYS = frozenset(
     {"wq", "wk", "wv", "wo", "wg", "wu", "wi", "in_proj", "out_proj"})
+
+# Stacked [E,K,N] expert-weight names inside a "moe" subtree, packed grouped
+# tile-major at load time. The gate/up pair shares a silu-gate-capable plan
+# (n_b_streams=2) so the fused grouped kernel can stream both stacks.
+GROUPED_WEIGHT_KEYS = frozenset({"wg", "wu", "wo"})
+_GATE_PAIR_KEYS = frozenset({"wg", "wu"})
 
 
 def _pack_dense(w: jnp.ndarray, compute) -> PackedWeight:
@@ -62,33 +68,46 @@ def _pack_dense(w: jnp.ndarray, compute) -> PackedWeight:
     return PackedWeight(packed=packed, k=k, n=n, plan=plan)
 
 
+def _pack_grouped(w: jnp.ndarray, compute, key: str) -> GroupedPackedWeight:
+    """Pack one expert stack ([E,K,N], or [L,E,K,N] scan-stacked) grouped
+    tile-major in the compute dtype (jnp packer; load-time, runs once)."""
+    w = w.astype(compute)
+    return GroupedPackedWeight.pack(
+        w, backend="jnp", n_b_streams=2 if key in _GATE_PAIR_KEYS else 1)
+
+
 def pack_model_params(cfg: ModelConfig, params: dict, *, dtype=None) -> dict:
-    """Load-time packing pass: replace every dense weight with a PackedWeight.
+    """Load-time packing pass: replace every dense weight with a PackedWeight
+    and every MoE expert stack with a GroupedPackedWeight.
 
     Returns a new params tree in which each ``DENSE_WEIGHT_KEYS`` leaf (float
     dtypes only — int8 streams keep their narrow-HBM path) is tile-major
-    packed in the compute dtype, and ``head_packed`` holds the packed LM head
-    ([d_model, vocab], from the tied embedding or the separate head table).
-    Serving engines call this once at weight-load; every subsequent
-    prefill/decode step then runs the pack-free-A fused kernel.
+    packed in the compute dtype, each ``GROUPED_WEIGHT_KEYS`` leaf inside a
+    "moe" subtree is grouped-packed per expert, and ``head_packed`` holds the
+    packed LM head ([d_model, vocab], from the tied embedding or the separate
+    head table). Serving engines call this once at weight-load; every
+    subsequent prefill/decode step then runs the pack-free-A fused kernels
+    (dense and grouped), with the MoE gate/up pair fused into one silu-gate
+    kernel pass.
     """
     compute = jnp.dtype(dtype or cfg.compute_dtype)
 
-    def walk(tree, packing=True):
+    def walk(tree, in_moe=False):
         if not isinstance(tree, dict):
             return tree
         out = {}
         for key, val in tree.items():
-            # MoE expert stacks ([E,K,N], +leading L when scan-stacked) share
-            # the dense key names but contract via grouped einsum — skip the
-            # whole subtree (ROADMAP open item).
-            sub_packing = packing and key != "moe"
-            if (packing and sub_packing and key in DENSE_WEIGHT_KEYS
-                    and hasattr(val, "ndim") and val.ndim in (2, 3)
-                    and jnp.issubdtype(val.dtype, jnp.floating)):
+            is_float = (hasattr(val, "ndim")
+                        and jnp.issubdtype(val.dtype, jnp.floating))
+            if (in_moe and key in GROUPED_WEIGHT_KEYS and is_float
+                    and val.ndim in (3, 4)):
+                # [E,K,N] expert stack (+leading L when scan-stacked).
+                out[key] = _pack_grouped(val, compute, key)
+            elif (not in_moe and key in DENSE_WEIGHT_KEYS and is_float
+                    and val.ndim in (2, 3)):
                 out[key] = _pack_dense(val, compute)
             else:
-                out[key] = walk(val, sub_packing)
+                out[key] = walk(val, in_moe or key == "moe")
         return out
 
     out = walk(params)

@@ -2,10 +2,22 @@
 
 GShard/Switch-style routing: tokens are split into groups (sharded over the
 data axes), routed top-k within each group, and dispatched to experts through
-one-hot capacity tensors. Expert FFN weights are batched GEMMs — when the
-expert count divides the model axis (llama4-scout: 16e on a 16-way axis) the
-expert dim is sharded (true EP, all-to-all dispatch); otherwise (mixtral: 8e)
-the inner FFN dim is TP-sharded within every expert.
+one-hot capacity tensors. When the expert count divides the model axis
+(llama4-scout: 16e on a 16-way axis) the expert dim is sharded (true EP,
+all-to-all dispatch); otherwise (mixtral: 8e) the inner FFN dim is TP-sharded
+within every expert.
+
+The three expert contractions ([G,E,C,d] capacity tensors against stacked
+[E,·,·] weights) dispatch through the grouped layered-GEMM subsystem
+(``core.gemm.grouped_linear`` / ``grouped_silu_gate``): raw weights take the
+batched-einsum lowering (dtype- and sharding-preserving — identical to the
+historical einsums, so CPU/training parity is exact), while load-time
+tile-major-packed stacks (:class:`repro.core.GroupedPackedWeight`, produced
+by ``pack_model_params``) run the ``gemm_grouped_packed`` Pallas kernel:
+pack-free A streaming over the expert grid axis, and the gate/up pair fused
+into ONE silu-gate kernel pass (silu applied to the VMEM gate accumulator,
+single HBM store). Decode-shaped per-expert capacity falls back to the jnp
+lowering of the packed contraction (see GroupedPackedWeight._use_kernel).
 """
 from __future__ import annotations
 
@@ -16,6 +28,8 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ModelConfig
+from repro.core import GroupedPackedWeight
+from repro.core.gemm import grouped_linear, grouped_silu_gate
 from repro.models.layers import dense_param
 from repro.parallel.mesh import shard
 
@@ -80,6 +94,14 @@ def route(cfg: ModelConfig, router_w, x_grp) -> Tuple[jnp.ndarray, jnp.ndarray, 
     return dispatch, combine, aux
 
 
+def _expert_weight(w, dtype):
+    """Expert-stack accessor: GroupedPackedWeight passes through (packed in
+    the compute dtype at load time); raw [E,K,N] stacks are cast per call."""
+    if isinstance(w, GroupedPackedWeight):
+        return w
+    return w.astype(dtype)
+
+
 def apply_moe(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: [B,S,d] -> ([B,S,d], aux_loss)."""
     b, s, d = x.shape
@@ -96,10 +118,19 @@ def apply_moe(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, j
 
     expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, x_grp)
     expert_in = shard(expert_in, "batch", "model")  # EP when E divides axis
-    gate = jnp.einsum("gecd,edf->gecf", expert_in, p["wg"].astype(x.dtype))
-    up = jnp.einsum("gecd,edf->gecf", expert_in, p["wu"].astype(x.dtype))
-    h = jax.nn.silu(gate) * up
-    expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(x.dtype))
+    wg = _expert_weight(p["wg"], x.dtype)
+    wu = _expert_weight(p["wu"], x.dtype)
+    wo = _expert_weight(p["wo"], x.dtype)
+    # gate/up as ONE grouped pass (fused silu-gate), then the down-projection
+    # — all three contractions through the grouped layered-GEMM dispatch.
+    # Raw weights pin the einsum strategy: the [G,E,C,d] capacity tensor must
+    # contract unfolded (GSPMD sharding stays intact) and with the exact
+    # historical lowering; the kernel path is selected by load-time packing
+    # (GroupedPackedWeight), which bypasses the strategy resolver entirely.
+    packed = isinstance(wg, GroupedPackedWeight)
+    strategy = "auto" if packed else "grouped_einsum"
+    h = grouped_silu_gate(expert_in, wg, wu, strategy=strategy)
+    expert_out = grouped_linear(h, wo, strategy=strategy)
     # NOTE: no sharding constraint on expert_out — pinning it would force the
     # TP partial-sum all-reduce onto the capacity tensor [G,E,C,d], which is
     # k*capacity_factor (2.5x) larger than the token tensor the combine

@@ -8,10 +8,12 @@ Production posture:
     documented extension point);
   * with ``ServeConfig.pack_weights=True`` every dense weight (attention,
     MLP, SSM projections AND the LM head) is tile-major packed ONCE at
-    engine construction (``models.layers.pack_model_params``). Each
-    prefill/decode step then runs the pack-free-A fused GEMM kernel: no
-    per-call packing, bias/activation applied in the kernel's store epilogue
-    (see core/layered.py's PackedWeight).
+    engine construction (``models.layers.pack_model_params``), and MoE
+    expert stacks are grouped-packed per expert (GroupedPackedWeight). Each
+    prefill/decode step then runs the pack-free-A fused GEMM kernels: no
+    per-call packing, bias/activation applied in the kernel's store
+    epilogue, and the MoE gate/up pair fused into one grouped silu-gate
+    kernel pass (see core/layered.py).
 """
 from __future__ import annotations
 

@@ -230,14 +230,17 @@ def test_engine_packed_weights_parity(rng, arch):
 
 
 def test_pack_model_params_moe_and_untied_head():
-    """MoE expert stacks stay raw (grouped einsum contraction); the untied
-    head table is not kept alongside its packed copy."""
+    """MoE expert stacks pack grouped (GroupedPackedWeight, not the dense
+    PackedWeight — see tests/test_grouped_gemm.py); the untied head table is
+    not kept alongside its packed copy."""
+    from repro.core import GroupedPackedWeight as GPW
     from repro.core import PackedWeight as PW
     from repro.models.layers import pack_model_params
     cfg, model, params = _small_model("mixtral-8x22b")
     packed = pack_model_params(cfg, params)
     moe = packed["layers"]["moe"]
     assert all(not isinstance(v, PW) for v in moe.values())
+    assert all(isinstance(moe[k], GPW) for k in ("wg", "wu", "wo"))
     assert isinstance(packed["head_packed"], PW)
     assert not cfg.tie_embeddings and "head" not in packed
     # attention weights in the same tree DID get packed

@@ -1,0 +1,380 @@
+"""Parity tests for the grouped packed-GEMM subsystem.
+
+``gemm_grouped_packed`` (expert axis outermost on the grid, B load-time
+tile-major packed per expert, A streamed pack-free) must compute the same
+function as the batched einsum the MoE path historically used — across
+backends (jnp, pallas interpret), dtypes (f32, bf16), odd expert/capacity
+shapes, the fused silu-gate pair, and the load-time-packed model path
+(GroupedPackedWeight in ``apply_moe``, packed serving engine).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GroupedPackedWeight, grouped_linear,
+                        grouped_silu_gate, plan_grouped_gemm,
+                        run_grouped_strategy, should_pack)
+from repro.kernels import ref
+from repro.kernels.gemm_grouped import gemm_grouped_packed
+from repro.kernels.gemm_vsx_like import matmul_vsx_like, matmul_vsx_like_packed
+from repro.kernels.pack import pack_b, pack_b_grouped
+
+# Odd E and odd per-expert capacity C on purpose: remainder tiles in every
+# grid dimension, plus an aligned case and a decode-shaped case.
+GROUPED_SHAPES = [(1, 8, 8, 8), (4, 128, 128, 128), (3, 33, 48, 65),
+                  (5, 40, 24, 72), (2, 1, 64, 96)]
+
+
+def _stack(rng, e, m, k, n, dtype=jnp.float32):
+    a = jnp.asarray(rng.normal(size=(e, m, k)), dtype)
+    b = jnp.asarray(rng.normal(size=(e, k, n)), dtype)
+    b2 = jnp.asarray(rng.normal(size=(e, k, n)), dtype)
+    return a, b, b2
+
+
+# ---------------------------------------------------------------------------
+# Kernel level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,m,k,n", GROUPED_SHAPES)
+@pytest.mark.parametrize("layout_b", ["row", "col"])
+def test_grouped_kernel_matches_einsum(rng, e, m, k, n, layout_b):
+    a, b, _ = _stack(rng, e, m, k, n)
+    bp = pack_b_grouped(b, 16, 64, layout=layout_b)
+    np.testing.assert_allclose(
+        np.asarray(bp), np.asarray(ref.pack_b_grouped_ref(b, 16, 64, layout_b)))
+    got = gemm_grouped_packed(a, bp, n, bm=16, layout_b=layout_b)
+    want = ref.grouped_matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("e,m,k,n", GROUPED_SHAPES)
+def test_grouped_kernel_silu_gate(rng, e, m, k, n):
+    a, b, b2 = _stack(rng, e, m, k, n)
+    bp = pack_b_grouped(b, 16, 64)
+    b2p = pack_b_grouped(b2, 16, 64)
+    got = gemm_grouped_packed(a, bp, n, b2_packed=b2p, bm=16,
+                              epilogue="silu_gate")
+    want = ref.grouped_silu_gate_ref(a, b, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("epilogue", ["none", "relu", "gelu", "silu", "tanh"])
+def test_grouped_kernel_bias_epilogue(rng, epilogue):
+    e, m, k, n = 3, 33, 48, 65
+    a, b, _ = _stack(rng, e, m, k, n)
+    bias = jnp.asarray(rng.normal(size=(e, n)), jnp.float32)
+    bp = pack_b_grouped(b, 16, 64)
+    got = gemm_grouped_packed(a, bp, n, bm=16, bias=bias, epilogue=epilogue)
+    from repro.core.epilogue import apply_epilogue
+    want = apply_epilogue(
+        epilogue, ref.grouped_matmul_ref(a, b, jnp.float32)
+        + bias[:, None, :])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_grouped_kernel_bf16(rng):
+    a, b, b2 = _stack(rng, 3, 64, 96, 128, jnp.bfloat16)
+    bp = pack_b_grouped(b, 32, 128)
+    got = gemm_grouped_packed(a, bp, 128, bm=16, out_dtype=jnp.float32)
+    want = ref.grouped_matmul_ref(a, b, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.15, atol=0.15)
+    b2p = pack_b_grouped(b2, 32, 128)
+    got = gemm_grouped_packed(a, bp, 128, b2_packed=b2p, bm=16,
+                              epilogue="silu_gate", out_dtype=jnp.float32)
+    want = ref.grouped_silu_gate_ref(a, b, b2, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.3, atol=0.3)
+
+
+def test_grouped_kernel_silu_gate_requires_b2(rng):
+    a, b, b2 = _stack(rng, 2, 16, 16, 64)
+    bp = pack_b_grouped(b, 16, 64)
+    with pytest.raises(ValueError):
+        gemm_grouped_packed(a, bp, 64, epilogue="silu_gate")
+    with pytest.raises(ValueError):
+        gemm_grouped_packed(a, bp, 64, b2_packed=pack_b_grouped(b2, 16, 64))
+
+
+# ---------------------------------------------------------------------------
+# Strategy level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,m,k,n", GROUPED_SHAPES)
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_grouped_strategy_matches_einsum(rng, e, m, k, n, backend):
+    a, b, _ = _stack(rng, e, m, k, n)
+    got = run_grouped_strategy("grouped_packed", a, b, backend=backend)
+    want = run_grouped_strategy("grouped_einsum", a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_grouped_strategy_silu_gate_parity(rng, backend):
+    a, b, b2 = _stack(rng, 3, 40, 56, 80)
+    got = run_grouped_strategy("grouped_packed", a, b, b2=b2,
+                               epilogue="silu_gate", backend=backend)
+    want = run_grouped_strategy("grouped_einsum", a, b, b2=b2,
+                                epilogue="silu_gate")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# GroupedPackedWeight + grouped_linear / grouped_silu_gate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_grouped_packed_weight_matmul(rng, backend):
+    e, m, k, n = 4, 33, 96, 72
+    a, b, _ = _stack(rng, e, m, k, n)
+    bias = jnp.asarray(rng.normal(size=(e, n)), jnp.float32)
+    gw = GroupedPackedWeight.pack(b, backend=backend)
+    got = gw.matmul(a, bias=bias, epilogue="relu", backend=backend)
+    want = np.maximum(np.asarray(
+        ref.grouped_matmul_ref(a, b, jnp.float32) + bias[:, None, :]), 0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_grouped_packed_weight_silu_gate(rng, backend):
+    e, m, k, n = 3, 48, 64, 96
+    a, b, b2 = _stack(rng, e, m, k, n)
+    gw = GroupedPackedWeight.pack(b, n_b_streams=2, backend="jnp")
+    uw = GroupedPackedWeight.pack(b2, n_b_streams=2, backend="jnp")
+    got = gw.silu_gate(uw, a, backend=backend)
+    want = ref.grouped_silu_gate_ref(a, b, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_grouped_linear_leading_dims_raw_vs_packed(rng):
+    """[G,E,C,K] capacity tensors (the MoE layout) through both weight forms."""
+    g, e, c, k, n = 2, 4, 17, 48, 64
+    x = jnp.asarray(rng.normal(size=(g, e, c, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(e, k, n)), jnp.float32)
+    want = jnp.einsum("gecd,edf->gecf", x, b)
+    got_raw = grouped_linear(x, b)
+    np.testing.assert_allclose(np.asarray(got_raw), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    gw = GroupedPackedWeight.pack(b)
+    got_packed = grouped_linear(x, gw)
+    np.testing.assert_allclose(np.asarray(got_packed), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_silu_gate_raw_vs_packed(rng):
+    g, e, c, k, n = 2, 3, 24, 40, 56
+    x = jnp.asarray(rng.normal(size=(g, e, c, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(e, k, n)), jnp.float32)
+    b2 = jnp.asarray(rng.normal(size=(e, k, n)), jnp.float32)
+    want = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x, b)) \
+        * jnp.einsum("gecd,edf->gecf", x, b2)
+    got_raw = grouped_silu_gate(x, b, b2)
+    np.testing.assert_allclose(np.asarray(got_raw), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+    gw = GroupedPackedWeight.pack(b, n_b_streams=2)
+    uw = GroupedPackedWeight.pack(b2, n_b_streams=2)
+    got_packed = grouped_silu_gate(x, gw, uw)
+    np.testing.assert_allclose(np.asarray(got_packed), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+    with pytest.raises(ValueError):
+        grouped_silu_gate(x, gw, b2)  # mixed packed/raw pair
+
+
+def test_grouped_packed_weight_is_jit_transparent(rng):
+    """GroupedPackedWeight is a pytree node: packed stacks live inside jit'd
+    (and scanned) parameter trees, round-tripping through flatten/unflatten."""
+    e, m, k, n = 3, 16, 64, 48
+    a, b, _ = _stack(rng, e, m, k, n)
+    gw = GroupedPackedWeight.pack(b)
+
+    @jax.jit
+    def f(params, a):
+        return grouped_linear(a, params["w"])
+
+    got = f({"w": gw}, a)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.grouped_matmul_ref(a, b)),
+                               rtol=1e-4, atol=1e-4)
+    leaves, treedef = jax.tree_util.tree_flatten(gw)
+    assert len(leaves) == 1 and leaves[0].shape == gw.packed.shape
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert (back.e, back.k, back.n, back.plan) == (gw.e, gw.k, gw.n, gw.plan)
+
+
+def test_grouped_packed_weight_scan_stacked(rng):
+    """[L,E,K,N] stacks pack per layer and slice through jax.lax.scan."""
+    l, e, m, k, n = 2, 3, 16, 32, 64
+    w = jnp.asarray(rng.normal(size=(l, e, k, n)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(e, m, k)), jnp.float32)
+    gw = GroupedPackedWeight.pack(w)
+    assert gw.packed.ndim == 6
+    with pytest.raises(ValueError):
+        gw.matmul(a)  # still scan-stacked: per-layer slice required
+
+    def body(carry, wl):
+        return carry + wl.matmul(a), None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((e, m, n), jnp.float32), gw)
+    want = sum(ref.grouped_matmul_ref(a, w[i], jnp.float32) for i in range(l))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_operand_mismatch_raises(rng):
+    a, b, _ = _stack(rng, 3, 16, 32, 64)
+    gw = GroupedPackedWeight.pack(b)
+    with pytest.raises(ValueError):
+        gw.matmul(a[:2])            # wrong E
+    with pytest.raises(ValueError):
+        gw.matmul(a[:, :, :16])     # wrong K
+
+
+def test_resolve_grouped_strategy_precedence(monkeypatch):
+    """Explicit strategy wins over the env; dense-path env values (the
+    integration tests' forced-Pallas mode) never hijack grouped dispatch."""
+    from repro.core.gemm import resolve_grouped_strategy
+    monkeypatch.setenv("REPRO_GEMM_STRATEGY", "tiling_packing_fused")
+    assert resolve_grouped_strategy(4, 64, 64, 64, "float32") \
+        == "grouped_einsum"
+    assert resolve_grouped_strategy(
+        4, 64, 64, 64, "float32", "grouped_packed") == "grouped_packed"
+    monkeypatch.setenv("REPRO_GEMM_STRATEGY", "grouped_packed")
+    assert resolve_grouped_strategy(4, 64, 64, 64, "float32") \
+        == "grouped_packed"
+    assert resolve_grouped_strategy(
+        4, 64, 64, 64, "float32", "grouped_einsum") == "grouped_einsum"
+
+
+# ---------------------------------------------------------------------------
+# Planner: grouped crossover
+# ---------------------------------------------------------------------------
+
+def test_grouped_should_pack_decode_vs_prefill():
+    """Strategy selection accounts for B being resident per-expert: the
+    grouped kernel pays off at prefill-shaped per-expert M but never at
+    decode-shaped capacity (M=1..8 stays on the einsum fallback)."""
+    e, d, f = 8, 6144, 16384  # mixtral expert geometry
+    for m in range(1, 9):     # decode-shaped per-expert capacity
+        assert not should_pack(m, d, f, "bfloat16", fused=True, group=e)
+    for m in (64, 640, 2048):  # prefill-shaped
+        assert should_pack(m, d, f, "bfloat16", fused=True, group=e)
+    # a tiny expert stack never leaves the einsum path even at large M
+    assert not should_pack(640, 64, 64, "float32", fused=True, group=2)
+
+
+def test_plan_grouped_silu_gate_budget():
+    """n_b_streams=2 reserves VMEM for the second B stream + accumulator."""
+    import jax.numpy as jnp
+    from repro.core.dtypes import info
+    from repro.roofline.hw import V5E
+    for dtype in ("float32", "bfloat16"):
+        single = plan_grouped_gemm(8, 640, 6144, 16384, dtype)
+        dual = plan_grouped_gemm(8, 640, 6144, 16384, dtype, n_b_streams=2)
+        d = info(dtype)
+        acc_item = jnp.dtype(d.acc_dtype).itemsize
+        extra = (dual.double_buffer * dual.bk * dual.bn * d.itemsize
+                 + dual.bm * dual.bn * acc_item)
+        assert dual.vmem_working_set() + extra <= V5E.vmem_bytes
+        assert single.vmem_working_set() <= V5E.vmem_bytes
+        dual.validate()
+
+
+# ---------------------------------------------------------------------------
+# Model level: apply_moe through the grouped pipeline
+# ---------------------------------------------------------------------------
+
+def _moe_cfg():
+    from repro.configs import reduced_config
+    return dataclasses.replace(reduced_config("mixtral-8x22b"),
+                               compute_dtype="float32", capacity_factor=16.0)
+
+
+def test_apply_moe_packed_matches_raw(rng):
+    """The three expert einsums and the grouped-packed path agree end to end
+    (routing included)."""
+    from repro.models.moe import apply_moe, moe_params
+    cfg = _moe_cfg()
+    params = moe_params(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)), jnp.float32)
+    out_raw, aux_raw = apply_moe(cfg, params, x)
+    packed = dict(params)
+    for key, streams in (("wg", 2), ("wu", 2), ("wo", 1)):
+        packed[key] = GroupedPackedWeight.pack(
+            params[key].astype(jnp.float32), n_b_streams=streams)
+    out_packed, aux_packed = apply_moe(cfg, packed, x)
+    np.testing.assert_allclose(np.asarray(out_raw), np.asarray(out_packed),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux_raw), float(aux_packed), rtol=1e-5)
+
+
+def test_pack_model_params_grouped_moe():
+    """MoE expert stacks pack as GroupedPackedWeight (gate/up share one
+    silu-gate-capable plan); the router stays raw."""
+    from repro.models import build
+    from repro.models.layers import pack_model_params
+    cfg = _moe_cfg()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    packed = pack_model_params(cfg, params)
+    moe = packed["layers"]["moe"]
+    for key in ("wg", "wu", "wo"):
+        assert isinstance(moe[key], GroupedPackedWeight), key
+        assert moe[key].packed.ndim == 6  # [L,E,Nb,Kb,bk,bn] scan-stacked
+    assert moe["wg"].plan == moe["wu"].plan
+    assert not isinstance(moe["router"], GroupedPackedWeight)
+
+
+def test_engine_packed_weights_parity_moe(rng):
+    """Packed serving engine (dense + grouped expert packing) matches the
+    unpacked engine on a mixtral-family model."""
+    from repro.models import build
+    from repro.serve.engine import Engine, ServeConfig
+    cfg = _moe_cfg()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 6)), jnp.int32)
+    plain = Engine(model, params, ServeConfig(max_len=32))
+    packed = Engine(model, params, ServeConfig(max_len=32, pack_weights=True))
+    l0, c0 = plain._prefill(plain.params, {"tokens": prompt})
+    l1, c1 = packed._prefill(packed.params, {"tokens": prompt})
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=2e-4, atol=2e-4)
+    tok = jnp.argmax(l0, axis=-1).astype(jnp.int32)[:, None]
+    pos = jnp.full((2,), 6, jnp.int32)
+    d0, _ = plain._decode(plain.params, c0, tok, pos)
+    d1, _ = packed._decode(packed.params, c1, tok, pos)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: packed-B variant of the generic vector-unit lowering
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(33, 17, 65), (64, 48, 128), (8, 8, 8)])
+@pytest.mark.parametrize("layout_b", ["row", "col"])
+def test_vsx_packed_b_matches_strided(rng, m, k, n, layout_b):
+    """The packed-B vsx lowering computes the same function as the strided
+    one (and the oracle) — the ROADMAP fused-packing-for-vsx item."""
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    bp = pack_b(b, 16, 64, layout=layout_b)
+    got = matmul_vsx_like_packed(a, bp, n, bm=16, layout_b=layout_b,
+                                 out_dtype=jnp.float32)
+    want_strided = matmul_vsx_like(a, b, bm=16, bk=16, bn=64,
+                                   out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want_strided),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.matmul_ref(a, b, jnp.float32)),
+                               rtol=2e-4, atol=2e-4)

@@ -5,7 +5,8 @@ import pytest
 from hypo import given, settings, st
 
 from repro.core import dtypes as mdt
-from repro.core.planner import GemmPlan, plan_gemm, should_pack
+from repro.core.planner import (GemmPlan, plan_gemm, plan_grouped_gemm,
+                                should_pack)
 from repro.roofline.hw import V5E
 
 
@@ -57,6 +58,32 @@ def test_should_pack_crossover():
     """Paper Figs. 4-6: packing pays beyond the fast-memory envelope only."""
     assert not should_pack(64, 64, 64, "float32")
     assert should_pack(4096, 4096, 4096, "float32")
+
+
+def test_should_pack_grouped_crossover():
+    """group=E models the grouped kernel (B resident per-expert): the
+    decode-shaped per-expert capacity (M=1..8) never crosses over, prefill
+    shapes do, and a VMEM-small expert stack never pays for packing."""
+    e, d, f = 8, 6144, 16384
+    assert all(not should_pack(m, d, f, "float32", fused=True, group=e)
+               for m in range(1, 9))
+    assert should_pack(256, d, f, "float32", fused=True, group=e)
+    assert not should_pack(256, 32, 32, "float32", fused=True, group=4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(e=st.integers(2, 64), m=st.integers(1, 4096),
+       k=st.integers(1, 8192), n=st.integers(1, 8192),
+       streams=st.sampled_from([1, 2]))
+def test_property_grouped_plans_fit_vmem(e, m, k, n, streams):
+    """Grouped plans satisfy (C1) including the extra silu-gate B stream +
+    accumulator reservation (the expert-loop stream's VMEM bill)."""
+    plan = plan_grouped_gemm(e, m, k, n, "float32", n_b_streams=streams)
+    item, acc_item = 4, 4
+    extra = (streams - 1) * (plan.double_buffer * plan.bk * plan.bn * item
+                             + plan.bm * plan.bn * acc_item)
+    assert plan.vmem_working_set() + extra <= V5E.vmem_bytes
+    plan.validate()
 
 
 def test_validate_rejects_overflow():
