@@ -7,7 +7,8 @@
                             (+PackedWeight, +fused-A pipeline; writes
                             BENCH_fused_gemm.json)
   bench_moe_grouped       — grouped-packed MoE expert contraction vs the
-                            batched-einsum baseline (writes
+                            batched-einsum baseline, plus padded-vs-ragged
+                            at uniform/zipf routing skew (writes
                             BENCH_moe_grouped.json)
   bench_syr2k             — §5.1 SYR2K extension of the layered strategy
   bench_models            — end-to-end model step times (CPU observation)
@@ -18,7 +19,14 @@ Prints ``name,us_per_call,derived`` CSV.
 ``--smoke``: quick CI mode — runs only the packing/fused and grouped-MoE
 benches on shrunken sizes (sets REPRO_BENCH_SMOKE=1) so the scripts can't
 silently rot.
+
+``--check``: regression guard — snapshots the committed ``*.smoke.json``
+baselines before the run, then compares every fresh speedup ratio against
+its baseline row and FAILS (exit 1) on a >25% regression. Ratios (not raw
+times) keep the guard robust to CI machine speed; new rows with no baseline
+pass (they become the baseline once committed).
 """
+import json
 import os
 import pathlib
 import sys
@@ -27,11 +35,79 @@ import traceback
 # Allow both `python -m benchmarks.run` and `python benchmarks/run.py`.
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+REGRESSION_TOLERANCE = 1.25  # fail when fresh speedup < baseline / 1.25
+
+
+def _row_key(row: dict):
+    return (row.get("name"), row.get("dist"), row.get("shape"),
+            row.get("dtype"))
+
+
+def _speedup_fields(row: dict):
+    return {k: v for k, v in row.items()
+            if k.startswith("speedup") and isinstance(v, (int, float))}
+
+
+def snapshot_baselines() -> dict:
+    """Read the committed smoke artifacts BEFORE the run overwrites them."""
+    baselines = {}
+    for path in sorted(ROOT.glob("BENCH_*.smoke.json")):
+        try:
+            baselines[path.name] = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            continue
+    return baselines
+
+
+def check_regressions(baselines: dict) -> int:
+    """Compare fresh smoke speedups against the snapshot; return #failures."""
+    failures = 0
+    for fname, base in baselines.items():
+        path = ROOT / fname
+        if not path.exists():
+            print(f"REGRESSION {fname}: artifact missing after run",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        fresh = json.loads(path.read_text())
+        fresh_rows = {_row_key(r): r for r in fresh.get("results", [])}
+        for brow in base.get("results", []):
+            frow = fresh_rows.get(_row_key(brow))
+            if frow is None:
+                print(f"REGRESSION {fname}: row {_row_key(brow)} vanished",
+                      file=sys.stderr)
+                failures += 1
+                continue
+            for field, bval in _speedup_fields(brow).items():
+                fval = frow.get(field)
+                if not isinstance(fval, (int, float)):
+                    continue
+                if fval < bval / REGRESSION_TOLERANCE:
+                    print(f"REGRESSION {fname}: {_row_key(brow)} {field} "
+                          f"{fval:.2f} < baseline {bval:.2f} / "
+                          f"{REGRESSION_TOLERANCE}", file=sys.stderr)
+                    failures += 1
+                else:
+                    print(f"# guard ok {fname} {brow.get('name')}"
+                          f"{'/' + brow['dist'] if brow.get('dist') else ''} "
+                          f"{field}: {fval:.2f} (baseline {bval:.2f})")
+    return failures
+
 
 def main() -> None:
     smoke = "--smoke" in sys.argv[1:]
+    check = "--check" in sys.argv[1:]
+    if check and not smoke:
+        # The guard compares *.smoke.json artifacts; a full run never
+        # rewrites them, so --check alone would silently compare the
+        # committed baselines against themselves and report success.
+        print("--check requires --smoke (the guard compares the smoke "
+              "artifacts the run regenerates)", file=sys.stderr)
+        sys.exit(2)
     if smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+    baselines = snapshot_baselines() if check else {}
 
     # Import after the env flag so modules can read it at run time.
     from benchmarks import (bench_dtypes, bench_gemm_strategies,
@@ -55,6 +131,8 @@ def main() -> None:
             failures += 1
             print(f"{mod.__name__},ERROR,", file=sys.stderr)
             traceback.print_exc()
+    if check:
+        failures += check_regressions(baselines)
     if failures:
         sys.exit(1)
 

@@ -23,7 +23,11 @@ grid step — no per-call packing, no post-kernel elementwise ops.
 ``grouped_linear`` / ``grouped_silu_gate`` are the batched-expert analogues:
 every MoE expert contraction ([*lead, E, M, K] against an [E, K, N] stack or
 a load-time-packed :class:`GroupedPackedWeight`) routes through them, with
-the gate/up einsum pair fused into one silu-gate kernel pass.
+the gate/up einsum pair fused into one silu-gate kernel pass. Both accept
+``counts`` ([*lead, E] int32 valid-row counts, free from the routing
+one-hot): with counts the dispatch goes ragged — the grouped kernel
+scalar-prefetches the counts and skips the all-padding (expert, m-block)
+grid steps, so a capacity-padded MoE dispatch stops paying for its padding.
 """
 from __future__ import annotations
 
@@ -169,8 +173,33 @@ def _fold_expert_lead(x: jnp.ndarray):
     return x3, restore
 
 
+def _fold_counts(counts: jnp.ndarray, lead, e: int) -> jnp.ndarray:
+    """[*lead, E] routing counts -> [E, S] expert-major segment counts.
+
+    Must mirror :func:`_fold_expert_lead`'s row order: folding [*lead, E, C,
+    K] expert-major gives each expert S = prod(lead) contiguous C-row
+    segments, one per leading index, so counts fold the same way.
+    """
+    s = 1
+    for d in lead:
+        s *= d
+    if counts.shape != lead + (e,):
+        raise ValueError(
+            f"counts shape {counts.shape} != lead {lead} + (E={e},)")
+    return jnp.moveaxis(counts, -1, 0).reshape(e, s).astype(jnp.int32)
+
+
+def _mask_ragged_rows(x: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """Zero rows at/past counts: x [*lead, E, C, ...], counts [*lead, E]."""
+    c = x.shape[-2]
+    mask = jnp.arange(c)[(None,) * counts.ndim] < counts[..., None]
+    return jnp.where(mask[..., None], x, 0)
+
+
 def resolve_grouped_strategy(e: int, m: int, k: int, n: int, dtype,
-                             strategy: str = "auto") -> str:
+                             strategy: str = "auto", *,
+                             counts_known: bool = False,
+                             occupancy: float = 1.0) -> str:
     """Grouped analogue of :func:`resolve_strategy`.
 
     An explicit ``strategy`` always wins. The env override is consulted only
@@ -180,6 +209,13 @@ def resolve_grouped_strategy(e: int, m: int, k: int, n: int, dtype,
     grouped kernel at ``should_pack(group=E)`` shapes — B resident
     per-expert, per-call stack packing amortized like the 2-D fused path —
     and stays on the batched einsum elsewhere.
+
+    ``counts_known=True`` (the caller can thread valid-row counts) makes the
+    kernel crossover land on the ragged variant, and the crossover itself is
+    occupancy-aware: ``occupancy`` discounts the padded per-expert M to the
+    EXPECTED occupied rows, so a skewed dispatch whose real work is
+    decode-shaped stays on the einsum even when its padded capacity looks
+    prefill-shaped.
     """
     if strategy != "auto":
         return strategy
@@ -187,12 +223,14 @@ def resolve_grouped_strategy(e: int, m: int, k: int, n: int, dtype,
     if env in strat.GROUPED_STRATEGIES:
         return env
     if jax.default_backend() == "tpu" and should_pack(
-            m, k, n, dtype, fused=True, group=e):
-        return "grouped_packed"
+            m, k, n, dtype, fused=True, group=e, occupancy=occupancy):
+        return "grouped_packed_ragged" if counts_known else "grouped_packed"
     return "grouped_einsum"
 
 
 def grouped_linear(x: jnp.ndarray, w, bias: Optional[jnp.ndarray] = None, *,
+                   counts: Optional[jnp.ndarray] = None,
+                   occupancy: Optional[float] = None,
                    strategy: str = "auto", backend: Optional[str] = None,
                    out_dtype=None, epilogue: str = "none") -> jnp.ndarray:
     """out[..., e, m, :] = epilogue(x[..., e, m, :] @ w[e] + bias[e]).
@@ -201,6 +239,13 @@ def grouped_linear(x: jnp.ndarray, w, bias: Optional[jnp.ndarray] = None, *,
     sharing a single dispatch point. ``x``: [*lead, E, M, K] (the MoE path
     passes its [G, E, C, d] capacity tensor directly); ``w``: a raw [E, K, N]
     expert stack or a load-time-packed :class:`GroupedPackedWeight`.
+
+    ``counts`` ([*lead, E] int32, ``counts <= M``): per-(lead, expert)
+    valid-row counts — the MoE router computes them for free from its
+    one-hot. With counts the contraction is RAGGED: rows at/past the count
+    are treated as padding, skipped by the kernel's scalar-prefetch grid and
+    zeroed in the output. ``occupancy`` (static, in (0, 1]) is the expected
+    fill fraction used by the auto-strategy crossover; it defaults to 1.
 
     Raw weights on the einsum strategy contract WITHOUT folding the leading
     dims (the batched einsum keeps GSPMD's sharding choices intact — see the
@@ -211,6 +256,15 @@ def grouped_linear(x: jnp.ndarray, w, bias: Optional[jnp.ndarray] = None, *,
     only crosses a raw weight over on TPU at grouped-crossover shapes.
     """
     if _is_grouped_packed_weight(w):
+        if counts is not None:
+            lead = x.shape[:-3]
+            e, m, _ = x.shape[-3:]
+            x4 = jnp.moveaxis(x, -3, 0).reshape((e, -1) + x.shape[-2:])
+            y = w.matmul(x4, counts=_fold_counts(counts, lead, e), bias=bias,
+                         epilogue=epilogue, out_dtype=out_dtype or x.dtype,
+                         backend=backend)
+            n = y.shape[-1]
+            return jnp.moveaxis(y.reshape((e,) + lead + (m, n)), 0, -3)
         x3, restore = _fold_expert_lead(x)
         return restore(w.matmul(x3, bias=bias, epilogue=epilogue,
                                 out_dtype=out_dtype or x.dtype,
@@ -218,19 +272,31 @@ def grouped_linear(x: jnp.ndarray, w, bias: Optional[jnp.ndarray] = None, *,
     e, m, k = x.shape[-3:]
     n = w.shape[-1]
     lead = int(jnp.size(x) // max(e * m * k, 1))
-    s = resolve_grouped_strategy(e, lead * m, k, n, x.dtype, strategy)
+    s = resolve_grouped_strategy(e, lead * m, k, n, x.dtype, strategy,
+                                 counts_known=counts is not None,
+                                 occupancy=occupancy or 1.0)
+    if s == "grouped_packed" and counts is not None:
+        s = "grouped_packed_ragged"  # counts strictly add information
     if s == "grouped_einsum":
         acc = jnp.einsum("...emk,ekn->...emn", x, w)
-        return strat.grouped_epilogue(acc, None, bias, epilogue,
-                                      out_dtype or x.dtype)
+        out = strat.grouped_epilogue(acc, None, bias, epilogue,
+                                     out_dtype or x.dtype)
+        # ragged contract: rows at/past the count are zero. The contraction
+        # is row-local, so the output mask alone establishes it (no input
+        # masking pass over the capacity tensor needed).
+        return _mask_ragged_rows(out, counts) if counts is not None else out
     x3, restore = _fold_expert_lead(x)
-    return restore(strat.run_grouped(s, x3, w, backend=backend
-                                     or default_backend(), bias=bias,
-                                     epilogue=epilogue,
+    folded = (_fold_counts(counts, x.shape[:-3], e)
+              if counts is not None else None)
+    return restore(strat.run_grouped(s, x3, w, counts=folded,
+                                     backend=backend or default_backend(),
+                                     bias=bias, epilogue=epilogue,
                                      out_dtype=out_dtype or x.dtype))
 
 
 def grouped_silu_gate(x: jnp.ndarray, wg, wu, *,
+                      counts: Optional[jnp.ndarray] = None,
+                      occupancy: Optional[float] = None,
                       strategy: str = "auto", backend: Optional[str] = None,
                       out_dtype=None) -> jnp.ndarray:
     """silu(x @ wg) * (x @ wu), per expert — the fused MoE gate/up pair.
@@ -240,27 +306,44 @@ def grouped_silu_gate(x: jnp.ndarray, wg, wu, *,
     kernel path both packed stacks stream against ONE A read with the
     silu*mul applied on the VMEM gate accumulator (one kernel, one store);
     the einsum lowering computes the matching fused jnp expression so every
-    backend agrees.
+    backend agrees. ``counts``/``occupancy`` behave as in
+    :func:`grouped_linear` — with counts, BOTH dots skip the padding rows.
     """
     gp, up = _is_grouped_packed_weight(wg), _is_grouped_packed_weight(wu)
     if gp != up:
         raise ValueError("gate/up pair must be both packed or both raw")
     if gp:
+        if counts is not None:
+            lead = x.shape[:-3]
+            e, m, _ = x.shape[-3:]
+            x4 = jnp.moveaxis(x, -3, 0).reshape((e, -1) + x.shape[-2:])
+            y = wg.silu_gate(wu, x4, counts=_fold_counts(counts, lead, e),
+                             out_dtype=out_dtype or x.dtype, backend=backend)
+            n = y.shape[-1]
+            return jnp.moveaxis(y.reshape((e,) + lead + (m, n)), 0, -3)
         x3, restore = _fold_expert_lead(x)
         return restore(wg.silu_gate(wu, x3, out_dtype=out_dtype or x.dtype,
                                     backend=backend))
     e, m, k = x.shape[-3:]
     n = wg.shape[-1]
     lead = int(jnp.size(x) // max(e * m * k, 1))
-    s = resolve_grouped_strategy(e, lead * m, k, n, x.dtype, strategy)
+    s = resolve_grouped_strategy(e, lead * m, k, n, x.dtype, strategy,
+                                 counts_known=counts is not None,
+                                 occupancy=occupancy or 1.0)
+    if s == "grouped_packed" and counts is not None:
+        s = "grouped_packed_ragged"
     if s == "grouped_einsum":
         gate = jnp.einsum("...emk,ekn->...emn", x, wg)
         upp = jnp.einsum("...emk,ekn->...emn", x, wu)
-        return strat.grouped_epilogue(gate, upp, None, "silu_gate",
-                                      out_dtype or x.dtype)
+        out = strat.grouped_epilogue(gate, upp, None, "silu_gate",
+                                     out_dtype or x.dtype)
+        # row-local contraction: the output mask alone is the ragged contract
+        return _mask_ragged_rows(out, counts) if counts is not None else out
     x3, restore = _fold_expert_lead(x)
-    return restore(strat.run_grouped(s, x3, wg, b2=wu, backend=backend
-                                     or default_backend(),
+    folded = (_fold_counts(counts, x.shape[:-3], e)
+              if counts is not None else None)
+    return restore(strat.run_grouped(s, x3, wg, b2=wu, counts=folded,
+                                     backend=backend or default_backend(),
                                      epilogue="silu_gate",
                                      out_dtype=out_dtype or x.dtype))
 

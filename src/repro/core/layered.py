@@ -35,7 +35,8 @@ from repro.core.gemm import default_backend
 from repro.core.planner import (GemmPlan, choose_strategy, plan_gemm,
                                 plan_grouped_gemm)
 from repro.kernels import ref
-from repro.kernels.gemm_grouped import gemm_grouped_packed
+from repro.kernels.gemm_grouped import (gemm_grouped_packed,
+                                        gemm_grouped_packed_ragged)
 from repro.kernels.gemm_packed import gemm_packed_fused_a
 from repro.kernels.pack import pack_b, pack_b_grouped
 
@@ -214,13 +215,72 @@ class GroupedPackedWeight:
         sub, _ = mdt.alignment(a.dtype)
         return be == "pallas" and a.shape[1] > sub
 
-    def matmul(self, a: jnp.ndarray, *, bias=None, epilogue: str = "none",
-               out_dtype=None, backend: Optional[str] = None) -> jnp.ndarray:
+    def _check_ragged(self, a: jnp.ndarray, counts: jnp.ndarray) -> None:
+        if a.ndim != 4 or a.shape[0] != self.e or a.shape[3] != self.k:
+            raise ValueError(
+                f"ragged grouped operand mismatch: a={a.shape} must be "
+                f"[E={self.e}, S, C, K={self.k}]")
+        if counts.shape != a.shape[:2]:
+            raise ValueError(
+                f"counts {counts.shape} must match a's [E, S]={a.shape[:2]}")
+
+    def _ragged(self, a, counts, *, b2_packed=None, bias=None,
+                epilogue="none", out_dtype=None, backend=None):
+        """Dispatch the ragged contraction: a [E, S, C, K], counts [E, S].
+
+        On the pallas backend (TPU target), prefill-shaped segments run the
+        scalar-prefetch kernel, whose grid early-outs every all-padding
+        (segment, m-block) step; decode-shaped segments (C inside one
+        sublane block) have at most one block to skip and keep the masked
+        fallback. On the jnp backend the ragged contract lowers to the
+        masked batched einsum: XLA:CPU's monolithic batched GEMM outruns
+        any runtime-skipping control flow at serving shapes (measured — see
+        benchmarks/bench_moe_grouped.py), so the CPU path keeps padded-GEMM
+        speed and the ragged *semantics* (zeroed tails). The cond-guarded
+        CPU lowering of the skipping algorithm lives in the strategy
+        registry (``run_grouped("grouped_packed_ragged", backend="jnp")``)
+        as a comparison lowering, like the paper's slower codegen variants.
+        """
+        if (epilogue == "silu_gate") != (b2_packed is not None):
+            raise ValueError("epilogue='silu_gate' requires the partner "
+                             "stack (use silu_gate(), not matmul())")
+        e, s, c, k = a.shape
+        be = backend or default_backend()
+        sub, _ = mdt.alignment(a.dtype)
+        bm = min(self.plan.bm, max(-(-c // sub) * sub, sub))
+        if be == "pallas" and c > sub:
+            return gemm_grouped_packed_ragged(
+                a, self.packed, self.n, counts, b2_packed=b2_packed,
+                bm=bm, layout_b=self.plan.layout_b, bias=bias,
+                epilogue=epilogue, out_dtype=out_dtype or a.dtype)
+        b_full = ref.unpack_b_grouped_ref(self.packed, self.k, self.n,
+                                          self.plan.layout_b)
+        b2_full = (ref.unpack_b_grouped_ref(b2_packed, self.k, self.n,
+                                            self.plan.layout_b)
+                   if b2_packed is not None else None)
+        epi = (None if epilogue in ("none", "silu_gate")
+               else lambda x: apply_epilogue(epilogue, x))
+        return ref.grouped_ragged_ref(a, b_full, counts, b2=b2_full,
+                                      bias=bias, epilogue_fn=epi,
+                                      out_dtype=out_dtype or a.dtype)
+
+    def matmul(self, a: jnp.ndarray, *, counts=None, bias=None,
+               epilogue: str = "none", out_dtype=None,
+               backend: Optional[str] = None) -> jnp.ndarray:
         """out[e] = epilogue(a[e] @ W[e] + bias[e]); a: [E, M, K].
 
         Every expert's B tiles stream contiguously from the load-time-packed
         stack; A is consumed directly from its natural [E, M, K] layout.
+
+        With ``counts`` ([E, S] int32) the call is RAGGED: ``a`` must be
+        [E, S, C, K] (S capacity segments of C rows per expert) and rows
+        at/past ``counts[e, s]`` are padding — skipped by the kernel grid
+        and zero in the [E, S, C, N] output.
         """
+        if counts is not None:
+            self._check_ragged(a, counts)
+            return self._ragged(a, counts, bias=bias, epilogue=epilogue,
+                                out_dtype=out_dtype, backend=backend)
         self._check(a)
         if self._use_kernel(a, backend):
             return gemm_grouped_packed(a, self.packed, self.n, bm=self._bm(a),
@@ -234,19 +294,26 @@ class GroupedPackedWeight:
                                       out_dtype or a.dtype)
 
     def silu_gate(self, up: "GroupedPackedWeight", a: jnp.ndarray, *,
-                  out_dtype=None,
+                  counts=None, out_dtype=None,
                   backend: Optional[str] = None) -> jnp.ndarray:
         """silu(a @ self) * (a @ up) — the fused MoE gate/up pair.
 
         One pass over the gate accumulator: the kernel streams both packed
         stacks against a single A read and applies silu*mul in VMEM before
-        the one HBM store.
+        the one HBM store. ``counts`` selects the ragged form exactly as in
+        :meth:`matmul` — both packed streams skip the padding blocks.
         """
-        self._check(a)
-        up._check(a)
         if self.plan != up.plan or self.packed.shape != up.packed.shape:
             raise ValueError("silu_gate pair must share plan and geometry "
                              f"({self.plan} vs {up.plan})")
+        if counts is not None:
+            self._check_ragged(a, counts)
+            up._check_ragged(a, counts)
+            return self._ragged(a, counts, b2_packed=up.packed,
+                                epilogue="silu_gate", out_dtype=out_dtype,
+                                backend=backend)
+        self._check(a)
+        up._check(a)
         if self._use_kernel(a, backend):
             return gemm_grouped_packed(a, self.packed, self.n,
                                        b2_packed=up.packed, bm=self._bm(a),

@@ -183,7 +183,7 @@ def plan_grouped_gemm(e: int, m: int, k: int, n: int, dtype="float32", *,
 
 def should_pack(m: int, k: int, n: int, dtype="float32", *,
                 target: TpuTarget = V5E, fused: bool = False,
-                group: int = 1) -> bool:
+                group: int = 1, occupancy: float = 1.0) -> bool:
     """Strategy heuristic from the paper's own results: packing pays off once
     operands exceed the fast-memory envelope (Figs. 4-6: Tiling wins small,
     Tiling+Packing wins medium/large).
@@ -209,11 +209,20 @@ def should_pack(m: int, k: int, n: int, dtype="float32", *,
     least one full sublane block of rows per expert": a decode-shaped
     per-expert M (a handful of capacity slots) cannot amortize the grouped
     kernel's padded-envelope A stream and stays on the einsum fallback.
+
+    ``occupancy`` (grouped only) is the expected fraction of per-expert rows
+    that carry real tokens — a GShard capacity dispatch at
+    ``capacity_factor=f`` fills at most ``1/f`` of its slots, and routing
+    skew fills less. Condition (a) is tested against the EXPECTED rows
+    ``m * occupancy``, not the padded envelope ``m``: a skewed decode-ish
+    dispatch whose padded capacity looks prefill-shaped but whose occupied
+    rows fit a sublane block makes the einsum call, not the kernel call.
     """
     item = mdt.info(jnp.dtype(dtype).name if not isinstance(dtype, str)
                     else dtype).itemsize
     if group > 1:
-        return (m > target.sublane(item)
+        m_expected = m * min(max(occupancy, 0.0), 1.0)
+        return (m_expected > target.sublane(item)
                 and group * k * n * item > target.vmem_bytes // 32)
     if fused:
         return (m > 8 * target.mxu_dim

@@ -43,7 +43,9 @@ from repro.core import dtypes as mdt
 from repro.core.epilogue import apply_epilogue
 from repro.core.planner import GemmPlan, plan_gemm, plan_grouped_gemm
 from repro.kernels import ref
-from repro.kernels.gemm_grouped import gemm_grouped_packed
+from repro.kernels.gemm_grouped import (gemm_grouped_packed,
+                                        gemm_grouped_packed_ragged,
+                                        gemm_grouped_packed_ragged_jnp)
 from repro.kernels.gemm_packed import gemm_packed, gemm_packed_fused_a
 from repro.kernels.gemm_tiled import gemm_tiled
 from repro.kernels.gemm_vsx_like import matmul_vsx_like
@@ -58,7 +60,14 @@ STRATEGIES = ("naive", "pluto", "intrinsic", "tiling", "tiling_packing",
 #   grouped_packed  — the layered pipeline grown one dimension: B packed
 #                     tile-major per expert, A streamed pack-free, expert
 #                     axis outermost on the kernel grid
-GROUPED_STRATEGIES = ("grouped_einsum", "grouped_packed")
+#   grouped_packed_ragged
+#                   — grouped_packed plus a scalar-prefetched per-segment
+#                     valid-row count: (expert, m-block) grid steps that are
+#                     entirely padding early-out the K-loop, and the partial
+#                     block is clamped with an iota mask (padded-capacity MoE
+#                     dispatch stops paying for its padding)
+GROUPED_STRATEGIES = ("grouped_einsum", "grouped_packed",
+                      "grouped_packed_ragged")
 
 
 def _epilogue(acc, c, alpha, beta, out_dtype, bias=None, epilogue="none"):
@@ -304,25 +313,55 @@ def grouped_epilogue(acc, acc2, bias, epilogue, out_dtype):
     return out.astype(out_dtype)
 
 
-def run_grouped(strategy: str, a, b, *, b2=None, backend: str = "jnp",
-                plan: Optional[GemmPlan] = None, out_dtype=None,
-                bias=None, epilogue: str = "none", interpret=None):
+# Block rows per cond-guarded dot in the ragged jnp lowering: 16 is sublane-
+# aligned for both f32 and bf16 and measured fastest on the CPU backend
+# (small enough to skip most padding, big enough to amortize the loop).
+RAGGED_JNP_BM = 16
+
+
+def run_grouped(strategy: str, a, b, *, b2=None, counts=None,
+                backend: str = "jnp", plan: Optional[GemmPlan] = None,
+                out_dtype=None, bias=None, epilogue: str = "none",
+                interpret=None):
     """Grouped GEMM dispatch: out[e] = epilogue(A[e] @ B[e] (+ bias[e])).
 
     a: [E, M, K]; b (and the silu-gate partner ``b2``): raw [E, K, N].
     ``epilogue="silu_gate"`` computes silu(A@B) * (A@B2) — the MoE gate/up
     pair — in one pass on the kernel path, and as the matching fused jnp
     expression on the einsum path (CPU parity lowering).
+
+    ``counts`` ([E, S] int32, with M = S*C splitting each expert's rows into
+    S equal capacity segments) selects the ragged contract: rows at/past
+    ``counts[e, s]`` are treated as padding and zeroed in the output. It is
+    required by ``grouped_packed_ragged`` (which skips the padding at run
+    time) and honored by ``grouped_einsum`` (which masks it — the parity
+    lowering); ``grouped_packed`` rejects it.
     """
     if strategy not in GROUPED_STRATEGIES:
         raise KeyError(
             f"unknown grouped strategy {strategy!r}; one of {GROUPED_STRATEGIES}")
     if (b2 is not None) != (epilogue == "silu_gate"):
         raise ValueError("b2 goes with epilogue='silu_gate' (and only then)")
+    if strategy == "grouped_packed_ragged" and counts is None:
+        raise ValueError("grouped_packed_ragged requires counts")
+    if strategy == "grouped_packed" and counts is not None:
+        raise ValueError(
+            "grouped_packed ignores counts — use grouped_packed_ragged")
     e, m, k = a.shape
     n = b.shape[2]
     out_dtype = out_dtype or a.dtype
+    if counts is not None:
+        s = counts.shape[1]
+        if counts.shape[0] != e or m % s:
+            raise ValueError(
+                f"counts [E, S]={counts.shape} incompatible with a={a.shape}")
     if strategy == "grouped_einsum":
+        if counts is not None:
+            return ref.grouped_ragged_ref(
+                a.reshape(e, s, m // s, k), b, counts, b2=b2, bias=bias,
+                epilogue_fn=(None if epilogue in ("none", "silu_gate")
+                             else lambda x: apply_epilogue(epilogue, x)),
+                out_dtype=out_dtype).reshape(e, m, n)
         # The historical MoE lowering, dtype-preserving (XLA fuses the
         # epilogue): batched matmul in the compute dtype.
         acc = jnp.einsum("emk,ekn->emn", a, b)
@@ -330,6 +369,32 @@ def run_grouped(strategy: str, a, b, *, b2=None, backend: str = "jnp",
         return grouped_epilogue(acc, acc2, bias, epilogue, out_dtype)
     plan = plan or plan_grouped_gemm(e, m, k, n, a.dtype,
                                      n_b_streams=2 if b2 is not None else 1)
+    if strategy == "grouped_packed_ragged":
+        a4 = a.reshape(e, s, m // s, k)
+        if backend == "pallas":
+            bp = pack_b_grouped(b, plan.bk, plan.bn, layout=plan.layout_b,
+                                interpret=interpret)
+            b2p = (pack_b_grouped(b2, plan.bk, plan.bn, layout=plan.layout_b,
+                                  interpret=interpret)
+                   if b2 is not None else None)
+            out = gemm_grouped_packed_ragged(
+                a4, bp, n, counts, b2_packed=b2p, bm=plan.bm,
+                layout_b=plan.layout_b, out_dtype=out_dtype,
+                epilogue=epilogue, bias=bias, interpret=interpret)
+        else:
+            # The jnp lowering consumes the packed stack like the kernel
+            # does (it unpacks a natural view internally): packing stays a
+            # real per-call cost here, as in every jnp strategy lowering —
+            # production amortizes it at load time via GroupedPackedWeight.
+            bp = ref.pack_b_grouped_ref(b, plan.bk, plan.bn, plan.layout_b)
+            b2p = (ref.pack_b_grouped_ref(b2, plan.bk, plan.bn,
+                                          plan.layout_b)
+                   if b2 is not None else None)
+            out = gemm_grouped_packed_ragged_jnp(
+                a4, bp, n, counts, b2_packed=b2p, bm=RAGGED_JNP_BM,
+                layout_b=plan.layout_b, out_dtype=out_dtype,
+                epilogue=epilogue, bias=bias)
+        return out.reshape(e, m, n)
     if backend == "pallas":
         bp = pack_b_grouped(b, plan.bk, plan.bn, layout=plan.layout_b,
                             interpret=interpret)

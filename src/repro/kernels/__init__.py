@@ -9,7 +9,9 @@ Layout:
                       pack-free from its natural layout)
   gemm_grouped.py   — grouped (batched-expert) GEMM over the packed expert
                       stack [E,Nb,Kb,bk,bn], incl. the fused silu-gate pair
-                      (the MoE expert contraction as one layered kernel)
+                      (the MoE expert contraction as one layered kernel) and
+                      the ragged variant (scalar-prefetched per-segment
+                      valid-row counts; all-padding grid steps early-out)
   gemm_vsx_like.py  — generic vector-unit lowering (paper's VSX baseline),
                       strided and packed-B variants
   flash_attention.py— blocked online-softmax attention (long-context hot spot)

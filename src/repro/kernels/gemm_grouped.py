@@ -18,6 +18,33 @@ grouped-only fusion: ``epilogue="silu_gate"`` takes a *second* packed weight
 stack and computes ``silu(A@Bg) * (A@Bu)`` with two revolving accumulators
 sharing a single A stream — the MoE gate/up einsum pair collapses into one
 pass over the gate accumulator (one kernel, one A read, one HBM store).
+
+``gemm_grouped_packed_ragged`` is the occupancy-aware variant: the capacity
+dimension of a GShard-style dispatch is padded (capacity C per expert), so a
+skewed router leaves whole stretches of all-zero rows in A. The ragged kernel
+takes a scalar-prefetched per-segment valid-row count
+(``PrefetchScalarGridSpec``) and (a) early-outs the K-loop of every
+(segment, m-block) grid step that is entirely padding — the count-aware A/B
+index maps also pin the DMA indices of skipped steps, so runs of skipped
+steps re-reference already-resident tiles instead of fetching new ones — and
+(b) clamps the final partial m-block with an iota row mask, so dropped-token
+slots are stored as zeros and never carry garbage back to HBM. The micro
+kernel (the dot per grid step) is byte-identical to the padded kernel's;
+only the outer layers learned the data shape, per the paper's layering.
+
+``gemm_grouped_packed_ragged_jnp`` is the matching jnp lowering (runs
+natively on CPU): the same (segment, m-block) decomposition expressed as a
+``lax.cond``-guarded block loop, so XLA executes — not merely masks — only
+the occupied blocks at run time. It is a COMPARISON lowering (the strategy
+registry's CPU expression of the skipping algorithm, parity-tested against
+the kernel): XLA:CPU's monolithic batched GEMM beats any serialized
+control-flow skipping at serving shapes, so the production jnp fallback in
+``core.layered`` keeps the masked batched einsum instead.
+
+Counts contract (shared by both lowerings): ``counts[e, s]`` is the number of
+valid leading rows of segment ``s`` of expert ``e``, int32, ``0 <= counts <=
+C``; rows at or past the count are treated as padding regardless of content,
+and are zero in the output.
 """
 from __future__ import annotations
 
@@ -29,7 +56,12 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.common import (KERNEL_EPILOGUES, acc_dtype_for, cdiv,
                                   default_interpret, pad2d, pallas_kwargs,
-                                  vmem_scratch)
+                                  tpu_compiler_params, vmem_scratch)
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
 
 
 def _grouped_kernel(*refs, k_steps, layout_b, epilogue, has_bias, has_gate):
@@ -162,3 +194,284 @@ def gemm_grouped_packed(a: jnp.ndarray,
                                  "arbitrary")),
     )(*operands)
     return out[:, :m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Ragged (occupancy-aware) grouped GEMM
+# ---------------------------------------------------------------------------
+
+def _ragged_kernel(*refs, k_steps, bm, layout_b, epilogue, has_bias,
+                   has_gate):
+    counts_ref, a_ref, b_ref = refs[0], refs[1], refs[2]
+    idx = 3
+    b2_ref = None
+    if has_gate:
+        b2_ref = refs[idx]
+        idx += 1
+    bias_ref = None
+    if has_bias:
+        bias_ref = refs[idx]
+        idx += 1
+    o_ref = refs[idx]
+    acc_ref = refs[idx + 1]
+    acc2_ref = refs[idx + 2] if has_gate else None
+
+    g = pl.program_id(0)
+    i = pl.program_id(1)
+    # Valid rows of THIS m-block: whole blocks below the count contribute bm,
+    # the partial block gets the remainder, blocks past the count get 0.
+    bc = jnp.clip(counts_ref[g] - i * bm, 0, bm)
+    live = bc > 0
+    last_k = pl.program_id(3) == k_steps - 1
+
+    @pl.when(live & (pl.program_id(3) == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if has_gate:
+            acc2_ref[...] = jnp.zeros_like(acc2_ref)
+
+    rhs_contract = 0 if layout_b == "row" else 1
+
+    def contract(b_tile):
+        return jax.lax.dot_general(
+            a_ref[0], b_tile, (((1,), (rhs_contract,)), ((), ())),
+            preferred_element_type=acc_ref.dtype)
+
+    # Zero-work early-out: an all-padding block skips the dot(s) entirely —
+    # the grid still visits the step, but the MXU never fires.
+    @pl.when(live)
+    def _acc():
+        acc_ref[...] += contract(b_ref[0, 0, 0])
+        if has_gate:
+            acc2_ref[...] += contract(b2_ref[0, 0, 0])
+
+    @pl.when(live & last_k)
+    def _epilogue():
+        out = acc_ref[...]
+        if bias_ref is not None:
+            out = out + bias_ref[0].astype(out.dtype)
+        if has_gate:
+            out = KERNEL_EPILOGUES["silu"](out) * acc2_ref[...]
+        else:
+            out = KERNEL_EPILOGUES[epilogue](out)
+        # Masked store: rows at/past the count are written as zeros, so
+        # dropped-token slots never carry garbage (or a bias image) to HBM.
+        rows = jax.lax.broadcasted_iota(jnp.int32, out.shape, 0)
+        o_ref[0] = jnp.where(rows < bc, out, 0).astype(o_ref.dtype)
+
+    # All-padding block: one cheap zero store (no accumulator touch, no
+    # epilogue) — the output block must still be written, it just never
+    # carries data.
+    @pl.when(jnp.logical_not(live) & last_k)
+    def _store_zeros():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+
+def gemm_grouped_packed_ragged(a: jnp.ndarray,
+                               b_packed: jnp.ndarray,
+                               n: int,
+                               counts: jnp.ndarray,
+                               *,
+                               b2_packed: jnp.ndarray | None = None,
+                               bm: int = 128,
+                               layout_b: str = "row",
+                               out_dtype=None,
+                               epilogue: str = "none",
+                               bias: jnp.ndarray | None = None,
+                               interpret: bool | None = None) -> jnp.ndarray:
+    """Occupancy-aware grouped GEMM over a scalar-prefetched count vector.
+
+    a:        [E, S, C, K] — per-expert activations in S equal capacity
+              segments of C rows each (the MoE path's [G, E, C, d] dispatch
+              tensor, expert-major; S=1 for a plain [E, M, K] problem).
+    counts:   [E, S] int32, ``counts[e, s] <= C`` — valid leading rows per
+              segment. Prefetched to SMEM before the grid runs, so both the
+              index maps and the kernel body can branch on it.
+    b_packed: [E, Nb, Kb, bk, bn] from ``pack.pack_b_grouped`` (load time).
+
+    Returns [E, S, C, n]; rows at/past ``counts[e, s]`` are zero. Up to the
+    masked tail rows, the result is identical to ``gemm_grouped_packed`` on
+    the same operands with the padding rows zeroed.
+    """
+    if pltpu is None:  # pragma: no cover
+        raise RuntimeError("gemm_grouped_packed_ragged needs "
+                           "jax.experimental.pallas.tpu "
+                           "(PrefetchScalarGridSpec)")
+    if interpret is None:
+        interpret = default_interpret()
+    has_gate = epilogue == "silu_gate"
+    if has_gate != (b2_packed is not None):
+        raise ValueError("epilogue='silu_gate' requires b2_packed (and only "
+                         "silu_gate takes it)")
+    e, s, c, k = a.shape
+    eb, nb, kb = b_packed.shape[:3]
+    assert eb == e, (a.shape, b_packed.shape)
+    if counts.shape != (e, s):
+        raise ValueError(f"counts must be [E, S]={e, s}; got {counts.shape}")
+    if layout_b == "row":
+        bk, bn = b_packed.shape[3:]
+    else:
+        bn, bk = b_packed.shape[3:]
+    assert cdiv(k, bk) == kb, (a.shape, b_packed.shape, bk)
+    if has_gate:
+        assert b2_packed.shape == b_packed.shape, (b2_packed.shape,
+                                                   b_packed.shape)
+    out_dtype = out_dtype or a.dtype
+    acc_dtype = acc_dtype_for(a.dtype)
+    grp = e * s
+    bm = min(bm, -(-c // 8) * 8)  # never block beyond the segment envelope
+    a3 = a.reshape(grp, c, k)
+    a_p = jax.vmap(lambda ae: pad2d(ae, bm, bk))(a3)   # [E*S, Cp, Kp]
+    mb = cdiv(c, bm)
+    counts_flat = jnp.clip(counts.reshape(grp), 0, c).astype(jnp.int32)
+
+    grid = (grp, mb, nb, kb)  # segment outermost; K innermost (revolving acc)
+    tb = b_packed.shape[3:]
+
+    def live(cnt, g, i):
+        return cnt[g] > i * bm
+
+    # Count-aware index maps: a skipped (g, i) step pins its A/B indices to
+    # the block-0 coordinates, so a run of skipped steps issues no new DMAs
+    # (Pallas elides the copy when consecutive indices coincide).
+    def a_map(g, i, j, kk, cnt):
+        ok = live(cnt, g, i)
+        return (g, jnp.where(ok, i, 0), jnp.where(ok, kk, 0))
+
+    def b_map(g, i, j, kk, cnt):
+        return (g // s, j, jnp.where(live(cnt, g, i), kk, 0), 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), a_map),
+        pl.BlockSpec((1, 1, 1) + tb, b_map),
+    ]
+    operands = [a_p, b_packed]
+    if has_gate:
+        in_specs.append(pl.BlockSpec((1, 1, 1) + tb, b_map))
+        operands.append(b2_packed)
+    has_bias = bias is not None
+    if has_bias:
+        assert bias.shape == (e, n), (bias.shape, (e, n))
+        in_specs.append(
+            pl.BlockSpec((1, 1, bn), lambda g, i, j, kk, cnt: (g // s, 0, j)))
+        operands.append(jax.vmap(
+            lambda be: pad2d(be.reshape(1, n), 1, bn))(bias))
+    scratch = [vmem_scratch((bm, bn), acc_dtype)]
+    if has_gate:
+        scratch.append(vmem_scratch((bm, bn), acc_dtype))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn),
+                               lambda g, i, j, kk, cnt: (g, i, j)),
+        scratch_shapes=scratch,
+    )
+    kwargs = {"interpret": interpret}
+    if not interpret:
+        params = tpu_compiler_params(
+            ("parallel", "parallel", "parallel", "arbitrary"))
+        if params is not None:
+            kwargs["compiler_params"] = params
+    out = pl.pallas_call(
+        functools.partial(_ragged_kernel, k_steps=kb, bm=bm,
+                          layout_b=layout_b, epilogue=epilogue,
+                          has_bias=has_bias, has_gate=has_gate),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((grp, mb * bm, nb * bn), out_dtype),
+        **kwargs,
+    )(counts_flat, *operands)
+    return out[:, :c, :n].reshape(e, s, c, n)
+
+
+def unpack_b_grouped(b_packed: jnp.ndarray, k: int, n: int,
+                     layout_b: str = "row") -> jnp.ndarray:
+    """Tile-major [E, Nb, Kb, bk, bn] -> natural [E, K, N] view (one copy)."""
+    if layout_b == "col":
+        b_packed = b_packed.transpose(0, 1, 2, 4, 3)
+    e, nb, kb, bk, bn = b_packed.shape
+    full = b_packed.transpose(0, 2, 3, 1, 4).reshape(e, kb * bk, nb * bn)
+    return full[:, :k, :n]
+
+
+def gemm_grouped_packed_ragged_jnp(a: jnp.ndarray,
+                                   b_packed: jnp.ndarray,
+                                   n: int,
+                                   counts: jnp.ndarray,
+                                   *,
+                                   b2_packed: jnp.ndarray | None = None,
+                                   bm: int = 16,
+                                   layout_b: str = "row",
+                                   out_dtype=None,
+                                   epilogue: str = "none",
+                                   bias: jnp.ndarray | None = None) -> jnp.ndarray:
+    """jnp lowering of :func:`gemm_grouped_packed_ragged` (CPU-native).
+
+    Same contract and (segment, m-block) decomposition; the early-out is a
+    ``lax.cond`` per block, which XLA executes as a real branch — occupied
+    blocks run a full-width [bm, K] x [K, N] dot in f32, padding blocks run
+    nothing. The packed stack is unpacked to a natural [E, K, N] view once
+    per call (a reshape-transpose, trivial next to the dots) so the block
+    dots hit the backend's fast GEMM path instead of a tile-by-tile einsum.
+
+    This is the strategy registry's comparison lowering, not the serving
+    fallback: the block loop is serialized by construction, and XLA:CPU's
+    batched GEMM wins back more through parallel packing/blocking than the
+    skipped padding saves at serving shapes (the masked einsum in
+    ``core.layered`` is the production CPU path). It exists to express — and
+    property-test — the exact skipping semantics of the kernel in portable
+    jnp, and to measure the algorithm where a serialized backend is honest
+    about it.
+    """
+    has_gate = epilogue == "silu_gate"
+    if has_gate != (b2_packed is not None):
+        raise ValueError("epilogue='silu_gate' requires b2_packed (and only "
+                         "silu_gate takes it)")
+    e, s, c, k = a.shape
+    if counts.shape != (e, s):
+        raise ValueError(f"counts must be [E, S]={e, s}; got {counts.shape}")
+    out_dtype = out_dtype or a.dtype
+    grp = e * s
+    bm = max(8, min(bm, -(-c // 8) * 8))
+    mb = cdiv(c, bm)
+    cp = mb * bm
+    b_full = unpack_b_grouped(b_packed, k, n, layout_b).astype(jnp.float32)
+    b2_full = (unpack_b_grouped(b2_packed, k, n, layout_b).astype(jnp.float32)
+               if has_gate else None)
+    a3 = a.reshape(grp, c, k).astype(jnp.float32)
+    if cp != c:
+        a3 = jnp.pad(a3, ((0, 0), (0, cp - c), (0, 0)))
+    counts_flat = jnp.clip(counts.reshape(grp), 0, c).astype(jnp.int32)
+
+    segs = []
+    for g in range(grp):           # static unroll: E*S segments
+        eg = g // s                # static expert index -> static B slice
+        ag, be = a3[g], b_full[eg]
+        b2e = b2_full[eg] if has_gate else None
+        bias_e = (bias[eg].astype(jnp.float32) if bias is not None else None)
+        cnt = counts_flat[g]
+
+        def body(i, out, ag=ag, be=be, b2e=b2e, bias_e=bias_e, cnt=cnt):
+            bc = jnp.clip(cnt - i * bm, 0, bm)
+
+            def compute():
+                blk = jax.lax.dynamic_slice_in_dim(ag, i * bm, bm, 0)
+                acc = blk @ be
+                if bias_e is not None:
+                    acc = acc + bias_e
+                if has_gate:
+                    return KERNEL_EPILOGUES["silu"](acc) * (blk @ b2e)
+                return KERNEL_EPILOGUES[epilogue](acc)
+
+            blk_out = jax.lax.cond(bc > 0, compute,
+                                   lambda: jnp.zeros((bm, n), jnp.float32))
+            rows = jax.lax.broadcasted_iota(jnp.int32, (bm, n), 0)
+            blk_out = jnp.where(rows < bc, blk_out, 0)
+            return jax.lax.dynamic_update_slice_in_dim(out, blk_out,
+                                                       i * bm, 0)
+
+        segs.append(jax.lax.fori_loop(0, mb, body,
+                                      jnp.zeros((cp, n), jnp.float32)))
+    out = jnp.stack(segs)[:, :c]
+    return out.reshape(e, s, c, n).astype(out_dtype)

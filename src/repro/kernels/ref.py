@@ -146,6 +146,15 @@ def pack_b_grouped_ref(b: jnp.ndarray, bk: int, bn: int, layout: str = "row"):
     return jax.vmap(lambda be: pack_b_ref(be, bk, bn, layout))(b)
 
 
+def unpack_b_grouped_ref(bp: jnp.ndarray, k: int, n: int,
+                         layout: str = "row"):
+    """[E, Nb, Kb, bk, bn] -> natural [E, K, N] (single implementation in
+    ``gemm_grouped.unpack_b_grouped``; re-exported here beside the other
+    pack/unpack oracles)."""
+    from repro.kernels.gemm_grouped import unpack_b_grouped
+    return unpack_b_grouped(bp, k, n, layout)
+
+
 def grouped_fused_acc_ref(a, bp, n: int, layout_b="row", bm: int = 8):
     """Grouped pack-free-A contraction: natural [E,M,K] A against the packed
     expert stack [E,Nb,Kb,bk,bn]. Returns the f32 accumulator [E, m, n] —
@@ -153,6 +162,38 @@ def grouped_fused_acc_ref(a, bp, n: int, layout_b="row", bm: int = 8):
     return jax.vmap(
         lambda ae, bpe: fused_packed_acc_ref(ae, bpe, n, layout_b=layout_b,
                                              bm=bm))(a, bp)
+
+
+def ragged_row_mask(c: int, counts):
+    """[..., S] counts -> [..., S, C] bool; True on the valid leading rows."""
+    return jnp.arange(c)[(None,) * counts.ndim] < counts[..., None]
+
+
+def grouped_ragged_ref(a, b, counts, *, b2=None, bias=None,
+                       epilogue_fn=None, out_dtype=None):
+    """Oracle for the ragged grouped GEMM — the padded contraction with the
+    tail rows zeroed on BOTH sides of the kernel.
+
+    a: [E, S, C, K]; b (and silu-gate partner ``b2``): [E, K, N];
+    counts: [E, S]. Rows at/past ``counts[e, s]`` are zeroed in A before the
+    einsum and in the output after the epilogue — exactly the function the
+    ragged kernel computes by skipping them.
+    """
+    e, s, c, k = a.shape
+    mask = ragged_row_mask(c, counts)                       # [E, S, C]
+    am = jnp.where(mask[..., None], a, 0).astype(jnp.float32)
+    acc = jnp.einsum("esck,ekn->escn", am, b.astype(jnp.float32))
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)[:, None, None, :]
+    if b2 is not None:
+        out = jax.nn.silu(acc) * jnp.einsum("esck,ekn->escn", am,
+                                            b2.astype(jnp.float32))
+    elif epilogue_fn is not None:
+        out = epilogue_fn(acc)
+    else:
+        out = acc
+    out = jnp.where(mask[..., None], out, 0)
+    return out.astype(out_dtype or a.dtype)
 
 
 # ---------------------------------------------------------------------------

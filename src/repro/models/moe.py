@@ -18,6 +18,16 @@ pack-free A streaming over the expert grid axis, and the gate/up pair fused
 into ONE silu-gate kernel pass (silu applied to the VMEM gate accumulator,
 single HBM store). Decode-shaped per-expert capacity falls back to the jnp
 lowering of the packed contraction (see GroupedPackedWeight._use_kernel).
+
+The packed path is RAGGED: routing yields the per-(group, expert) occupied
+slot counts for free (``counts[g, e] = |tokens kept for e in g| <= C``,
+int32), and all three contractions thread them down to the scalar-prefetch
+grid of ``gemm_grouped_packed_ragged``, which skips the all-padding
+(expert, m-block) grid steps instead of multiplying zero rows — at
+``capacity_factor=1.25`` with skewed routing, most of the padded capacity.
+Routing also surfaces its silent-drop accounting: ``apply_moe`` returns a
+``stats`` dict with the number of capacity-dropped token assignments per
+call and the per-(group, expert) occupancy counts.
 """
 from __future__ import annotations
 
@@ -55,11 +65,18 @@ def _capacity(group: int, cfg: ModelConfig) -> int:
     return max(8, -(-c // 8) * 8)  # pad to a sublane multiple
 
 
-def route(cfg: ModelConfig, router_w, x_grp) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """x_grp: [G, g, d] -> dispatch [G,g,E,C] (bool-ish), combine [G,g,E,C], aux.
+def route(cfg: ModelConfig, router_w, x_grp) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, dict]:
+    """x_grp: [G, g, d] -> dispatch [G,g,E,C], combine [G,g,E,C], aux, stats.
 
     Position-in-expert comes from a cumulative sum over the group (tokens past
-    capacity are dropped — standard GShard semantics).
+    capacity are dropped — standard GShard semantics). ``stats`` makes the
+    routing outcome observable instead of silent:
+      counts   [G, E] int32 — occupied capacity slots per (group, expert);
+               the kept slots are a PREFIX of each expert's capacity (the
+               cumsum assigns positions in priority order), so ``counts`` is
+               exactly the ragged-GEMM valid-row vector.
+      dropped  () int32 — token assignments discarded by the capacity bound
+               this call (the silent-drop accounting).
     """
     g_tokens = x_grp.shape[1]
     e = cfg.num_experts
@@ -91,7 +108,9 @@ def route(cfg: ModelConfig, router_w, x_grp) -> Tuple[jnp.ndarray, jnp.ndarray, 
     frac_tokens = jnp.mean(onehot.sum(2).astype(jnp.float32), axis=1)  # [G,E]
     frac_probs = jnp.mean(probs, axis=1)                    # [G, E]
     aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
-    return dispatch, combine, aux
+    counts = chosen.sum(axis=1).astype(jnp.int32)           # [G, E]
+    dropped = (onehot.sum() - keep.sum()).astype(jnp.int32)
+    return dispatch, combine, aux, {"counts": counts, "dropped": dropped}
 
 
 def _expert_weight(w, dtype):
@@ -102,8 +121,17 @@ def _expert_weight(w, dtype):
     return w.astype(dtype)
 
 
-def apply_moe(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: [B,S,d] -> ([B,S,d], aux_loss)."""
+def apply_moe(cfg: ModelConfig, p: dict,
+              x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, dict]:
+    """x: [B,S,d] -> ([B,S,d], aux_loss, stats).
+
+    ``stats`` (all device scalars/arrays, safe inside jit):
+      dropped_tokens  () int32 — token assignments silently discarded by the
+                      capacity bound this call (GShard drop semantics made
+                      visible instead of folded into zeros).
+      expert_counts   [G, E] int32 — occupied capacity slots per (group,
+                      expert); also the ragged-GEMM count vector.
+    """
     b, s, d = x.shape
     tokens = b * s
     g = min(GROUP_SIZE, tokens)
@@ -112,7 +140,8 @@ def apply_moe(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, j
     x_grp = x.reshape(n_groups, g, d)
     x_grp = shard(x_grp, "batch")
 
-    dispatch, combine, aux = route(cfg, p["router"], x_grp)
+    dispatch, combine, aux, rstats = route(cfg, p["router"], x_grp)
+    counts = rstats["counts"]                               # [G, E] int32
     dispatch = dispatch.astype(x.dtype)
     combine = combine.astype(x.dtype)
 
@@ -127,10 +156,22 @@ def apply_moe(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, j
     # contract unfolded (GSPMD sharding stays intact) and with the exact
     # historical lowering; the kernel path is selected by load-time packing
     # (GroupedPackedWeight), which bypasses the strategy resolver entirely.
+    # Packed weights additionally go RAGGED: the routing counts ride down to
+    # the kernel grid, which skips every all-padding (expert, m-block) step.
+    # Padding rows of expert_in are zero, so ragged and padded agree exactly
+    # (silu(0)*0 == 0 and 0 @ wo == 0); the einsum path needs no counts.
     packed = isinstance(wg, GroupedPackedWeight)
     strategy = "auto" if packed else "grouped_einsum"
-    h = grouped_silu_gate(expert_in, wg, wu, strategy=strategy)
-    expert_out = grouped_linear(h, wo, strategy=strategy)
+    rcounts = counts if packed else None
+    # Static expected occupancy of the capacity tensor (the crossover prior):
+    # g*k assignments spread over E*C slots, i.e. ~1/capacity_factor.
+    cap = dispatch.shape[-1]
+    occ = min(1.0, (g * cfg.num_experts_per_tok)
+              / max(cfg.num_experts * cap, 1))
+    h = grouped_silu_gate(expert_in, wg, wu, strategy=strategy,
+                          counts=rcounts, occupancy=occ)
+    expert_out = grouped_linear(h, wo, strategy=strategy, counts=rcounts,
+                                occupancy=occ)
     # NOTE: no sharding constraint on expert_out — pinning it would force the
     # TP partial-sum all-reduce onto the capacity tensor [G,E,C,d], which is
     # k*capacity_factor (2.5x) larger than the token tensor the combine
@@ -141,4 +182,5 @@ def apply_moe(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, j
     # reduce-scatter the TP/EP-partial combine into the seq-sharded stream;
     # saved under remat so backward skips the collective (§Perf H4)
     out = checkpoint_name(shard(out, "batch", "seq"), "mixer_out")
-    return out, aux.astype(jnp.float32)
+    stats = {"dropped_tokens": rstats["dropped"], "expert_counts": counts}
+    return out, aux.astype(jnp.float32), stats

@@ -84,7 +84,7 @@ def block(cfg: ModelConfig, p: dict, x: jnp.ndarray, positions: jnp.ndarray,
     if cfg.d_ff > 0:
         h2 = apply_norm(cfg, p["norm2"], x)
         if cfg.is_moe:
-            out, aux = moe_mod.apply_moe(cfg, p["moe"], h2)
+            out, aux, _ = moe_mod.apply_moe(cfg, p["moe"], h2)
             x = x + out
         else:
             x = x + apply_mlp(cfg, p["mlp"], h2)
@@ -203,7 +203,7 @@ def prefill_block(cfg: ModelConfig, p: dict, x: jnp.ndarray,
     if cfg.d_ff > 0:
         h2 = apply_norm(cfg, p["norm2"], x)
         if cfg.is_moe:
-            out, _ = moe_mod.apply_moe(cfg, p["moe"], h2)
+            out, _, _ = moe_mod.apply_moe(cfg, p["moe"], h2)
             x = x + out
         else:
             x = x + apply_mlp(cfg, p["mlp"], h2)
@@ -281,7 +281,7 @@ def decode_block(cfg: ModelConfig, p: dict, cache: dict, x: jnp.ndarray,
     if cfg.d_ff > 0:
         h2 = apply_norm(cfg, p["norm2"], x)
         if cfg.is_moe:
-            out, _ = moe_mod.apply_moe(cfg, p["moe"], h2)
+            out, _, _ = moe_mod.apply_moe(cfg, p["moe"], h2)
             x = x + out
         else:
             x = x + apply_mlp(cfg, p["mlp"], h2)

@@ -13,7 +13,17 @@ Production posture:
     prefill/decode step then runs the pack-free-A fused GEMM kernels: no
     per-call packing, bias/activation applied in the kernel's store
     epilogue, and the MoE gate/up pair fused into one grouped silu-gate
-    kernel pass (see core/layered.py).
+    kernel pass (see core/layered.py);
+  * packed MoE serving is RAGGED: all three expert contractions (the fused
+    gate/up pass and the down-projection) run through the scalar-prefetch
+    grid of ``gemm_grouped_packed_ragged``, fed by the per-(group, expert)
+    occupied-slot counts the router computes for free. Counts contract:
+    ``counts[g, e] <= C`` (the padded capacity), dtype int32, passed as the
+    kernel's scalar-prefetch operand — valid rows are a prefix of each
+    expert's capacity segment, all-padding (expert, m-block) grid steps
+    early-out the K-loop, and the partial block is clamped with an iota
+    mask. A skewed decode/prefill router therefore pays for the tokens it
+    actually routed, not for ``capacity_factor`` times that.
 """
 from __future__ import annotations
 

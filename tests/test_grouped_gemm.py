@@ -306,12 +306,14 @@ def test_apply_moe_packed_matches_raw(rng):
     cfg = _moe_cfg()
     params = moe_params(cfg, jax.random.PRNGKey(0))
     x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)), jnp.float32)
-    out_raw, aux_raw = apply_moe(cfg, params, x)
+    out_raw, aux_raw, stats_raw = apply_moe(cfg, params, x)
     packed = dict(params)
     for key, streams in (("wg", 2), ("wu", 2), ("wo", 1)):
         packed[key] = GroupedPackedWeight.pack(
             params[key].astype(jnp.float32), n_b_streams=streams)
-    out_packed, aux_packed = apply_moe(cfg, packed, x)
+    out_packed, aux_packed, stats_packed = apply_moe(cfg, packed, x)
+    np.testing.assert_array_equal(np.asarray(stats_raw["expert_counts"]),
+                                  np.asarray(stats_packed["expert_counts"]))
     np.testing.assert_allclose(np.asarray(out_raw), np.asarray(out_packed),
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(float(aux_raw), float(aux_packed), rtol=1e-5)

@@ -21,7 +21,7 @@ def test_dispatch_is_one_hot_per_choice(rng):
     x = jnp.asarray(rng.normal(size=(1, 32, cfg.d_model)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(cfg.d_model, cfg.num_experts)),
                     jnp.float32)
-    dispatch, combine, aux = route(cfg, w, x)
+    dispatch, combine, aux, _ = route(cfg, w, x)
     d = np.asarray(dispatch)
     # each (token, expert) occupies at most one capacity slot
     assert d.max() <= 1
@@ -37,7 +37,7 @@ def test_combine_weights_bounded(rng):
     x = jnp.asarray(rng.normal(size=(1, 32, cfg.d_model)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(cfg.d_model, cfg.num_experts)),
                     jnp.float32)
-    _, combine, _ = route(cfg, w, x)
+    _, combine, _, _ = route(cfg, w, x)
     c = np.asarray(combine)
     assert np.all(c >= 0)
     assert np.all(c.sum((-1, -2)) <= 1 + 1e-5)  # softmax over top-k
@@ -51,7 +51,7 @@ def test_property_capacity_never_exceeded(tokens, e, k):
     r = np.random.default_rng(tokens * 31 + e + k)
     x = jnp.asarray(r.normal(size=(1, tokens, cfg.d_model)), jnp.float32)
     w = jnp.asarray(r.normal(size=(cfg.d_model, e)), jnp.float32)
-    dispatch, _, _ = route(cfg, w, x)
+    dispatch, _, _, _ = route(cfg, w, x)
     cap = _capacity(tokens, cfg)
     per_expert = np.asarray(dispatch).sum((0, 1, 3))
     assert np.all(per_expert <= cap)
@@ -59,21 +59,68 @@ def test_property_capacity_never_exceeded(tokens, e, k):
 
 def test_low_capacity_drops_tokens(rng):
     """At capacity_factor << 1 some assignments must drop (documented GShard
-    semantics — the source of prefill/forward divergence for MoE archs)."""
+    semantics — the source of prefill/forward divergence for MoE archs), and
+    the drop count is surfaced in the routing stats rather than silent."""
     cfg = _cfg(cf=0.2)
     x = jnp.asarray(rng.normal(size=(1, 64, cfg.d_model)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(cfg.d_model, cfg.num_experts)),
                     jnp.float32)
-    dispatch, _, _ = route(cfg, w, x)
+    dispatch, _, _, stats = route(cfg, w, x)
     dispatched = float(np.asarray(dispatch).sum())
     assert dispatched < 64 * cfg.num_experts_per_tok
+    # accounting closes: assignments = dispatched slots + reported drops
+    assert int(stats["dropped"]) == 64 * cfg.num_experts_per_tok - dispatched
+    assert int(stats["dropped"]) > 0
+
+
+def test_route_counts_match_dispatch(rng):
+    """stats['counts'] is exactly the occupied-slot count per (group, expert)
+    — the ragged-GEMM valid-row vector — and occupied slots are a prefix."""
+    cfg = _cfg()
+    x = jnp.asarray(rng.normal(size=(2, 32, cfg.d_model)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(cfg.d_model, cfg.num_experts)),
+                    jnp.float32)
+    dispatch, _, _, stats = route(cfg, w, x)
+    d = np.asarray(dispatch)                     # [G, g, E, C]
+    counts = np.asarray(stats["counts"])         # [G, E]
+    per_slot = d.sum(axis=1)                     # [G, E, C] slot occupancy
+    np.testing.assert_array_equal(per_slot.sum(-1), counts)
+    cap = per_slot.shape[-1]
+    prefix = np.arange(cap)[None, None, :] < counts[..., None]
+    np.testing.assert_array_equal(per_slot, prefix.astype(per_slot.dtype))
+
+
+def test_uniform_routing_at_default_capacity_drops_nothing():
+    """Uniform routing at capacity_factor=1.25 must drop zero tokens: the
+    capacity envelope exists for skew, not for the balanced case."""
+    cfg = _cfg(e=4, k=1, cf=1.25)
+    tokens = 32
+    # Round-robin tokens over experts via one-hot inputs and an identity-like
+    # router: token t scores highest for expert t % E.
+    x = np.zeros((1, tokens, cfg.d_model), np.float32)
+    for t in range(tokens):
+        x[0, t, t % cfg.num_experts] = 1.0
+    w = np.zeros((cfg.d_model, cfg.num_experts), np.float32)
+    w[:cfg.num_experts, :] = 10.0 * np.eye(cfg.num_experts)
+    dispatch, _, _, stats = route(cfg, jnp.asarray(w), jnp.asarray(x))
+    assert int(stats["dropped"]) == 0
+    np.testing.assert_array_equal(
+        np.asarray(stats["counts"]),
+        np.full((1, cfg.num_experts), tokens // cfg.num_experts))
+    assert float(np.asarray(dispatch).sum()) == tokens
 
 
 def test_moe_forward_finite_and_aux_positive(rng):
     cfg = _cfg()
     params = moe_params(cfg, jax.random.PRNGKey(0))
     x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)), jnp.float32)
-    out, aux = apply_moe(cfg, params, x)
+    out, aux, stats = apply_moe(cfg, params, x)
     assert out.shape == x.shape
     assert np.isfinite(np.asarray(out)).all()
     assert float(aux) >= 1.0 - 1e-3  # balanced lower bound is 1.0
+    assert stats["dropped_tokens"].dtype == jnp.int32
+    assert stats["expert_counts"].shape[-1] == cfg.num_experts
+    # drop accounting closes against the dispatch totals
+    total = 2 * 16 * cfg.num_experts_per_tok
+    assert (int(stats["dropped_tokens"])
+            + int(stats["expert_counts"].sum())) == total

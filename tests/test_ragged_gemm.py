@@ -1,0 +1,318 @@
+"""Ragged (occupancy-aware) grouped GEMM: parity + planner invariants.
+
+The ragged kernel must compute exactly the padded kernel's function on an A
+whose rows at/past the per-segment count are zeroed — with the same rows
+zeroed in the output — across backends (jnp cond-loop, pallas interpret),
+dtypes (f32, bf16), odd expert/capacity shapes, and count vectors including
+the empty (0) and full (C) extremes. Property tests draw random count
+vectors via hypothesis (skipped gracefully when the dep is absent — see
+``hypo``); the fixed-vector parametrizations below run everywhere.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypo import given, settings, st
+
+from repro.core import (GroupedPackedWeight, grouped_linear,
+                        grouped_silu_gate, plan_grouped_gemm,
+                        run_grouped_strategy, should_pack)
+from repro.core.gemm import resolve_grouped_strategy
+from repro.kernels import ref
+from repro.kernels.gemm_grouped import (gemm_grouped_packed,
+                                        gemm_grouped_packed_ragged,
+                                        gemm_grouped_packed_ragged_jnp,
+                                        unpack_b_grouped)
+from repro.kernels.pack import pack_b_grouped
+
+# Odd E / S / C on purpose (remainder blocks everywhere) plus aligned cases.
+RAGGED_SHAPES = [(3, 2, 33, 48, 65), (4, 1, 128, 64, 96), (5, 1, 40, 24, 72),
+                 (1, 3, 16, 32, 48)]
+
+
+def _counts_for(rng, e, s, c):
+    """Random counts in [0, C] with the 0 and C extremes pinned."""
+    counts = rng.integers(0, c + 1, size=(e, s))
+    counts.flat[0] = 0
+    counts.flat[-1] = c
+    return jnp.asarray(counts, jnp.int32)
+
+
+def _operands(rng, e, s, c, k, n, dtype=jnp.float32):
+    a = jnp.asarray(rng.normal(size=(e, s, c, k)), dtype)
+    b = jnp.asarray(rng.normal(size=(e, k, n)), dtype)
+    b2 = jnp.asarray(rng.normal(size=(e, k, n)), dtype)
+    return a, b, b2
+
+
+def _padded_with_zeroed_tails(a, bp, n, counts, *, b2p=None, bias=None,
+                              epilogue="none", out_dtype=None):
+    """The parity oracle: the PADDED kernel on A with tail rows zeroed, then
+    the same tail rows zeroed in its output."""
+    e, s, c, k = a.shape
+    mask = ref.ragged_row_mask(c, counts)
+    am = jnp.where(mask[..., None], a, 0).reshape(e, s * c, k)
+    out = gemm_grouped_packed(am, bp, n, b2_packed=b2p, bm=16, bias=bias,
+                              epilogue=epilogue, out_dtype=out_dtype)
+    out = out.reshape(e, s, c, n)
+    return jnp.where(mask[..., None], out, 0)
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: ragged == padded-with-zeroed-tails
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,s,c,k,n", RAGGED_SHAPES)
+@pytest.mark.parametrize("lowering", ["pallas", "jnp"])
+def test_ragged_kernel_matches_padded(rng, e, s, c, k, n, lowering):
+    a, b, _ = _operands(rng, e, s, c, k, n)
+    counts = _counts_for(rng, e, s, c)
+    bp = pack_b_grouped(b, 16, 64)
+    fn = (gemm_grouped_packed_ragged if lowering == "pallas"
+          else gemm_grouped_packed_ragged_jnp)
+    got = fn(a, bp, n, counts, bm=16)
+    want = _padded_with_zeroed_tails(a, bp, n, counts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("lowering", ["pallas", "jnp"])
+def test_ragged_kernel_silu_gate_and_bias(rng, lowering):
+    e, s, c, k, n = 3, 2, 33, 48, 65
+    a, b, b2 = _operands(rng, e, s, c, k, n)
+    counts = _counts_for(rng, e, s, c)
+    bp, b2p = pack_b_grouped(b, 16, 64), pack_b_grouped(b2, 16, 64)
+    bias = jnp.asarray(rng.normal(size=(e, n)), jnp.float32)
+    fn = (gemm_grouped_packed_ragged if lowering == "pallas"
+          else gemm_grouped_packed_ragged_jnp)
+    got = fn(a, bp, n, counts, b2_packed=b2p, bm=16, epilogue="silu_gate")
+    want = _padded_with_zeroed_tails(a, bp, n, counts, b2p=b2p,
+                                     epilogue="silu_gate")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+    got = fn(a, bp, n, counts, bm=16, bias=bias, epilogue="relu")
+    # bias path diverges from the padded kernel in the masked tail (the
+    # padded kernel writes epilogue(bias) there; ragged stores zeros), so
+    # compare against the explicit masked oracle.
+    want = ref.grouped_ragged_ref(a, b, counts, bias=bias,
+                                  epilogue_fn=lambda x: jnp.maximum(x, 0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("lowering", ["pallas", "jnp"])
+def test_ragged_kernel_bf16(rng, lowering):
+    e, s, c, k, n = 3, 1, 64, 96, 128
+    a, b, b2 = _operands(rng, e, s, c, k, n, jnp.bfloat16)
+    counts = jnp.asarray([0, 17, c], jnp.int32).reshape(e, s)
+    bp, b2p = pack_b_grouped(b, 32, 128), pack_b_grouped(b2, 32, 128)
+    fn = (gemm_grouped_packed_ragged if lowering == "pallas"
+          else gemm_grouped_packed_ragged_jnp)
+    got = fn(a, bp, n, counts, bm=16, out_dtype=jnp.float32)
+    want = ref.grouped_ragged_ref(a, b, counts, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.15, atol=0.15)
+    got = fn(a, bp, n, counts, b2_packed=b2p, bm=16, epilogue="silu_gate",
+             out_dtype=jnp.float32)
+    want = ref.grouped_ragged_ref(a, b, counts, b2=b2,
+                                  out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.3, atol=0.3)
+
+
+def test_ragged_kernel_rejects_bad_counts(rng):
+    a, b, _ = _operands(rng, 2, 1, 16, 16, 64)
+    bp = pack_b_grouped(b, 16, 64)
+    with pytest.raises(ValueError):
+        gemm_grouped_packed_ragged(a, bp, 64,
+                                   jnp.zeros((2, 2), jnp.int32), bm=16)
+    with pytest.raises(ValueError):
+        gemm_grouped_packed_ragged_jnp(a, bp, 64,
+                                       jnp.zeros((3, 1), jnp.int32), bm=16)
+
+
+def test_unpack_b_grouped_round_trip(rng):
+    b = jnp.asarray(rng.normal(size=(3, 33, 65)), jnp.float32)
+    for layout in ("row", "col"):
+        bp = pack_b_grouped(b, 16, 64, layout=layout)
+        np.testing.assert_allclose(
+            np.asarray(unpack_b_grouped(bp, 33, 65, layout)), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis): random count vectors
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data(), e=st.sampled_from([1, 3, 5]),
+       c=st.sampled_from([16, 33]),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_property_ragged_matches_padded(data, e, c, dtype):
+    """For ANY count vector in [0, C] (odd E, both dtypes), both ragged
+    lowerings equal the padded kernel with tail rows zeroed on both sides."""
+    k, n, s = 24, 72, 2
+    counts = jnp.asarray(
+        data.draw(st.lists(st.integers(0, c), min_size=e * s,
+                           max_size=e * s)), jnp.int32).reshape(e, s)
+    r = np.random.default_rng(e * 1000 + c + int(counts.sum()))
+    dt = jnp.dtype(dtype)
+    a, b, _ = _operands(r, e, s, c, k, n, dt)
+    bp = pack_b_grouped(b, 16, 64)
+    tol = 2e-4 if dtype == "float32" else 0.15
+    want = _padded_with_zeroed_tails(a, bp, n, counts,
+                                     out_dtype=jnp.float32)
+    for fn in (gemm_grouped_packed_ragged, gemm_grouped_packed_ragged_jnp):
+        got = fn(a, bp, n, counts, bm=16, out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=tol, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(e=st.integers(1, 16), m=st.sampled_from([8, 40, 640, 2048]),
+       k=st.sampled_from([64, 768, 6144]), n=st.sampled_from([64, 1024]),
+       streams=st.sampled_from([1, 2]),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_property_grouped_plan_vmem_budget(e, m, k, n, streams, dtype):
+    """The grouped plan's VMEM reservation (including the silu-gate second
+    stream) never exceeds the budget — for ANY problem signature, hence for
+    any count vector: counts change which grid steps do work, never the
+    per-step working set."""
+    from repro.core.dtypes import info
+    from repro.roofline.hw import V5E
+    plan = plan_grouped_gemm(e, m, k, n, dtype, n_b_streams=streams)
+    d = info(dtype)
+    acc_item = jnp.dtype(d.acc_dtype).itemsize
+    extra = (streams - 1) * (plan.double_buffer * plan.bk * plan.bn
+                             * d.itemsize + plan.bm * plan.bn * acc_item)
+    assert plan.vmem_working_set() + extra <= V5E.vmem_bytes
+    plan.validate()
+
+
+# ---------------------------------------------------------------------------
+# Strategy + entry-point level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_ragged_strategy_matches_masked_einsum(rng, backend):
+    e, s, c, k, n = 3, 2, 33, 48, 65
+    a, b, b2 = _operands(rng, e, s, c, k, n)
+    counts = _counts_for(rng, e, s, c)
+    a3 = a.reshape(e, s * c, k)
+    got = run_grouped_strategy("grouped_packed_ragged", a3, b, counts=counts,
+                               backend=backend)
+    want = run_grouped_strategy("grouped_einsum", a3, b, counts=counts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    got = run_grouped_strategy("grouped_packed_ragged", a3, b, b2=b2,
+                               counts=counts, epilogue="silu_gate",
+                               backend=backend)
+    want = run_grouped_strategy("grouped_einsum", a3, b, b2=b2,
+                                counts=counts, epilogue="silu_gate")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_ragged_strategy_validation(rng):
+    a, b, _ = _operands(rng, 2, 1, 16, 16, 64)
+    a3 = a.reshape(2, 16, 16)
+    counts = jnp.full((2, 1), 8, jnp.int32)
+    with pytest.raises(ValueError):
+        run_grouped_strategy("grouped_packed_ragged", a3, b)  # no counts
+    with pytest.raises(ValueError):
+        run_grouped_strategy("grouped_packed", a3, b, counts=counts)
+    with pytest.raises(ValueError):  # S does not divide M
+        run_grouped_strategy("grouped_packed_ragged", a3, b,
+                             counts=jnp.full((2, 3), 1, jnp.int32))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_grouped_packed_weight_ragged(rng, backend):
+    """GroupedPackedWeight ragged matmul/silu_gate against the masked oracle,
+    through the [G, E, C, K] entry points the MoE path uses."""
+    g, e, c, k, n = 2, 3, 24, 40, 56
+    x = jnp.asarray(rng.normal(size=(g, e, c, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(e, k, n)), jnp.float32)
+    b2 = jnp.asarray(rng.normal(size=(e, k, n)), jnp.float32)
+    counts = jnp.asarray(rng.integers(0, c + 1, size=(g, e)), jnp.int32)
+    mask = jnp.arange(c)[None, None, :] < counts[..., None]  # [G, E, C]
+    xm = jnp.where(mask[..., None], x, 0)
+    gw = GroupedPackedWeight.pack(b, n_b_streams=2)
+    uw = GroupedPackedWeight.pack(b2, n_b_streams=2)
+    got = grouped_linear(x, gw, counts=counts, backend=backend)
+    want = jnp.where(mask[..., None], jnp.einsum("gecd,edf->gecf", xm, b), 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    got = grouped_silu_gate(x, gw, uw, counts=counts, backend=backend)
+    want = jnp.where(
+        mask[..., None],
+        jax.nn.silu(jnp.einsum("gecd,edf->gecf", xm, b))
+        * jnp.einsum("gecd,edf->gecf", xm, b2), 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+    # raw weights + counts: the masked einsum lowering agrees too
+    got = grouped_linear(x, b, counts=counts, strategy="grouped_einsum")
+    want = jnp.where(mask[..., None], jnp.einsum("gecd,edf->gecf", xm, b), 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_packed_weight_ragged_decode_fallback(rng):
+    """Decode-shaped capacity (C inside one sublane block) keeps the masked
+    einsum fallback and stays correct."""
+    e, s, c, k, n = 4, 1, 8, 32, 48
+    a, b, _ = _operands(rng, e, s, c, k, n)
+    counts = jnp.asarray([0, 3, 8, 5], jnp.int32).reshape(e, s)
+    gw = GroupedPackedWeight.pack(b)
+    got = gw.matmul(a, counts=counts)
+    want = ref.grouped_ragged_ref(a, b, counts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_packed_weight_ragged_shape_errors(rng):
+    a, b, _ = _operands(rng, 3, 2, 16, 32, 64)
+    gw = GroupedPackedWeight.pack(b)
+    with pytest.raises(ValueError):
+        gw.matmul(a.reshape(3, 32, 32),
+                  counts=jnp.zeros((3, 2), jnp.int32))  # 3-D a with counts
+    with pytest.raises(ValueError):
+        gw.matmul(a, counts=jnp.zeros((3, 1), jnp.int32))  # S mismatch
+    with pytest.raises(ValueError):  # silu_gate needs the partner stack
+        gw.matmul(a, counts=jnp.zeros((3, 2), jnp.int32),
+                  epilogue="silu_gate")
+
+
+# ---------------------------------------------------------------------------
+# Planner: occupancy-aware crossover
+# ---------------------------------------------------------------------------
+
+def test_should_pack_occupancy_aware():
+    """The grouped crossover tests EXPECTED rows (m * occupancy), not the
+    padded capacity envelope: a skewed dispatch whose real work is
+    decode-shaped stays on the einsum."""
+    e, d, f = 8, 6144, 16384  # mixtral expert geometry
+    # padded capacity looks prefill-shaped; at 1% fill it is decode-shaped
+    assert should_pack(640, d, f, "bfloat16", fused=True, group=e)
+    assert not should_pack(640, d, f, "bfloat16", fused=True, group=e,
+                           occupancy=0.01)
+    # at capacity_factor=1.25 fill (0.8) the call still crosses over
+    assert should_pack(640, d, f, "bfloat16", fused=True, group=e,
+                       occupancy=0.8)
+    # occupancy never makes a small problem pack
+    assert not should_pack(4, d, f, "bfloat16", fused=True, group=e,
+                           occupancy=1.0)
+
+
+def test_resolve_grouped_strategy_ragged(monkeypatch):
+    """With counts known, the TPU crossover lands on the ragged kernel; the
+    occupancy discount can push a padded-prefill shape back to einsum."""
+    monkeypatch.delenv("REPRO_GEMM_STRATEGY", raising=False)
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert resolve_grouped_strategy(8, 640, 6144, 16384, "bfloat16",
+                                    counts_known=True) \
+        == "grouped_packed_ragged"
+    assert resolve_grouped_strategy(8, 640, 6144, 16384, "bfloat16") \
+        == "grouped_packed"
+    assert resolve_grouped_strategy(8, 640, 6144, 16384, "bfloat16",
+                                    counts_known=True, occupancy=0.01) \
+        == "grouped_einsum"
