@@ -56,7 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, time_interleaved
 from repro.core import GroupedPackedWeight
 from repro.core.gemm import grouped_linear, grouped_silu_gate
 from repro.kernels.gemm_grouped import (gemm_grouped_packed,
@@ -95,24 +95,9 @@ class _Cfg:
         self.capacity_factor = 1.25
 
 
-def _time_interleaved(pairs, rounds=8):
-    """Interleaved min-of-rounds timing: one timed call per candidate per
-    round, minimum across rounds. On a cgroup-throttled shared-CPU runner
-    the same jitted function swings 2-3x between calls; the per-candidate
-    MIN converges to the unthrottled time for every candidate, and the
-    interleaving keeps a long throttle phase from biasing whichever
-    candidate ran inside it. Returns one time (us) per pair."""
-    import time as _time
-
-    for fn, args in pairs:                      # settle compile + caches
-        jax.block_until_ready(fn(*args))
-    best = [float("inf")] * len(pairs)
-    for _ in range(rounds):
-        for i, (fn, args) in enumerate(pairs):
-            t0 = _time.perf_counter()
-            jax.block_until_ready(fn(*args))
-            best[i] = min(best[i], (_time.perf_counter() - t0) * 1e6)
-    return best
+# Shared protocol (benchmarks.common.time_interleaved) under its historical
+# local name — every ratio row in this module uses it.
+_time_interleaved = time_interleaved
 
 
 def _skew_counts(rng, e, top_k, cap, dist, tokens=2048) -> np.ndarray:

@@ -10,6 +10,10 @@
                             batched-einsum baseline, plus padded-vs-ragged
                             at uniform/zipf routing skew (writes
                             BENCH_moe_grouped.json)
+  bench_quant_gemm        — int8 (dequant-in-epilogue) vs bf16 packed GEMM,
+                            dense prefill/decode + grouped MoE serving
+                            shapes, B-bytes moved columns (writes
+                            BENCH_quant_gemm.json)
   bench_syr2k             — §5.1 SYR2K extension of the layered strategy
   bench_models            — end-to-end model step times (CPU observation)
   bench_roofline          — TPU-target roofline rows from the dry-run
@@ -24,7 +28,10 @@ silently rot.
 baselines before the run, then compares every fresh speedup ratio against
 its baseline row and FAILS (exit 1) on a >25% regression. Ratios (not raw
 times) keep the guard robust to CI machine speed; new rows with no baseline
-pass (they become the baseline once committed).
+pass (they become the baseline once committed). The guard also diffs the
+SET of smoke artifacts: a smoke bench that writes a ``*.smoke.json`` with
+no committed baseline fails (a newly added bench must commit its baseline
+or CI would silently skip guarding it forever).
 """
 import json
 import os
@@ -40,8 +47,13 @@ REGRESSION_TOLERANCE = 1.25  # fail when fresh speedup < baseline / 1.25
 
 
 def _row_key(row: dict):
+    # Every identity-ish field a bench row may carry: rows that differ only
+    # in size (e.g. bench_packing_overhead's per-n rows, which have no
+    # "name") must not collapse onto one key, or the guard compares every
+    # baseline row against a single arbitrary fresh row.
     return (row.get("name"), row.get("dist"), row.get("shape"),
-            row.get("dtype"))
+            row.get("dtype"), row.get("n"), row.get("e"), row.get("m"),
+            row.get("k"))
 
 
 def _speedup_fields(row: dict):
@@ -61,8 +73,20 @@ def snapshot_baselines() -> dict:
 
 
 def check_regressions(baselines: dict) -> int:
-    """Compare fresh smoke speedups against the snapshot; return #failures."""
+    """Compare fresh smoke speedups against the snapshot; return #failures.
+
+    Also fails for every smoke artifact the run produced that had NO
+    committed baseline: the baseline-key diff that makes a newly added
+    smoke bench fail CI until its ``*.smoke.json`` is committed, instead of
+    passing unguarded.
+    """
     failures = 0
+    fresh_names = {p.name for p in ROOT.glob("BENCH_*.smoke.json")}
+    for fname in sorted(fresh_names - set(baselines)):
+        print(f"REGRESSION {fname}: smoke artifact has no committed "
+              f"baseline — commit it so the guard covers this bench",
+              file=sys.stderr)
+        failures += 1
     for fname, base in baselines.items():
         path = ROOT / fname
         if not path.exists():
@@ -113,16 +137,17 @@ def main() -> None:
     from benchmarks import (bench_dtypes, bench_gemm_strategies,
                             bench_micro_lowering, bench_models,
                             bench_moe_grouped, bench_packing_overhead,
-                            bench_roofline, bench_syr2k)
+                            bench_quant_gemm, bench_roofline, bench_syr2k)
     from benchmarks.common import header
 
     header()
     if smoke:
-        modules = [bench_packing_overhead, bench_moe_grouped]
+        modules = [bench_packing_overhead, bench_moe_grouped,
+                   bench_quant_gemm]
     else:
         modules = [bench_micro_lowering, bench_dtypes, bench_packing_overhead,
-                   bench_moe_grouped, bench_syr2k, bench_gemm_strategies,
-                   bench_models, bench_roofline]
+                   bench_moe_grouped, bench_quant_gemm, bench_syr2k,
+                   bench_gemm_strategies, bench_models, bench_roofline]
     failures = 0
     for mod in modules:
         try:

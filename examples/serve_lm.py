@@ -27,6 +27,10 @@ def main() -> None:
     ap.add_argument("--pack-weights", action="store_true",
                     help="tile-major pack all dense weights at load time "
                          "(fused pack-free-A GEMM on every step)")
+    ap.add_argument("--quantize", default=None, choices=("int8",),
+                    help="quantize the packed weights at load (int8 tiles + "
+                         "per-tile scales, dequant fused in-kernel; implies "
+                         "--pack-weights)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
@@ -35,7 +39,8 @@ def main() -> None:
     engine = Engine(model, params, ServeConfig(
         max_len=args.prompt_len + args.new + 8,
         temperature=args.temperature,
-        pack_weights=args.pack_weights))
+        pack_weights=args.pack_weights or args.quantize is not None,
+        quantize=args.quantize))
 
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(

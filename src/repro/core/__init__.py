@@ -9,6 +9,8 @@ from repro.core.layered import (GroupedPackedWeight, LayeredGemm,  # noqa: F401
                                 PackedWeight)
 from repro.core.planner import (GemmPlan, choose_strategy,  # noqa: F401
                                 plan_grouped_gemm, should_pack)
+from repro.core.tile_format import (ScaleSpec, TileFormat,  # noqa: F401
+                                    as_tile_format)
 from repro.core.strategy import (GROUPED_STRATEGIES, STRATEGIES,  # noqa: F401
                                  run as run_strategy,
                                  run_grouped as run_grouped_strategy)

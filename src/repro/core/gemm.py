@@ -18,7 +18,9 @@ integration tests to force the Pallas path inside jitted models).
 ``linear`` also accepts a :class:`repro.core.layered.PackedWeight` for ``w``:
 the weight was packed tile-major once at load time, so every call runs the
 pack-free-A fused kernel with bias + activation applied in the kernel's final
-grid step — no per-call packing, no post-kernel elementwise ops.
+grid step — no per-call packing, no post-kernel elementwise ops. A weight
+packed with ``quantize="int8"`` additionally carries its per-tile scale grid
+(see ``core/tile_format.py``) and dequantizes inside the same kernel pass.
 
 ``grouped_linear`` / ``grouped_silu_gate`` are the batched-expert analogues:
 every MoE expert contraction ([*lead, E, M, K] against an [E, K, N] stack or

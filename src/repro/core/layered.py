@@ -7,18 +7,28 @@ weights are static across calls, so the macro-level packing can be *hoisted to
 load time* and amortized over every step — something a per-call library (or
 per-loop compiler rewrite) cannot do.
 
-``PackedWeight`` is registered as a JAX pytree node (the packed buffer is the
-leaf; (k, n, plan) are static aux data), so packed weights can live inside
-jit'd/scanned model parameter trees: the serving engine packs every dense
-weight once at load time and each layer's slice flows through ``jax.lax.scan``
-like any other array. Its :meth:`matmul` runs the pack-free-A fused kernel
-(``gemm_packed_fused_a``): A streams from its natural layout, and bias +
-activation are applied in the kernel's final grid step.
+``PackedWeight`` is registered as a JAX pytree node (the packed buffer and the
+optional per-tile scale grid are the leaves; (k, n, plan) are static aux
+data), so packed weights can live inside jit'd/scanned model parameter trees:
+the serving engine packs every dense weight once at load time and each layer's
+slice flows through ``jax.lax.scan`` like any other array. Its :meth:`matmul`
+runs the pack-free-A fused kernel (``gemm_packed_fused_a``): A streams from
+its natural layout, and bias + activation are applied in the kernel's final
+grid step.
 
 :class:`GroupedPackedWeight` extends the same idea one dimension: a stacked
 expert weight [E, K, N] (MoE) is packed per-expert into one tile-major stack
 and contracted by ``gemm_grouped_packed`` with the expert axis outermost on
 the kernel grid — including the fused silu-gate pair for MoE gate/up.
+
+Both pytrees share one packing/plan/format core (:class:`_PackedCommon`):
+the tile format they pack to, carry, and hand the kernels is the plan's
+``b_format`` — a single :class:`repro.core.tile_format.TileFormat`
+descriptor. ``quantize="int8"`` at pack time selects the quantized format:
+weights are stored as int8 tiles + per-(Kb,Nb)-tile f32 scales (halving HBM
+traffic vs bf16 at serving time), and every matmul path — dense fused-A,
+grouped, ragged, and the jnp fallbacks — dequantizes per tile on the f32
+accumulator ahead of the fused epilogues.
 """
 from __future__ import annotations
 
@@ -34,11 +44,12 @@ from repro.core.epilogue import apply_epilogue
 from repro.core.gemm import default_backend
 from repro.core.planner import (GemmPlan, choose_strategy, plan_gemm,
                                 plan_grouped_gemm)
+from repro.core.tile_format import TileFormat, normalize_packed
+from repro.kernels import pack as pack_mod
 from repro.kernels import ref
 from repro.kernels.gemm_grouped import (gemm_grouped_packed,
                                         gemm_grouped_packed_ragged)
 from repro.kernels.gemm_packed import gemm_packed_fused_a
-from repro.kernels.pack import pack_b, pack_b_grouped
 
 
 @dataclasses.dataclass
@@ -72,27 +83,99 @@ class LayeredGemm:
                          epilogue=self.epilogue)
 
 
+def _quant_b_dtype(quantize: Optional[str]) -> Optional[str]:
+    if quantize is None:
+        return None
+    if quantize != "int8":
+        raise ValueError(f"unsupported quantize={quantize!r} (only 'int8')")
+    return "int8"
+
+
+class _PackedCommon:
+    """Shared plan/format/packing core of the two packed-weight pytrees.
+
+    Everything format-shaped lives here once: the plan's TileFormat is the
+    single source of truth for packing (dense or grouped, float or
+    quantized), the runtime M-block clamp, and the quantization pairing
+    rules — the dense and grouped classes only differ in operand rank.
+    """
+
+    @property
+    def fmt(self) -> TileFormat:
+        """The packed buffer's tile format (from the plan — single source)."""
+        return self.plan.b_format
+
+    @staticmethod
+    def _check_quantize_plan(plan: GemmPlan, quantize: Optional[str]) -> None:
+        if quantize is not None and not plan.b_format.is_quantized:
+            raise ValueError(
+                f"quantize={quantize!r} needs a plan with b_dtype set "
+                f"(got {plan})")
+
+    @staticmethod
+    def _pack_pair(w: jnp.ndarray, fmt: TileFormat, backend: str,
+                   grouped: bool):
+        """One (packed, scales-or-None) pair via the format-driven packers."""
+        if grouped:
+            packer = (pack_mod.pack_b_grouped if backend == "pallas"
+                      else ref.pack_b_grouped_ref)
+        else:
+            packer = pack_mod.pack_b if backend == "pallas" else ref.pack_b_ref
+        return normalize_packed(packer(w, fmt), fmt)
+
+    def _clamp_bm(self, rows: int, dtype) -> int:
+        # The plan's bm reflects the pack-time m_hint; the packed B buffer is
+        # independent of it, so clamp the M-block to the *runtime* row count
+        # (aligned up to the sublane) — a decode step with 4 rows must not be
+        # padded to a 1024-row macro tile.
+        sub, _ = mdt.alignment(dtype)
+        return min(self.plan.bm, max(-(-rows // sub) * sub, sub))
+
+    def _check_k(self, k_got: int) -> None:
+        if k_got != self.k:
+            # Padded tile envelopes can coincide for different K, so the
+            # kernels cannot catch this — check the true K here.
+            raise ValueError(
+                f"contraction mismatch: a has K={k_got}, weight was "
+                f"packed with K={self.k}")
+
+
 @dataclasses.dataclass
-class PackedWeight:
-    """A weight matrix stored pre-packed in tile-major order (load-time packing)."""
+class PackedWeight(_PackedCommon):
+    """A weight matrix stored pre-packed in tile-major order (load-time
+    packing); ``scales`` is the per-tile dequant grid of a quantized format
+    (None for float tiles)."""
 
     packed: jnp.ndarray     # [Nb, Kb, bk, bn] (row) per pack_b
     k: int
     n: int
     plan: GemmPlan
+    scales: Optional[jnp.ndarray] = None   # [Nb, Kb] f32 (int8 formats)
 
     @classmethod
     def pack(cls, w: jnp.ndarray, *, m_hint: int = 1024,
              plan: Optional[GemmPlan] = None,
-             backend: Optional[str] = None) -> "PackedWeight":
-        k, n = w.shape
-        plan = plan or plan_gemm(m_hint, k, n, w.dtype)
-        be = backend or default_backend()
-        if be == "pallas":
-            packed = pack_b(w, plan.bk, plan.bn, layout=plan.layout_b)
+             backend: Optional[str] = None,
+             quantize: Optional[str] = None) -> "PackedWeight":
+        """w: [K, N], or [L, K, N] for scan-stacked layers (packed per layer
+        under vmap so ``jax.lax.scan`` can slice the leading axis).
+        ``quantize="int8"``: store int8 tiles + per-tile f32 scales — the
+        dequant runs fused in the kernel epilogue at every matmul."""
+        assert w.ndim in (2, 3), w.shape
+        k, n = w.shape[-2:]
+        plan = plan or plan_gemm(m_hint, k, n, w.dtype,
+                                 b_dtype=_quant_b_dtype(quantize))
+        cls._check_quantize_plan(plan, quantize)
+        fmt = plan.b_format
+        if w.ndim == 3:
+            # Load-time packing of the whole layer stack (jnp packer: runs
+            # once, identical buffer layout to the Pallas packer's).
+            packed, scales = jax.vmap(
+                lambda wl: cls._pack_pair(wl, fmt, "jnp", grouped=False))(w)
         else:
-            packed = ref.pack_b_ref(w, plan.bk, plan.bn, plan.layout_b)
-        return cls(packed=packed, k=k, n=n, plan=plan)
+            be = backend or default_backend()
+            packed, scales = cls._pack_pair(w, fmt, be, grouped=False)
+        return cls(packed=packed, k=k, n=n, plan=plan, scales=scales)
 
     def matmul(self, a: jnp.ndarray, *, bias=None, epilogue: str = "none",
                out_dtype=None, backend: Optional[str] = None) -> jnp.ndarray:
@@ -100,29 +183,21 @@ class PackedWeight:
 
         B's packing cost was paid once at load time; A is consumed directly
         from its natural layout (no pack_a materialization on any backend),
-        and bias + activation are fused into the store epilogue.
+        and bias + activation are fused into the store epilogue — with the
+        per-tile dequant ahead of them when the weight is quantized.
         """
-        if a.shape[1] != self.k:
-            # Padded tile envelopes can coincide for different K, so the
-            # kernels below cannot catch this — check the true K here.
-            raise ValueError(
-                f"contraction mismatch: a has K={a.shape[1]}, weight was "
-                f"packed with K={self.k}")
+        self._check_k(a.shape[1])
         be = backend or default_backend()
-        # The plan's bm reflects the pack-time m_hint; the packed B buffer is
-        # independent of it, so clamp the M-block to the *runtime* batch
-        # (aligned up to the sublane) — a decode step with 4 rows must not be
-        # padded to a 1024-row macro tile.
-        sub, _ = mdt.alignment(a.dtype)
-        bm = min(self.plan.bm, max(-(-a.shape[0] // sub) * sub, sub))
+        bm = self._clamp_bm(a.shape[0], a.dtype)
         if be == "pallas":
             return gemm_packed_fused_a(a, self.packed, self.n, bm=bm,
-                                       layout_b=self.plan.layout_b, bias=bias,
+                                       layout_b=self.plan.layout_b,
+                                       b_scales=self.scales, bias=bias,
                                        epilogue=epilogue,
                                        out_dtype=out_dtype or a.dtype)
         acc = ref.fused_packed_acc_ref(a, self.packed, self.n,
                                        layout_b=self.plan.layout_b,
-                                       bm=bm)
+                                       bm=bm, b_scales=self.scales)
         if bias is not None:
             acc = acc + bias.astype(acc.dtype)
         out = apply_epilogue(epilogue, acc)
@@ -130,12 +205,13 @@ class PackedWeight:
 
 
 def _packed_weight_flatten(pw: PackedWeight):
-    return (pw.packed,), (pw.k, pw.n, pw.plan)
+    return (pw.packed, pw.scales), (pw.k, pw.n, pw.plan)
 
 
 def _packed_weight_unflatten(aux, children):
     k, n, plan = aux
-    return PackedWeight(packed=children[0], k=k, n=n, plan=plan)
+    return PackedWeight(packed=children[0], k=k, n=n, plan=plan,
+                        scales=children[1])
 
 
 jax.tree_util.register_pytree_node(PackedWeight, _packed_weight_flatten,
@@ -143,19 +219,22 @@ jax.tree_util.register_pytree_node(PackedWeight, _packed_weight_flatten,
 
 
 @dataclasses.dataclass
-class GroupedPackedWeight:
+class GroupedPackedWeight(_PackedCommon):
     """A stacked expert weight [E, K, N] stored pre-packed tile-major.
 
     The grouped extension of :class:`PackedWeight`: every expert's matrix is
     packed with the same plan into one [E, Nb, Kb, bk, bn] buffer, paid once
     at load time and consumed by ``gemm_grouped_packed`` with the expert axis
     as the outermost grid dimension. Registered as a pytree node (the packed
-    stack is the leaf), so scan-stacked MoE layers ([L, E, K, N] at rest)
-    slice through ``jax.lax.scan`` like any other parameter leaf.
+    stack and the optional [E, Nb, Kb] scale grid are the leaves), so
+    scan-stacked MoE layers ([L, E, K, N] at rest) slice through
+    ``jax.lax.scan`` like any other parameter leaf.
 
     ``n_b_streams=2`` at pack time reserves VMEM for the fused silu-gate
     kernel's second B stream + accumulator — use it for gate/up pairs so
-    both weights share one silu-gate-feasible plan.
+    both weights share one silu-gate-feasible plan. ``quantize="int8"``
+    stores int8 tiles + per-tile scales; all three serving contractions
+    (matmul, silu-gate, and their ragged counts forms) dequantize in-kernel.
     """
 
     packed: jnp.ndarray     # [E, Nb, Kb, bk, bn] (+ leading stack dims)
@@ -163,31 +242,31 @@ class GroupedPackedWeight:
     k: int
     n: int
     plan: GemmPlan
+    scales: Optional[jnp.ndarray] = None   # [E, Nb, Kb] (+ leading stack dims)
 
     @classmethod
     def pack(cls, w: jnp.ndarray, *, m_hint: int = 1024,
              plan: Optional[GemmPlan] = None,
              n_b_streams: int = 1,
-             backend: Optional[str] = None) -> "GroupedPackedWeight":
+             backend: Optional[str] = None,
+             quantize: Optional[str] = None) -> "GroupedPackedWeight":
         """w: [E, K, N], or [L, E, K, N] for scan-stacked MoE layers."""
         assert w.ndim in (3, 4), w.shape
         e, k, n = w.shape[-3:]
         plan = plan or plan_grouped_gemm(
             e, m_hint, k, n, jnp.dtype(w.dtype).name,
-            n_b_streams=n_b_streams)
+            n_b_streams=n_b_streams, b_dtype=_quant_b_dtype(quantize))
+        cls._check_quantize_plan(plan, quantize)
+        fmt = plan.b_format
         be = backend or default_backend()
         if w.ndim == 4:
             # Load-time packing of the whole layer stack (jnp packer: runs
             # once, identical buffer layout to the Pallas packer's).
-            packed = jax.vmap(lambda wl: ref.pack_b_grouped_ref(
-                wl, plan.bk, plan.bn, plan.layout_b))(w)
-        elif be == "pallas":
-            packed = pack_b_grouped(w, plan.bk, plan.bn,
-                                    layout=plan.layout_b)
+            packed, scales = jax.vmap(
+                lambda wl: cls._pack_pair(wl, fmt, "jnp", grouped=True))(w)
         else:
-            packed = ref.pack_b_grouped_ref(w, plan.bk, plan.bn,
-                                            plan.layout_b)
-        return cls(packed=packed, e=e, k=k, n=n, plan=plan)
+            packed, scales = cls._pack_pair(w, fmt, be, grouped=True)
+        return cls(packed=packed, e=e, k=k, n=n, plan=plan, scales=scales)
 
     def _check(self, a: jnp.ndarray) -> None:
         if self.packed.ndim != 5:
@@ -199,13 +278,6 @@ class GroupedPackedWeight:
             raise ValueError(
                 f"grouped operand mismatch: a={a.shape}, weight stack is "
                 f"E={self.e}, K={self.k}")
-
-    def _bm(self, a: jnp.ndarray) -> int:
-        # Clamp the M-block to the runtime per-expert row count (aligned up
-        # to the sublane) — the pack-time m_hint must not pad a small
-        # capacity dimension to a full macro tile.
-        sub, _ = mdt.alignment(a.dtype)
-        return min(self.plan.bm, max(-(-a.shape[1] // sub) * sub, sub))
 
     def _use_kernel(self, a: jnp.ndarray, backend: Optional[str]) -> bool:
         # Decode-shaped per-expert M (a single sublane block of capacity
@@ -224,40 +296,46 @@ class GroupedPackedWeight:
             raise ValueError(
                 f"counts {counts.shape} must match a's [E, S]={a.shape[:2]}")
 
-    def _ragged(self, a, counts, *, b2_packed=None, bias=None,
+    def _ragged(self, a, counts, *, b2=None, bias=None,
                 epilogue="none", out_dtype=None, backend=None):
         """Dispatch the ragged contraction: a [E, S, C, K], counts [E, S].
 
-        On the pallas backend (TPU target), prefill-shaped segments run the
-        scalar-prefetch kernel, whose grid early-outs every all-padding
-        (segment, m-block) step; decode-shaped segments (C inside one
-        sublane block) have at most one block to skip and keep the masked
-        fallback. On the jnp backend the ragged contract lowers to the
-        masked batched einsum: XLA:CPU's monolithic batched GEMM outruns
-        any runtime-skipping control flow at serving shapes (measured — see
+        ``b2`` is the silu-gate partner WEIGHT (GroupedPackedWeight), so its
+        packed stack and scale grid travel together. On the pallas backend
+        (TPU target), prefill-shaped segments run the scalar-prefetch
+        kernel, whose grid early-outs every all-padding (segment, m-block)
+        step; decode-shaped segments (C inside one sublane block) have at
+        most one block to skip and keep the masked fallback. On the jnp
+        backend the ragged contract lowers to the masked batched einsum:
+        XLA:CPU's monolithic batched GEMM outruns any runtime-skipping
+        control flow at serving shapes (measured — see
         benchmarks/bench_moe_grouped.py), so the CPU path keeps padded-GEMM
         speed and the ragged *semantics* (zeroed tails). The cond-guarded
         CPU lowering of the skipping algorithm lives in the strategy
         registry (``run_grouped("grouped_packed_ragged", backend="jnp")``)
         as a comparison lowering, like the paper's slower codegen variants.
         """
-        if (epilogue == "silu_gate") != (b2_packed is not None):
+        if (epilogue == "silu_gate") != (b2 is not None):
             raise ValueError("epilogue='silu_gate' requires the partner "
                              "stack (use silu_gate(), not matmul())")
         e, s, c, k = a.shape
         be = backend or default_backend()
+        bm = self._clamp_bm(c, a.dtype)
         sub, _ = mdt.alignment(a.dtype)
-        bm = min(self.plan.bm, max(-(-c // sub) * sub, sub))
         if be == "pallas" and c > sub:
             return gemm_grouped_packed_ragged(
-                a, self.packed, self.n, counts, b2_packed=b2_packed,
-                bm=bm, layout_b=self.plan.layout_b, bias=bias,
+                a, self.packed, self.n, counts,
+                b2_packed=b2.packed if b2 is not None else None,
+                bm=bm, layout_b=self.plan.layout_b, b_scales=self.scales,
+                b2_scales=b2.scales if b2 is not None else None, bias=bias,
                 epilogue=epilogue, out_dtype=out_dtype or a.dtype)
         b_full = ref.unpack_b_grouped_ref(self.packed, self.k, self.n,
-                                          self.plan.layout_b)
-        b2_full = (ref.unpack_b_grouped_ref(b2_packed, self.k, self.n,
-                                            self.plan.layout_b)
-                   if b2_packed is not None else None)
+                                          self.plan.layout_b,
+                                          scales=self.scales)
+        b2_full = (ref.unpack_b_grouped_ref(b2.packed, self.k, self.n,
+                                            self.plan.layout_b,
+                                            scales=b2.scales)
+                   if b2 is not None else None)
         epi = (None if epilogue in ("none", "silu_gate")
                else lambda x: apply_epilogue(epilogue, x))
         return ref.grouped_ragged_ref(a, b_full, counts, b2=b2_full,
@@ -282,14 +360,16 @@ class GroupedPackedWeight:
             return self._ragged(a, counts, bias=bias, epilogue=epilogue,
                                 out_dtype=out_dtype, backend=backend)
         self._check(a)
+        bm = self._clamp_bm(a.shape[1], a.dtype)
         if self._use_kernel(a, backend):
-            return gemm_grouped_packed(a, self.packed, self.n, bm=self._bm(a),
-                                       layout_b=self.plan.layout_b, bias=bias,
+            return gemm_grouped_packed(a, self.packed, self.n, bm=bm,
+                                       layout_b=self.plan.layout_b,
+                                       b_scales=self.scales, bias=bias,
                                        epilogue=epilogue,
                                        out_dtype=out_dtype or a.dtype)
         acc = ref.grouped_fused_acc_ref(a, self.packed, self.n,
                                         layout_b=self.plan.layout_b,
-                                        bm=self._bm(a))
+                                        bm=bm, b_scales=self.scales)
         return strat.grouped_epilogue(acc, None, bias, epilogue,
                                       out_dtype or a.dtype)
 
@@ -306,37 +386,43 @@ class GroupedPackedWeight:
         if self.plan != up.plan or self.packed.shape != up.packed.shape:
             raise ValueError("silu_gate pair must share plan and geometry "
                              f"({self.plan} vs {up.plan})")
+        if (self.scales is None) != (up.scales is None):
+            raise ValueError("silu_gate pair must be quantized together")
         if counts is not None:
             self._check_ragged(a, counts)
             up._check_ragged(a, counts)
-            return self._ragged(a, counts, b2_packed=up.packed,
+            return self._ragged(a, counts, b2=up,
                                 epilogue="silu_gate", out_dtype=out_dtype,
                                 backend=backend)
         self._check(a)
         up._check(a)
+        bm = self._clamp_bm(a.shape[1], a.dtype)
         if self._use_kernel(a, backend):
             return gemm_grouped_packed(a, self.packed, self.n,
-                                       b2_packed=up.packed, bm=self._bm(a),
+                                       b2_packed=up.packed, bm=bm,
                                        layout_b=self.plan.layout_b,
+                                       b_scales=self.scales,
+                                       b2_scales=up.scales,
                                        epilogue="silu_gate",
                                        out_dtype=out_dtype or a.dtype)
         gate = ref.grouped_fused_acc_ref(a, self.packed, self.n,
                                          layout_b=self.plan.layout_b,
-                                         bm=self._bm(a))
+                                         bm=bm, b_scales=self.scales)
         up_acc = ref.grouped_fused_acc_ref(a, up.packed, up.n,
                                            layout_b=up.plan.layout_b,
-                                           bm=self._bm(a))
+                                           bm=bm, b_scales=up.scales)
         return strat.grouped_epilogue(gate, up_acc, None, "silu_gate",
                                       out_dtype or a.dtype)
 
 
 def _grouped_weight_flatten(gw: GroupedPackedWeight):
-    return (gw.packed,), (gw.e, gw.k, gw.n, gw.plan)
+    return (gw.packed, gw.scales), (gw.e, gw.k, gw.n, gw.plan)
 
 
 def _grouped_weight_unflatten(aux, children):
     e, k, n, plan = aux
-    return GroupedPackedWeight(packed=children[0], e=e, k=k, n=n, plan=plan)
+    return GroupedPackedWeight(packed=children[0], e=e, k=k, n=n, plan=plan,
+                               scales=children[1])
 
 
 jax.tree_util.register_pytree_node(GroupedPackedWeight,

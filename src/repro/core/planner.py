@@ -23,10 +23,12 @@ setup exactly like MMA's kr maximizes in-accumulator operations.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax.numpy as jnp
 
 from repro.core import dtypes as mdt
+from repro.core.tile_format import ScaleSpec, TileFormat, is_dequant_pair
 from repro.roofline.hw import V5E, TpuTarget
 
 
@@ -41,6 +43,10 @@ class GemmPlan:
     layout_b: str = "row"
     double_buffer: int = 2
     vmem_budget: int = V5E.vmem_bytes
+    # B-operand element dtype when it differs from the compute dtype —
+    # int8 weight streams (dequant-in-epilogue) halve/quarter the resident
+    # B footprint, so the byte accounting below is per-operand.
+    b_dtype: Optional[str] = None
 
     @property
     def vaccs(self) -> int:
@@ -50,11 +56,25 @@ class GemmPlan:
     def haccs(self) -> int:
         return max(self.bn // V5E.mxu_dim, 1)
 
+    @property
+    def b_format(self) -> TileFormat:
+        """The packed-B tile format this plan implies — the single descriptor
+        the pack layer, kernels, and weight pytrees consume. A narrow integer
+        ``b_dtype`` under a float compute dtype marks the format quantized
+        (per-tile f32 scales, dequant fused into the kernel)."""
+        bdt = self.b_dtype or self.dtype
+        quant = is_dequant_pair(self.dtype, bdt)
+        return TileFormat(bk=self.bk, bn=self.bn, layout=self.layout_b,
+                          dtype=bdt, scale=ScaleSpec() if quant else None)
+
     def vmem_working_set(self) -> int:
         item = mdt.info(self.dtype).itemsize
         acc_item = jnp.dtype(self.acc_dtype).itemsize
-        streams = self.double_buffer * (self.bm * self.bk + self.bk * self.bn) * item
-        return streams + self.bm * self.bn * acc_item
+        a_stream = self.double_buffer * self.bm * self.bk * item
+        # B streams at the tile format's bytes (narrow int8 B tiles carry a
+        # per-tile scale — counted, though it is noise next to the tile).
+        b_stream = self.double_buffer * self.b_format.tile_bytes()
+        return a_stream + b_stream + self.bm * self.bn * acc_item
 
     def validate(self, target: TpuTarget = V5E) -> None:
         sub, lane = mdt.alignment(self.dtype, target)
@@ -76,17 +96,31 @@ def _round_down(x: int, mult: int) -> int:
 
 
 def plan_gemm(m: int, k: int, n: int, dtype="float32", *,
+              b_dtype: str | None = None,
               target: TpuTarget = V5E,
               vmem_budget: int | None = None,
               double_buffer: int = 2,
               layout_a: str = "row",
               layout_b: str = "row") -> GemmPlan:
-    """Solve the TPU-translated constraint system for a concrete problem."""
+    """Solve the TPU-translated constraint system for a concrete problem.
+
+    ``b_dtype`` is the B-operand element dtype when it differs from the
+    compute dtype (int8 dequant-in-epilogue weights): the (C1) byte terms are
+    per-operand, so a narrow B stream buys deeper bk / wider bn before the
+    budget binds — and the emitted plan's ``b_format`` is quantized.
+    """
     d = mdt.info(jnp.dtype(dtype).name if not isinstance(dtype, str) else dtype)
+    b_item = (mdt.info(jnp.dtype(b_dtype).name).itemsize if b_dtype
+              else d.itemsize)
     budget = vmem_budget or target.vmem_bytes
     sub, lane = target.sublane(d.itemsize), target.lane
     acc_item = jnp.dtype(d.acc_dtype).itemsize
     mxu = target.mxu_dim
+    # Per-tile scale stream of a QUANTIZED B (one scale per resident tile) —
+    # shares the quantized-ness rule and scale dtype with GemmPlan.b_format,
+    # so the solver and vmem_working_set() agree about the working set.
+    scale_bytes = (double_buffer * ScaleSpec().itemsize
+                   if is_dequant_pair(d.name, b_dtype) else 0)
 
     # Clip targets to the (padded) problem.
     def clipped(value: int, dim: int, mult: int) -> int:
@@ -100,8 +134,8 @@ def plan_gemm(m: int, k: int, n: int, dtype="float32", *,
 
     # (C1) maximize bk first — the paper's "larger kc" insight (Eq. 1).
     def max_bk(bm_: int, bn_: int) -> int:
-        avail = budget - bm_ * bn_ * acc_item
-        per_k = double_buffer * (bm_ + bn_) * d.itemsize
+        avail = budget - bm_ * bn_ * acc_item - scale_bytes
+        per_k = double_buffer * (bm_ * d.itemsize + bn_ * b_item)
         return max(avail // per_k, lane)
 
     bk = clipped(_round_down(max_bk(bm, bn), lane), k, lane)
@@ -109,8 +143,8 @@ def plan_gemm(m: int, k: int, n: int, dtype="float32", *,
     # Then grow bm (paper Eq. 3: mc from L2), then bn (Eq. 4: nc from L3),
     # re-checking the budget after each growth step.
     def fits(bm_, bk_, bn_):
-        ws = (double_buffer * (bm_ * bk_ + bk_ * bn_) * d.itemsize
-              + bm_ * bn_ * acc_item)
+        ws = (double_buffer * (bm_ * bk_ * d.itemsize + bk_ * bn_ * b_item)
+              + bm_ * bn_ * acc_item + scale_bytes)
         return ws <= budget
 
     for cand in (8 * mxu, 4 * mxu, 2 * mxu):
@@ -138,12 +172,14 @@ def plan_gemm(m: int, k: int, n: int, dtype="float32", *,
 
     plan = GemmPlan(bm=bm, bk=bk, bn=bn, dtype=d.name, acc_dtype=d.acc_dtype,
                     layout_a=layout_a, layout_b=layout_b,
-                    double_buffer=double_buffer, vmem_budget=budget)
+                    double_buffer=double_buffer, vmem_budget=budget,
+                    b_dtype=b_dtype)
     plan.validate(target)
     return plan
 
 
 def plan_grouped_gemm(e: int, m: int, k: int, n: int, dtype="float32", *,
+                      b_dtype: str | None = None,
                       target: TpuTarget = V5E,
                       n_b_streams: int = 1,
                       double_buffer: int = 2,
@@ -162,11 +198,14 @@ def plan_grouped_gemm(e: int, m: int, k: int, n: int, dtype="float32", *,
     acc_item = jnp.dtype(d.acc_dtype).itemsize
 
     def extra_for(plan: GemmPlan) -> int:
+        # The second stream carries the partner stack's tiles (at the tile
+        # format's bytes — int8 silu-gate pairs reserve narrow) + a second
+        # revolving accumulator.
         return (n_b_streams - 1) * (
-            double_buffer * plan.bk * plan.bn * d.itemsize
+            double_buffer * plan.b_format.tile_bytes()
             + plan.bm * plan.bn * acc_item)
 
-    plan = plan_gemm(m, k, n, dtype, target=target,
+    plan = plan_gemm(m, k, n, dtype, b_dtype=b_dtype, target=target,
                      double_buffer=double_buffer, layout_b=layout_b)
     if n_b_streams > 1 and (plan.vmem_working_set() + extra_for(plan)
                             > target.vmem_bytes):
@@ -174,7 +213,7 @@ def plan_grouped_gemm(e: int, m: int, k: int, n: int, dtype="float32", *,
         # is a strict subset of one plan's working-set terms (a B stream + an
         # accumulator, no A stream), so a plan solved within budget/streams
         # always fits n_b_streams-fold.
-        plan = plan_gemm(m, k, n, dtype, target=target,
+        plan = plan_gemm(m, k, n, dtype, b_dtype=b_dtype, target=target,
                          double_buffer=double_buffer, layout_b=layout_b,
                          vmem_budget=target.vmem_bytes // n_b_streams)
         assert plan.vmem_working_set() + extra_for(plan) <= target.vmem_bytes
@@ -182,6 +221,7 @@ def plan_grouped_gemm(e: int, m: int, k: int, n: int, dtype="float32", *,
 
 
 def should_pack(m: int, k: int, n: int, dtype="float32", *,
+                b_dtype: str | None = None,
                 target: TpuTarget = V5E, fused: bool = False,
                 group: int = 1, occupancy: float = 1.0) -> bool:
     """Strategy heuristic from the paper's own results: packing pays off once
@@ -220,18 +260,24 @@ def should_pack(m: int, k: int, n: int, dtype="float32", *,
     """
     item = mdt.info(jnp.dtype(dtype).name if not isinstance(dtype, str)
                     else dtype).itemsize
+    # B's resident/streamed bytes are counted at B's OWN dtype: an int8
+    # dequant-in-epilogue weight stream is half/quarter the compute dtype's
+    # footprint, so it stays VMEM-resident longer and the pack crossover
+    # moves out accordingly.
+    b_item = (mdt.info(jnp.dtype(b_dtype).name).itemsize if b_dtype else item)
     if group > 1:
         m_expected = m * min(max(occupancy, 0.0), 1.0)
         return (m_expected > target.sublane(item)
-                and group * k * n * item > target.vmem_bytes // 32)
+                and group * k * n * b_item > target.vmem_bytes // 32)
     if fused:
         return (m > 8 * target.mxu_dim
-                and k * n * item > target.vmem_bytes // 32)
-    total = (m * k + k * n + m * n) * item
+                and k * n * b_item > target.vmem_bytes // 32)
+    total = (m * k + m * n) * item + k * n * b_item
     return total > target.vmem_bytes
 
 
 def choose_strategy(m: int, k: int, n: int, dtype="float32", *,
+                    b_dtype: str | None = None,
                     target: TpuTarget = V5E,
                     weights_prepacked: bool = False) -> str:
     """Pick the kernel strategy for a problem signature.
@@ -244,6 +290,6 @@ def choose_strategy(m: int, k: int, n: int, dtype="float32", *,
     """
     if weights_prepacked:
         return "tiling_packing_fused"
-    if should_pack(m, k, n, dtype, target=target, fused=True):
+    if should_pack(m, k, n, dtype, b_dtype=b_dtype, target=target, fused=True):
         return "tiling_packing_fused"
     return "tiling"

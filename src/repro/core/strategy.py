@@ -34,6 +34,7 @@ jnp ops (XLA fuses them) so all strategies compute the same function.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, Optional
 
 import jax
@@ -42,6 +43,7 @@ import jax.numpy as jnp
 from repro.core import dtypes as mdt
 from repro.core.epilogue import apply_epilogue
 from repro.core.planner import GemmPlan, plan_gemm, plan_grouped_gemm
+from repro.core.tile_format import TileFormat, normalize_packed
 from repro.kernels import ref
 from repro.kernels.gemm_grouped import (gemm_grouped_packed,
                                         gemm_grouped_packed_ragged,
@@ -177,15 +179,54 @@ def _packing_jnp(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
     return _epilogue(out, c, alpha, beta, out_dtype, bias, epilogue)
 
 
+def _plan_pack_format(plan: GemmPlan, b) -> TileFormat:
+    """The format a per-call strategy packs B to: the plan's b_format, with
+    an unquantized format retargeted to B's own dtype (the per-call packers
+    copy whatever dtype arrives; only quantized formats convert)."""
+    fmt = plan.b_format
+    if not fmt.is_quantized:
+        fmt = dataclasses.replace(fmt, dtype=jnp.dtype(b.dtype).name)
+    return fmt
+
+
+def _pack_b_plan(plan: GemmPlan, b, *, backend: str, interpret=None):
+    """Pack B per the plan's tile format: ``(packed, scales-or-None)``.
+
+    A quantized plan (``b_dtype="int8"``) quantizes here — the per-call
+    expression of the load-time path PackedWeight amortizes; a float plan
+    packs B's own dtype.
+    """
+    fmt = _plan_pack_format(plan, b)
+    if backend == "pallas":
+        out = pack_b(b, fmt, interpret=interpret)
+    else:
+        out = ref.pack_b_ref(b, fmt)
+    return normalize_packed(out, fmt)
+
+
+def _pack_b_grouped_plan(plan: GemmPlan, b, *, backend: str, interpret=None):
+    """Grouped analogue of :func:`_pack_b_plan`: pack a [E, K, N] stack per
+    the plan's tile format — ``(packed, scales-or-None)``. A quantized plan
+    (``b_dtype="int8"``) quantizes per expert here."""
+    if b is None:
+        return None, None
+    fmt = _plan_pack_format(plan, b)
+    if backend == "pallas":
+        out = pack_b_grouped(b, fmt, interpret=interpret)
+    else:
+        out = ref.pack_b_grouped_ref(b, fmt)
+    return normalize_packed(out, fmt)
+
+
 def _packing_fused_jnp(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
                        epilogue="none", interpret=None):
     """Fused-A Tiling+Packing, jnp lowering: B materialized tile-major, A
     consumed as a strided blocked view of its natural layout (no copy)."""
     plan = plan or plan_gemm(a.shape[0], a.shape[1], b.shape[1], a.dtype)
     m, n = a.shape[0], b.shape[1]
-    bp = ref.pack_b_ref(b, plan.bk, plan.bn, plan.layout_b)
+    bp, scales = _pack_b_plan(plan, b, backend="jnp")
     acc = ref.fused_packed_acc_ref(a, bp, n, layout_b=plan.layout_b,
-                                   bm=plan.bm)
+                                   bm=plan.bm, b_scales=scales)
     return _epilogue(acc, c, alpha, beta, out_dtype, bias, epilogue)
 
 
@@ -222,13 +263,17 @@ def _packing_pallas(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
 
 def _packing_fused_pallas(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
                           epilogue="none", interpret=None):
-    """Fused-A pipeline: only B goes through the packer; A streams pack-free."""
+    """Fused-A pipeline: only B goes through the packer; A streams pack-free.
+
+    A quantized plan packs B int8 + per-tile scales and the kernel
+    dequantizes on the accumulator (dequant-in-epilogue, per-call form)."""
     plan = plan or plan_gemm(a.shape[0], a.shape[1], b.shape[1], a.dtype)
-    bp = pack_b(b, plan.bk, plan.bn, layout=plan.layout_b, interpret=interpret)
+    bp, scales = _pack_b_plan(plan, b, backend="pallas", interpret=interpret)
     return gemm_packed_fused_a(a, bp, b.shape[1], c, bm=plan.bm, alpha=alpha,
                                beta=beta, layout_b=plan.layout_b,
-                               out_dtype=out_dtype, epilogue=epilogue,
-                               bias=bias, interpret=interpret)
+                               b_scales=scales, out_dtype=out_dtype,
+                               epilogue=epilogue, bias=bias,
+                               interpret=interpret)
 
 
 def _intrinsic_pallas(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
@@ -371,45 +416,40 @@ def run_grouped(strategy: str, a, b, *, b2=None, counts=None,
                                      n_b_streams=2 if b2 is not None else 1)
     if strategy == "grouped_packed_ragged":
         a4 = a.reshape(e, s, m // s, k)
+        bp, bs = _pack_b_grouped_plan(plan, b, backend=backend,
+                                      interpret=interpret)
+        b2p, b2s = _pack_b_grouped_plan(plan, b2, backend=backend,
+                                        interpret=interpret)
         if backend == "pallas":
-            bp = pack_b_grouped(b, plan.bk, plan.bn, layout=plan.layout_b,
-                                interpret=interpret)
-            b2p = (pack_b_grouped(b2, plan.bk, plan.bn, layout=plan.layout_b,
-                                  interpret=interpret)
-                   if b2 is not None else None)
             out = gemm_grouped_packed_ragged(
                 a4, bp, n, counts, b2_packed=b2p, bm=plan.bm,
-                layout_b=plan.layout_b, out_dtype=out_dtype,
-                epilogue=epilogue, bias=bias, interpret=interpret)
+                layout_b=plan.layout_b, b_scales=bs, b2_scales=b2s,
+                out_dtype=out_dtype, epilogue=epilogue, bias=bias,
+                interpret=interpret)
         else:
             # The jnp lowering consumes the packed stack like the kernel
             # does (it unpacks a natural view internally): packing stays a
             # real per-call cost here, as in every jnp strategy lowering —
             # production amortizes it at load time via GroupedPackedWeight.
-            bp = ref.pack_b_grouped_ref(b, plan.bk, plan.bn, plan.layout_b)
-            b2p = (ref.pack_b_grouped_ref(b2, plan.bk, plan.bn,
-                                          plan.layout_b)
-                   if b2 is not None else None)
             out = gemm_grouped_packed_ragged_jnp(
                 a4, bp, n, counts, b2_packed=b2p, bm=RAGGED_JNP_BM,
-                layout_b=plan.layout_b, out_dtype=out_dtype,
-                epilogue=epilogue, bias=bias)
+                layout_b=plan.layout_b, b_scales=bs, b2_scales=b2s,
+                out_dtype=out_dtype, epilogue=epilogue, bias=bias)
         return out.reshape(e, m, n)
+    bp, bs = _pack_b_grouped_plan(plan, b, backend=backend,
+                                  interpret=interpret)
+    b2p, b2s = _pack_b_grouped_plan(plan, b2, backend=backend,
+                                    interpret=interpret)
     if backend == "pallas":
-        bp = pack_b_grouped(b, plan.bk, plan.bn, layout=plan.layout_b,
-                            interpret=interpret)
-        b2p = (pack_b_grouped(b2, plan.bk, plan.bn, layout=plan.layout_b,
-                              interpret=interpret) if b2 is not None else None)
         return gemm_grouped_packed(a, bp, n, b2_packed=b2p, bm=plan.bm,
-                                   layout_b=plan.layout_b, out_dtype=out_dtype,
+                                   layout_b=plan.layout_b, b_scales=bs,
+                                   b2_scales=b2s, out_dtype=out_dtype,
                                    epilogue=epilogue, bias=bias,
                                    interpret=interpret)
-    bp = ref.pack_b_grouped_ref(b, plan.bk, plan.bn, plan.layout_b)
     acc = ref.grouped_fused_acc_ref(a, bp, n, layout_b=plan.layout_b,
-                                    bm=plan.bm)
+                                    bm=plan.bm, b_scales=bs)
     acc2 = None
-    if b2 is not None:
-        b2p = ref.pack_b_grouped_ref(b2, plan.bk, plan.bn, plan.layout_b)
+    if b2p is not None:
         acc2 = ref.grouped_fused_acc_ref(a, b2p, n, layout_b=plan.layout_b,
-                                         bm=plan.bm)
+                                         bm=plan.bm, b_scales=b2s)
     return grouped_epilogue(acc, acc2, bias, epilogue, out_dtype)

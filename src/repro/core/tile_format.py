@@ -1,0 +1,195 @@
+"""TileFormat — the packed-tile format as a first-class compile-time object.
+
+The paper's layered design hinges on a clean interface between the packing
+layer and the micro kernel: the *format* of the packed buffer (block shape,
+grid-major order, intra-tile element layout, element dtype) is what lets a new
+data layout retarget the whole stack at once. Related compiler-composed-
+nanokernel work (Library Liberation) and Exo's micro-kernel generation make
+the same argument: format metadata should be a single compile-time object, not
+a convention duplicated per kernel.
+
+:class:`TileFormat` is that object for the B operand's tile-major stack
+(``[Nb, Kb, t0, t1]``, grown to ``[E, Nb, Kb, t0, t1]`` for grouped expert
+stacks). It is consumed by
+
+  * the pack layer (``kernels/pack.py`` and the jnp packers in
+    ``kernels/ref.py``) — geometry, zero-fill envelope, and (for quantized
+    formats) the per-tile scale emission;
+  * the kernel BlockSpec/index-map builders (``kernels/common.py``) — tile
+    block shapes and the contraction-dim position;
+  * the planner (``core/planner.py``) — per-tile and per-buffer byte
+    accounting (``GemmPlan.b_format`` derives the format from a plan);
+  * both weight pytrees (``core/layered.py``) — packing, the scale leaf, and
+    the jnp fallbacks.
+
+A :class:`ScaleSpec` on the format marks it QUANTIZED: tile elements are a
+narrow integer dtype and a dense ``[Nb, Kb]`` (grouped: ``[E, Nb, Kb]``)
+scale tensor rides alongside the packed stack, one scale per (Kb, Nb) tile.
+Scale contract: ``scale[j, kk]`` dequantizes tile (j, kk) as ``tile * scale``;
+the kernels consume it through a BlockSpec mirroring B's index map and apply
+it to each K-step's partial product on the VMEM f32 accumulator — before the
+store epilogue (bias/activation/silu-gate), so every fused epilogue works on
+quantized stacks unchanged.
+
+Both descriptors are frozen/hashable — safe as pytree-static aux data, jit
+cache keys, and plan fields.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleSpec:
+    """Per-tile dequantization-scale spec for a quantized tile format."""
+
+    dtype: str = "float32"
+    granularity: str = "tile"     # one scale per (Kb, Nb) tile
+
+    def __post_init__(self):
+        if self.granularity != "tile":
+            raise ValueError(
+                f"unsupported scale granularity {self.granularity!r} "
+                "(only per-(Kb,Nb)-'tile' scales are defined)")
+
+    @property
+    def itemsize(self) -> int:
+        return jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class TileFormat:
+    """Descriptor of one tile-major packed-B buffer ``[*, Nb, Kb, t0, t1]``.
+
+    ``bk``/``bn`` are the block (tile) sizes along the contraction and output
+    dims; ``layout`` picks the intra-tile element order (``"row"``: tiles are
+    ``[bk, bn]``; ``"col"``: ``[bn, bk]`` — the matrix engine's preferred B
+    layouts, paper §3.1). ``dtype`` is the tile *element* dtype; a
+    :class:`ScaleSpec` marks the format quantized (see module docstring).
+    """
+
+    bk: int
+    bn: int
+    layout: str = "row"
+    dtype: str = "float32"
+    scale: Optional[ScaleSpec] = None
+
+    def __post_init__(self):
+        if self.layout not in ("row", "col"):
+            raise ValueError(f"bad layout {self.layout!r}")
+        if self.scale is not None and not jnp.issubdtype(
+                jnp.dtype(self.dtype), jnp.integer):
+            raise ValueError(
+                f"per-tile scales go with integer tile elements; got "
+                f"dtype={self.dtype!r}")
+
+    # -- geometry -----------------------------------------------------------
+
+    @property
+    def tile_shape(self) -> Tuple[int, int]:
+        """Shape of one stored tile: [bk, bn] ("row") / [bn, bk] ("col")."""
+        return (self.bn, self.bk) if self.layout == "col" else (self.bk,
+                                                                self.bn)
+
+    @property
+    def rhs_contract(self) -> int:
+        """Contraction dim of one stored tile (for dot_general)."""
+        return 0 if self.layout == "row" else 1
+
+    def grid(self, k: int, n: int) -> Tuple[int, int]:
+        """(Nb, Kb) tile grid covering a [K, N] operand (zero-fill envelope)."""
+        return cdiv(n, self.bn), cdiv(k, self.bk)
+
+    def packed_shape(self, k: int, n: int) -> Tuple[int, int, int, int]:
+        return self.grid(k, n) + self.tile_shape
+
+    def scale_shape(self, k: int, n: int) -> Tuple[int, int]:
+        """[Nb, Kb] — one scale per tile, same grid-major order as the stack."""
+        return self.grid(k, n)
+
+    # -- byte accounting (planner) -----------------------------------------
+
+    @property
+    def itemsize(self) -> int:
+        return jnp.dtype(self.dtype).itemsize
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.scale is not None
+
+    def tile_bytes(self) -> int:
+        """HBM bytes of one resident tile (elements + its scale)."""
+        b = self.bk * self.bn * self.itemsize
+        if self.scale is not None:
+            b += self.scale.itemsize
+        return b
+
+    def packed_bytes(self, k: int, n: int) -> int:
+        """Total bytes of the packed stack (+scales) for a [K, N] operand."""
+        nb, kb = self.grid(k, n)
+        return nb * kb * self.tile_bytes()
+
+    # -- construction helpers ----------------------------------------------
+
+    @classmethod
+    def from_packed(cls, packed, layout: str = "row",
+                    has_scales: bool = False) -> "TileFormat":
+        """Recover the format of an existing packed buffer (trailing two dims
+        are the tile; any number of leading grid/stack dims)."""
+        t0, t1 = packed.shape[-2:]
+        bk, bn = (t1, t0) if layout == "col" else (t0, t1)
+        return cls(bk=bk, bn=bn, layout=layout,
+                   dtype=jnp.dtype(packed.dtype).name,
+                   scale=ScaleSpec() if has_scales else None)
+
+
+def is_dequant_pair(compute_dtype, b_dtype) -> bool:
+    """THE quantized-ness rule, in one place: a format is dequant-in-epilogue
+    (int tiles + per-tile scales) exactly when B's element dtype is a narrow
+    integer under a non-integer compute dtype. Used by ``GemmPlan.b_format``
+    and the planner's byte terms, so solver and plan always agree."""
+    if b_dtype is None:
+        return False
+    return (jnp.issubdtype(jnp.dtype(b_dtype), jnp.integer)
+            and not jnp.issubdtype(jnp.dtype(compute_dtype), jnp.integer))
+
+
+def normalize_packed(out, fmt: TileFormat):
+    """Normalize a packer's polymorphic return to ``(packed, scales-or-None)``
+    — quantized formats already return the pair, float formats a bare array."""
+    return out if fmt.is_quantized else (out, None)
+
+
+def quantize_tiles(t: jnp.ndarray, fmt: TileFormat):
+    """Row-layout tile stack [..., Nb, Kb, bk, bn] (float) -> (int8 tiles,
+    [..., Nb, Kb] scales) — THE quantization contract of a scaled format.
+
+    ``scale = absmax(tile)/127`` (1.0 for all-zero tiles, so zero-fill
+    remainder tiles stay exact); values round-to-nearest-even, clipped to
+    [-127, 127]. Dequantization is ``tile * scale``, applied by the kernels
+    per K-step on the f32 accumulator.
+    """
+    absmax = jnp.max(jnp.abs(t), axis=(-2, -1))
+    scales = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    scales = scales.astype(fmt.scale.dtype)
+    q = jnp.round(t / scales[..., None, None]).clip(-127, 127)
+    return q.astype(fmt.dtype), scales
+
+
+def as_tile_format(fmt, bn: Optional[int] = None, *, layout: str = "row",
+                   dtype=None) -> TileFormat:
+    """Normalize the pack layer's legacy ``(bk, bn, layout)`` int arguments to
+    a :class:`TileFormat` — the single code path for both calling styles."""
+    if isinstance(fmt, TileFormat):
+        return fmt
+    if bn is None:
+        raise TypeError("pack needs a TileFormat or explicit (bk, bn) ints")
+    return TileFormat(bk=int(fmt), bn=int(bn), layout=layout,
+                      dtype=jnp.dtype(dtype or "float32").name)

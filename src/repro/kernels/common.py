@@ -1,10 +1,20 @@
-"""Shared Pallas utilities: compiler-params compat, padding, interpret policy."""
+"""Shared Pallas utilities: compiler-params compat, padding, interpret policy,
+and the TileFormat-driven BlockSpec builders every packed GEMM kernel uses.
+
+The packed-B geometry (tile block shapes, the scale operand's mirrored index
+map, the ref-splitting convention for optional operands) lives HERE, keyed by
+:class:`repro.core.tile_format.TileFormat` — the dense and grouped kernels
+consume these builders instead of re-deriving ``[Nb, Kb, bk, bn]`` layout
+constants per kernel.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from jax.experimental import pallas as pl  # noqa: F401  (re-exported)
+
+from repro.core.tile_format import TileFormat  # noqa: F401  (re-exported)
 
 try:
     from jax.experimental.pallas import tpu as pltpu
@@ -59,13 +69,72 @@ KERNEL_EPILOGUES = {
 }
 
 
-def split_epilogue_refs(rest, has_bias: bool):
-    """Unpack a GEMM kernel's trailing (bias?, out, acc-scratch) refs."""
-    if has_bias:
-        bias_ref, o_ref, acc_ref = rest
-    else:
-        bias_ref, (o_ref, acc_ref) = None, rest
-    return bias_ref, o_ref, acc_ref
+class GemmRefs:
+    """A GEMM kernel's refs, split once by the shared operand convention.
+
+    Every packed kernel (dense, fused-A, grouped, ragged) orders its refs as
+    ``<lead operands>, b2?, scale?, scale2?, bias?, out, acc, acc2?`` — this
+    is the single splitter replacing the per-kernel index arithmetic.
+    """
+
+    def __init__(self, refs, *, n_lead: int, has_gate: bool = False,
+                 has_scale: bool = False, has_bias: bool = False):
+        it = iter(refs)
+        self.lead = tuple(next(it) for _ in range(n_lead))
+        self.b2 = next(it) if has_gate else None
+        self.scale = next(it) if has_scale else None
+        self.scale2 = next(it) if (has_scale and has_gate) else None
+        self.bias = next(it) if has_bias else None
+        self.out = next(it)
+        self.acc = next(it)
+        self.acc2 = next(it) if has_gate else None
+        leftover = tuple(it)
+        assert not leftover, f"unconsumed kernel refs: {len(leftover)}"
+
+
+def split_epilogue_refs(rest, has_bias: bool, has_scale: bool = False):
+    """Unpack a dense GEMM kernel's trailing (scale?, bias?, out, acc) refs."""
+    r = GemmRefs(rest, n_lead=0, has_scale=has_scale, has_bias=has_bias)
+    return r.scale, r.bias, r.out, r.acc
+
+
+def b_tile_spec(fmt: TileFormat, index_map, *, lead: int = 2):
+    """BlockSpec for one packed-B tile of a ``[*lead-grid, t0, t1]`` stack
+    (``lead=2`` dense [Nb,Kb,...], ``lead=3`` grouped [E,Nb,Kb,...])."""
+    return pl.BlockSpec((1,) * lead + fmt.tile_shape, index_map)
+
+
+def scale_tile_spec(fmt: TileFormat, b_index_map, *, lead: int = 2):
+    """BlockSpec for the per-tile scale operand ([Nb,Kb] / [E,Nb,Kb]):
+    mirrors B's index map with the trailing intra-tile (0, 0) dropped."""
+    del fmt  # geometry is fully determined by the mirrored map
+
+    def scale_map(*args):
+        return b_index_map(*args)[:-2]
+
+    return pl.BlockSpec((1,) * lead, scale_map)
+
+
+def apply_tile_scale(partial, scale_ref):
+    """Dequantize one K-step's partial product on the f32 accumulator path:
+    multiply by the current (Kb, Nb) tile's scalar scale. No-op when the
+    format is unquantized (``scale_ref is None``)."""
+    if scale_ref is None:
+        return partial
+    return partial * scale_ref[...].reshape(1, 1).astype(partial.dtype)
+
+
+def contract_tile(a, b_tile, scale_ref, fmt: TileFormat, acc_dtype):
+    """One micro-kernel step over a packed-B tile: cast a quantized tile up to
+    the activation dtype (int8 tiles stream narrow from HBM; the MXU pass
+    runs in the compute dtype), contract per the format's intra-tile layout,
+    and dequantize the partial product with the tile's scale."""
+    if scale_ref is not None and b_tile.dtype != a.dtype:
+        b_tile = b_tile.astype(a.dtype)
+    partial = jax.lax.dot_general(
+        a, b_tile, (((1,), (fmt.rhs_contract,)), ((), ())),
+        preferred_element_type=acc_dtype)
+    return apply_tile_scale(partial, scale_ref)
 
 
 def bias_spec_and_operand(bias, n, bn):

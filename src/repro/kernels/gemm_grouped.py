@@ -54,9 +54,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import (KERNEL_EPILOGUES, acc_dtype_for, cdiv,
+from repro.core.tile_format import TileFormat
+from repro.kernels.common import (KERNEL_EPILOGUES, GemmRefs, acc_dtype_for,
+                                  b_tile_spec, cdiv, contract_tile,
                                   default_interpret, pad2d, pallas_kwargs,
-                                  tpu_compiler_params, vmem_scratch)
+                                  scale_tile_spec, tpu_compiler_params,
+                                  vmem_scratch)
 
 try:
     from jax.experimental.pallas import tpu as pltpu
@@ -64,50 +67,37 @@ except ImportError:  # pragma: no cover
     pltpu = None
 
 
-def _grouped_kernel(*refs, k_steps, layout_b, epilogue, has_bias, has_gate):
-    a_ref, b_ref = refs[0], refs[1]
-    idx = 2
-    b2_ref = None
-    if has_gate:
-        b2_ref = refs[idx]
-        idx += 1
-    bias_ref = None
-    if has_bias:
-        bias_ref = refs[idx]
-        idx += 1
-    o_ref = refs[idx]
-    acc_ref = refs[idx + 1]
-    acc2_ref = refs[idx + 2] if has_gate else None
+def _grouped_kernel(*refs, k_steps, fmt, epilogue, has_bias, has_scale,
+                    has_gate):
+    r = GemmRefs(refs, n_lead=2, has_gate=has_gate, has_scale=has_scale,
+                 has_bias=has_bias)
+    a_ref, b_ref = r.lead
 
     @pl.when(pl.program_id(3) == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        r.acc[...] = jnp.zeros_like(r.acc)
         if has_gate:
-            acc2_ref[...] = jnp.zeros_like(acc2_ref)
+            r.acc2[...] = jnp.zeros_like(r.acc2)
 
     a = a_ref[0]       # [bm, bk] strided block of the NATURAL [E, M, K] layout
-    rhs_contract = 0 if layout_b == "row" else 1
-
-    def contract(b_tile):
-        return jax.lax.dot_general(
-            a, b_tile, (((1,), (rhs_contract,)), ((), ())),
-            preferred_element_type=acc_ref.dtype)
-
-    acc_ref[...] += contract(b_ref[0, 0, 0])
+    # Quantized stacks dequantize per K-step (per-tile scale on the f32
+    # accumulator path, gate and up each with their own scale grid).
+    r.acc[...] += contract_tile(a, b_ref[0, 0, 0], r.scale, fmt, r.acc.dtype)
     if has_gate:
-        acc2_ref[...] += contract(b2_ref[0, 0, 0])
+        r.acc2[...] += contract_tile(a, r.b2[0, 0, 0], r.scale2, fmt,
+                                     r.acc2.dtype)
 
     @pl.when(pl.program_id(3) == k_steps - 1)
     def _epilogue():
-        out = acc_ref[...]
-        if bias_ref is not None:
-            out = out + bias_ref[0].astype(out.dtype)   # [1,bn] broadcast
+        out = r.acc[...]
+        if r.bias is not None:
+            out = out + r.bias[0].astype(out.dtype)     # [1,bn] broadcast
         if has_gate:
             # silu(gate) * up on the VMEM accumulators — the MoE pair fusion.
-            out = KERNEL_EPILOGUES["silu"](out) * acc2_ref[...]
+            out = KERNEL_EPILOGUES["silu"](out) * r.acc2[...]
         else:
             out = KERNEL_EPILOGUES[epilogue](out)
-        o_ref[0] = out.astype(o_ref.dtype)
+        r.out[0] = out.astype(r.out.dtype)
 
 
 def gemm_grouped_packed(a: jnp.ndarray,
@@ -117,6 +107,8 @@ def gemm_grouped_packed(a: jnp.ndarray,
                         b2_packed: jnp.ndarray | None = None,
                         bm: int = 128,
                         layout_b: str = "row",
+                        b_scales: jnp.ndarray | None = None,
+                        b2_scales: jnp.ndarray | None = None,
                         out_dtype=None,
                         epilogue: str = "none",
                         bias: jnp.ndarray | None = None,
@@ -131,6 +123,10 @@ def gemm_grouped_packed(a: jnp.ndarray,
     epilogue: a name from ``KERNEL_EPILOGUES``, or ``"silu_gate"`` — then
               ``b2_packed`` (same packed geometry) must be given and the
               kernel returns ``silu(A@B) * (A@B2)`` computed in one pass.
+    b_scales / b2_scales: per-tile [E, Nb, Kb] f32 scale grids for int8
+              quantized stacks (from a quantized ``pack_b_grouped``); the
+              dequant is fused per K-step ahead of every store epilogue,
+              so bias / activation / silu-gate work quantized unchanged.
 
     Returns [E, M, n].
     """
@@ -140,13 +136,14 @@ def gemm_grouped_packed(a: jnp.ndarray,
     if has_gate != (b2_packed is not None):
         raise ValueError("epilogue='silu_gate' requires b2_packed (and only "
                          "silu_gate takes it)")
+    has_scale = b_scales is not None
+    if has_gate and has_scale != (b2_scales is not None):
+        raise ValueError("quantized silu_gate needs BOTH scale grids")
+    fmt = TileFormat.from_packed(b_packed, layout_b, has_scales=has_scale)
     e, m, k = a.shape
     eb, nb, kb = b_packed.shape[:3]
     assert eb == e, (a.shape, b_packed.shape)
-    if layout_b == "row":
-        bk, bn = b_packed.shape[3:]
-    else:
-        bn, bk = b_packed.shape[3:]
+    bk, bn = fmt.bk, fmt.bn
     assert cdiv(k, bk) == kb, (a.shape, b_packed.shape, bk)
     if has_gate:
         assert b2_packed.shape == b_packed.shape, (b2_packed.shape,
@@ -157,17 +154,25 @@ def gemm_grouped_packed(a: jnp.ndarray,
     mb = cdiv(m, bm)
 
     grid = (e, mb, nb, kb)  # expert outermost; K innermost (revolving acc)
-    tb = b_packed.shape[3:]
+    b_map = lambda ee, i, j, kk: (ee, j, kk, 0, 0)
     in_specs = [
         pl.BlockSpec((1, bm, bk), lambda ee, i, j, kk: (ee, i, kk)),
-        pl.BlockSpec((1, 1, 1) + tb, lambda ee, i, j, kk: (ee, j, kk, 0, 0)),
+        b_tile_spec(fmt, b_map, lead=3),
     ]
     operands = [a_p, b_packed]
     if has_gate:
-        in_specs.append(
-            pl.BlockSpec((1, 1, 1) + tb,
-                         lambda ee, i, j, kk: (ee, j, kk, 0, 0)))
+        in_specs.append(b_tile_spec(fmt, b_map, lead=3))
         operands.append(b2_packed)
+    if has_scale:
+        assert b_scales.shape == (e, nb, kb), (b_scales.shape,
+                                               b_packed.shape)
+        in_specs.append(scale_tile_spec(fmt, b_map, lead=3))
+        operands.append(b_scales)
+        if has_gate:
+            assert b2_scales.shape == (e, nb, kb), (b2_scales.shape,
+                                                    b_packed.shape)
+            in_specs.append(scale_tile_spec(fmt, b_map, lead=3))
+            operands.append(b2_scales)
     has_bias = bias is not None
     if has_bias:
         assert bias.shape == (e, n), (bias.shape, (e, n))
@@ -180,9 +185,9 @@ def gemm_grouped_packed(a: jnp.ndarray,
         scratch.append(vmem_scratch((bm, bn), acc_dtype))
 
     out = pl.pallas_call(
-        functools.partial(_grouped_kernel, k_steps=kb, layout_b=layout_b,
+        functools.partial(_grouped_kernel, k_steps=kb, fmt=fmt,
                           epilogue=epilogue, has_bias=has_bias,
-                          has_gate=has_gate),
+                          has_scale=has_scale, has_gate=has_gate),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bm, bn), lambda ee, i, j, kk: (ee, i, j)),
@@ -200,21 +205,11 @@ def gemm_grouped_packed(a: jnp.ndarray,
 # Ragged (occupancy-aware) grouped GEMM
 # ---------------------------------------------------------------------------
 
-def _ragged_kernel(*refs, k_steps, bm, layout_b, epilogue, has_bias,
+def _ragged_kernel(*refs, k_steps, bm, fmt, epilogue, has_bias, has_scale,
                    has_gate):
-    counts_ref, a_ref, b_ref = refs[0], refs[1], refs[2]
-    idx = 3
-    b2_ref = None
-    if has_gate:
-        b2_ref = refs[idx]
-        idx += 1
-    bias_ref = None
-    if has_bias:
-        bias_ref = refs[idx]
-        idx += 1
-    o_ref = refs[idx]
-    acc_ref = refs[idx + 1]
-    acc2_ref = refs[idx + 2] if has_gate else None
+    r = GemmRefs(refs, n_lead=3, has_gate=has_gate, has_scale=has_scale,
+                 has_bias=has_bias)
+    counts_ref, a_ref, b_ref = r.lead
 
     g = pl.program_id(0)
     i = pl.program_id(1)
@@ -226,45 +221,40 @@ def _ragged_kernel(*refs, k_steps, bm, layout_b, epilogue, has_bias,
 
     @pl.when(live & (pl.program_id(3) == 0))
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        r.acc[...] = jnp.zeros_like(r.acc)
         if has_gate:
-            acc2_ref[...] = jnp.zeros_like(acc2_ref)
-
-    rhs_contract = 0 if layout_b == "row" else 1
-
-    def contract(b_tile):
-        return jax.lax.dot_general(
-            a_ref[0], b_tile, (((1,), (rhs_contract,)), ((), ())),
-            preferred_element_type=acc_ref.dtype)
+            r.acc2[...] = jnp.zeros_like(r.acc2)
 
     # Zero-work early-out: an all-padding block skips the dot(s) entirely —
     # the grid still visits the step, but the MXU never fires.
     @pl.when(live)
     def _acc():
-        acc_ref[...] += contract(b_ref[0, 0, 0])
+        r.acc[...] += contract_tile(a_ref[0], b_ref[0, 0, 0], r.scale, fmt,
+                                    r.acc.dtype)
         if has_gate:
-            acc2_ref[...] += contract(b2_ref[0, 0, 0])
+            r.acc2[...] += contract_tile(a_ref[0], r.b2[0, 0, 0], r.scale2,
+                                         fmt, r.acc2.dtype)
 
     @pl.when(live & last_k)
     def _epilogue():
-        out = acc_ref[...]
-        if bias_ref is not None:
-            out = out + bias_ref[0].astype(out.dtype)
+        out = r.acc[...]
+        if r.bias is not None:
+            out = out + r.bias[0].astype(out.dtype)
         if has_gate:
-            out = KERNEL_EPILOGUES["silu"](out) * acc2_ref[...]
+            out = KERNEL_EPILOGUES["silu"](out) * r.acc2[...]
         else:
             out = KERNEL_EPILOGUES[epilogue](out)
         # Masked store: rows at/past the count are written as zeros, so
         # dropped-token slots never carry garbage (or a bias image) to HBM.
         rows = jax.lax.broadcasted_iota(jnp.int32, out.shape, 0)
-        o_ref[0] = jnp.where(rows < bc, out, 0).astype(o_ref.dtype)
+        r.out[0] = jnp.where(rows < bc, out, 0).astype(r.out.dtype)
 
     # All-padding block: one cheap zero store (no accumulator touch, no
     # epilogue) — the output block must still be written, it just never
     # carries data.
     @pl.when(jnp.logical_not(live) & last_k)
     def _store_zeros():
-        o_ref[0] = jnp.zeros_like(o_ref[0])
+        r.out[0] = jnp.zeros_like(r.out[0])
 
 
 def gemm_grouped_packed_ragged(a: jnp.ndarray,
@@ -275,6 +265,8 @@ def gemm_grouped_packed_ragged(a: jnp.ndarray,
                                b2_packed: jnp.ndarray | None = None,
                                bm: int = 128,
                                layout_b: str = "row",
+                               b_scales: jnp.ndarray | None = None,
+                               b2_scales: jnp.ndarray | None = None,
                                out_dtype=None,
                                epilogue: str = "none",
                                bias: jnp.ndarray | None = None,
@@ -288,6 +280,10 @@ def gemm_grouped_packed_ragged(a: jnp.ndarray,
               segment. Prefetched to SMEM before the grid runs, so both the
               index maps and the kernel body can branch on it.
     b_packed: [E, Nb, Kb, bk, bn] from ``pack.pack_b_grouped`` (load time).
+    b_scales / b2_scales: [E, Nb, Kb] f32 per-tile scale grids (quantized
+              int8 stacks); the scale operand's index map mirrors B's —
+              including the count-aware index pinning, so skipped steps
+              fetch no new scales either.
 
     Returns [E, S, C, n]; rows at/past ``counts[e, s]`` are zero. Up to the
     masked tail rows, the result is identical to ``gemm_grouped_packed`` on
@@ -303,15 +299,16 @@ def gemm_grouped_packed_ragged(a: jnp.ndarray,
     if has_gate != (b2_packed is not None):
         raise ValueError("epilogue='silu_gate' requires b2_packed (and only "
                          "silu_gate takes it)")
+    has_scale = b_scales is not None
+    if has_gate and has_scale != (b2_scales is not None):
+        raise ValueError("quantized silu_gate needs BOTH scale grids")
+    fmt = TileFormat.from_packed(b_packed, layout_b, has_scales=has_scale)
     e, s, c, k = a.shape
     eb, nb, kb = b_packed.shape[:3]
     assert eb == e, (a.shape, b_packed.shape)
     if counts.shape != (e, s):
         raise ValueError(f"counts must be [E, S]={e, s}; got {counts.shape}")
-    if layout_b == "row":
-        bk, bn = b_packed.shape[3:]
-    else:
-        bn, bk = b_packed.shape[3:]
+    bk, bn = fmt.bk, fmt.bn
     assert cdiv(k, bk) == kb, (a.shape, b_packed.shape, bk)
     if has_gate:
         assert b2_packed.shape == b_packed.shape, (b2_packed.shape,
@@ -326,7 +323,6 @@ def gemm_grouped_packed_ragged(a: jnp.ndarray,
     counts_flat = jnp.clip(counts.reshape(grp), 0, c).astype(jnp.int32)
 
     grid = (grp, mb, nb, kb)  # segment outermost; K innermost (revolving acc)
-    tb = b_packed.shape[3:]
 
     def live(cnt, g, i):
         return cnt[g] > i * bm
@@ -343,12 +339,22 @@ def gemm_grouped_packed_ragged(a: jnp.ndarray,
 
     in_specs = [
         pl.BlockSpec((1, bm, bk), a_map),
-        pl.BlockSpec((1, 1, 1) + tb, b_map),
+        b_tile_spec(fmt, b_map, lead=3),
     ]
     operands = [a_p, b_packed]
     if has_gate:
-        in_specs.append(pl.BlockSpec((1, 1, 1) + tb, b_map))
+        in_specs.append(b_tile_spec(fmt, b_map, lead=3))
         operands.append(b2_packed)
+    if has_scale:
+        assert b_scales.shape == (e, nb, kb), (b_scales.shape,
+                                               b_packed.shape)
+        in_specs.append(scale_tile_spec(fmt, b_map, lead=3))
+        operands.append(b_scales)
+        if has_gate:
+            assert b2_scales.shape == (e, nb, kb), (b2_scales.shape,
+                                                    b_packed.shape)
+            in_specs.append(scale_tile_spec(fmt, b_map, lead=3))
+            operands.append(b2_scales)
     has_bias = bias is not None
     if has_bias:
         assert bias.shape == (e, n), (bias.shape, (e, n))
@@ -375,9 +381,9 @@ def gemm_grouped_packed_ragged(a: jnp.ndarray,
         if params is not None:
             kwargs["compiler_params"] = params
     out = pl.pallas_call(
-        functools.partial(_ragged_kernel, k_steps=kb, bm=bm,
-                          layout_b=layout_b, epilogue=epilogue,
-                          has_bias=has_bias, has_gate=has_gate),
+        functools.partial(_ragged_kernel, k_steps=kb, bm=bm, fmt=fmt,
+                          epilogue=epilogue, has_bias=has_bias,
+                          has_scale=has_scale, has_gate=has_gate),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((grp, mb * bm, nb * bn), out_dtype),
         **kwargs,
@@ -386,8 +392,15 @@ def gemm_grouped_packed_ragged(a: jnp.ndarray,
 
 
 def unpack_b_grouped(b_packed: jnp.ndarray, k: int, n: int,
-                     layout_b: str = "row") -> jnp.ndarray:
-    """Tile-major [E, Nb, Kb, bk, bn] -> natural [E, K, N] view (one copy)."""
+                     layout_b: str = "row",
+                     scales: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Tile-major [E, Nb, Kb, bk, bn] -> natural [E, K, N] view (one copy).
+
+    ``scales`` ([E, Nb, Kb], quantized stacks) dequantizes each tile before
+    the reshape — the natural view is then float.
+    """
+    if scales is not None:
+        b_packed = b_packed.astype(scales.dtype) * scales[..., None, None]
     if layout_b == "col":
         b_packed = b_packed.transpose(0, 1, 2, 4, 3)
     e, nb, kb, bk, bn = b_packed.shape
@@ -403,6 +416,8 @@ def gemm_grouped_packed_ragged_jnp(a: jnp.ndarray,
                                    b2_packed: jnp.ndarray | None = None,
                                    bm: int = 16,
                                    layout_b: str = "row",
+                                   b_scales: jnp.ndarray | None = None,
+                                   b2_scales: jnp.ndarray | None = None,
                                    out_dtype=None,
                                    epilogue: str = "none",
                                    bias: jnp.ndarray | None = None) -> jnp.ndarray:
@@ -436,8 +451,10 @@ def gemm_grouped_packed_ragged_jnp(a: jnp.ndarray,
     bm = max(8, min(bm, -(-c // 8) * 8))
     mb = cdiv(c, bm)
     cp = mb * bm
-    b_full = unpack_b_grouped(b_packed, k, n, layout_b).astype(jnp.float32)
-    b2_full = (unpack_b_grouped(b2_packed, k, n, layout_b).astype(jnp.float32)
+    b_full = unpack_b_grouped(b_packed, k, n, layout_b,
+                              scales=b_scales).astype(jnp.float32)
+    b2_full = (unpack_b_grouped(b2_packed, k, n, layout_b,
+                                scales=b2_scales).astype(jnp.float32)
                if has_gate else None)
     a3 = a.reshape(grp, c, k).astype(jnp.float32)
     if cp != c:

@@ -33,15 +33,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import (acc_dtype_for, bias_spec_and_operand, cdiv,
+from repro.core.tile_format import TileFormat
+from repro.kernels.common import (acc_dtype_for, b_tile_spec,
+                                  bias_spec_and_operand, cdiv, contract_tile,
                                   default_interpret, finalize_gemm, pad2d,
-                                  pallas_kwargs, split_epilogue_refs,
-                                  vmem_scratch)
+                                  pallas_kwargs, scale_tile_spec,
+                                  split_epilogue_refs, vmem_scratch)
 
 
 def _packed_kernel(a_ref, b_ref, c_ref, *rest, alpha, beta, k_steps,
-                   layout_a, layout_b, epilogue="none", has_bias=False):
-    bias_ref, o_ref, acc_ref = split_epilogue_refs(rest, has_bias)
+                   layout_a, fmt, epilogue="none", has_bias=False):
+    _, bias_ref, o_ref, acc_ref = split_epilogue_refs(rest, has_bias)
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -50,10 +52,9 @@ def _packed_kernel(a_ref, b_ref, c_ref, *rest, alpha, beta, k_steps,
     a = a_ref[0, 0]  # [bm,bk] ("row") or [bk,bm] ("col")
     b = b_ref[0, 0]  # [bk,bn] ("row") or [bn,bk] ("col")
     lhs_contract = 1 if layout_a == "row" else 0
-    rhs_contract = 0 if layout_b == "row" else 1
     # Result is [bm, bn] for every layout combination (contraction over bk).
     acc_ref[...] += jax.lax.dot_general(
-        a, b, (((lhs_contract,), (rhs_contract,)), ((), ())),
+        a, b, (((lhs_contract,), (fmt.rhs_contract,)), ((), ())),
         preferred_element_type=acc_ref.dtype)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
@@ -63,8 +64,9 @@ def _packed_kernel(a_ref, b_ref, c_ref, *rest, alpha, beta, k_steps,
 
 
 def _fused_a_kernel(a_ref, b_ref, c_ref, *rest, alpha, beta, k_steps,
-                    layout_b, epilogue="none", has_bias=False):
-    bias_ref, o_ref, acc_ref = split_epilogue_refs(rest, has_bias)
+                    fmt, epilogue="none", has_bias=False, has_scale=False):
+    scale_ref, bias_ref, o_ref, acc_ref = split_epilogue_refs(
+        rest, has_bias, has_scale)
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -72,10 +74,9 @@ def _fused_a_kernel(a_ref, b_ref, c_ref, *rest, alpha, beta, k_steps,
 
     a = a_ref[...]   # [bm,bk] strided block of the NATURAL [M,K] operand
     b = b_ref[0, 0]  # [bk,bn] ("row") or [bn,bk] ("col") pre-packed tile
-    rhs_contract = 0 if layout_b == "row" else 1
-    acc_ref[...] += jax.lax.dot_general(
-        a, b, (((1,), (rhs_contract,)), ((), ())),
-        preferred_element_type=acc_ref.dtype)
+    # Quantized B dequantizes per K-step on the f32 accumulator (the tile's
+    # scalar scale rides the mirrored BlockSpec), ahead of the store epilogue.
+    acc_ref[...] += contract_tile(a, b, scale_ref, fmt, acc_ref.dtype)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _epilogue():
@@ -104,6 +105,7 @@ def gemm_packed(a_packed: jnp.ndarray,
     """
     if interpret is None:
         interpret = default_interpret()
+    fmt = TileFormat.from_packed(b_packed, layout_b)
     mb, kb = a_packed.shape[:2]
     nb, kb2 = b_packed.shape[:2]
     assert kb == kb2, (a_packed.shape, b_packed.shape)
@@ -111,11 +113,8 @@ def gemm_packed(a_packed: jnp.ndarray,
         bm, bk = a_packed.shape[2:]
     else:
         bk, bm = a_packed.shape[2:]
-    if layout_b == "row":
-        bk2, bn = b_packed.shape[2:]
-    else:
-        bn, bk2 = b_packed.shape[2:]
-    assert bk == bk2
+    bn = fmt.bn
+    assert bk == fmt.bk, (a_packed.shape, b_packed.shape)
     out_dtype = out_dtype or (c.dtype if c is not None else a_packed.dtype)
     acc_dtype = acc_dtype_for(a_packed.dtype)
     if c is None:
@@ -127,10 +126,9 @@ def gemm_packed(a_packed: jnp.ndarray,
 
     grid = (mb, nb, kb)  # K innermost: revolving accumulator, one HBM store
     ta = a_packed.shape[2:]
-    tb = b_packed.shape[2:]
     in_specs = [
         pl.BlockSpec((1, 1) + ta, lambda i, j, kk: (i, kk, 0, 0)),
-        pl.BlockSpec((1, 1) + tb, lambda i, j, kk: (j, kk, 0, 0)),
+        b_tile_spec(fmt, lambda i, j, kk: (j, kk, 0, 0)),
         pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
     ]
     operands = [a_packed, b_packed, c_p]
@@ -141,7 +139,7 @@ def gemm_packed(a_packed: jnp.ndarray,
         operands.append(op)
     out = pl.pallas_call(
         functools.partial(_packed_kernel, alpha=alpha, beta=beta, k_steps=kb,
-                          layout_a=layout_a, layout_b=layout_b,
+                          layout_a=layout_a, fmt=fmt,
                           epilogue=epilogue, has_bias=has_bias),
         grid=grid,
         in_specs=in_specs,
@@ -164,6 +162,7 @@ def gemm_packed_fused_a(a: jnp.ndarray,
                         alpha: float = 1.0,
                         beta: float = 0.0,
                         layout_b: str = "row",
+                        b_scales: jnp.ndarray | None = None,
                         out_dtype=None,
                         epilogue: str = "none",
                         bias: jnp.ndarray | None = None,
@@ -174,15 +173,19 @@ def gemm_packed_fused_a(a: jnp.ndarray,
     the BlockSpec index map (a strided HBM→VMEM DMA per grid step) — no
     tile-major copy of A is ever materialized. B must be pre-packed with
     ``pack_b`` (typically once, at weight-load time).
+
+    ``b_scales`` ([Nb, Kb] f32, from a quantized ``pack_b``) marks B as int8
+    dequant-in-epilogue: the scale rides a BlockSpec mirroring B's index map
+    and each K-step's partial product is multiplied by its tile's scale on
+    the f32 accumulator, before the (bias/activation) store epilogue.
     """
     if interpret is None:
         interpret = default_interpret()
+    fmt = TileFormat.from_packed(b_packed, layout_b,
+                                 has_scales=b_scales is not None)
     m, k = a.shape
     nb, kb = b_packed.shape[:2]
-    if layout_b == "row":
-        bk, bn = b_packed.shape[2:]
-    else:
-        bn, bk = b_packed.shape[2:]
+    bk, bn = fmt.bk, fmt.bn
     assert cdiv(k, bk) == kb, (a.shape, b_packed.shape, bk)
     out_dtype = out_dtype or (c.dtype if c is not None else a.dtype)
     acc_dtype = acc_dtype_for(a.dtype)
@@ -196,13 +199,18 @@ def gemm_packed_fused_a(a: jnp.ndarray,
         c_p = pad2d(c, bm, bn)
 
     grid = (mb, nb, kb)
-    tb = b_packed.shape[2:]
+    b_map = lambda i, j, kk: (j, kk, 0, 0)
     in_specs = [
         pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-        pl.BlockSpec((1, 1) + tb, lambda i, j, kk: (j, kk, 0, 0)),
+        b_tile_spec(fmt, b_map),
         pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
     ]
     operands = [a_p, b_packed, c_p]
+    has_scale = b_scales is not None
+    if has_scale:
+        assert b_scales.shape == (nb, kb), (b_scales.shape, b_packed.shape)
+        in_specs.append(scale_tile_spec(fmt, b_map))
+        operands.append(b_scales)
     has_bias = bias is not None
     if has_bias:
         spec, op = bias_spec_and_operand(bias, n, bn)
@@ -210,8 +218,8 @@ def gemm_packed_fused_a(a: jnp.ndarray,
         operands.append(op)
     out = pl.pallas_call(
         functools.partial(_fused_a_kernel, alpha=alpha, beta=beta, k_steps=kb,
-                          layout_b=layout_b, epilogue=epilogue,
-                          has_bias=has_bias),
+                          fmt=fmt, epilogue=epilogue,
+                          has_bias=has_bias, has_scale=has_scale),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),

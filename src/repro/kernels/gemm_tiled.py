@@ -37,7 +37,7 @@ _EPILOGUES = KERNEL_EPILOGUES  # back-compat alias (tests import this name)
 
 def _gemm_kernel(a_ref, b_ref, c_ref, *rest, alpha, beta, k_steps,
                  epilogue="none", has_bias=False):
-    bias_ref, o_ref, acc_ref = split_epilogue_refs(rest, has_bias)
+    _, bias_ref, o_ref, acc_ref = split_epilogue_refs(rest, has_bias)
 
     @pl.when(pl.program_id(2) == 0)
     def _init():

@@ -20,8 +20,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import (acc_dtype_for, cdiv, default_interpret,
-                                  pad2d, pallas_kwargs, vmem_scratch)
+from repro.core.tile_format import TileFormat
+from repro.kernels.common import (acc_dtype_for, b_tile_spec, cdiv,
+                                  default_interpret, pad2d, pallas_kwargs,
+                                  vmem_scratch)
 
 
 def _vsx_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps, bk):
@@ -121,18 +123,15 @@ def matmul_vsx_like_packed(a: jnp.ndarray,
     """
     if interpret is None:
         interpret = default_interpret()
+    fmt = TileFormat.from_packed(b_packed, layout_b)
     m, k = a.shape
     nb, kb = b_packed.shape[:2]
-    if layout_b == "row":
-        bk, bn = b_packed.shape[2:]
-    else:
-        bn, bk = b_packed.shape[2:]
+    bk, bn = fmt.bk, fmt.bn
     assert cdiv(k, bk) == kb, (a.shape, b_packed.shape, bk)
     out_dtype = out_dtype or a.dtype
     acc_dtype = acc_dtype_for(a.dtype)
     a_p = pad2d(a, bm, bk)
     mb = cdiv(m, bm)
-    tb = b_packed.shape[2:]
 
     out = pl.pallas_call(
         functools.partial(_vsx_packed_kernel, k_steps=kb, bk=bk,
@@ -140,7 +139,7 @@ def matmul_vsx_like_packed(a: jnp.ndarray,
         grid=(mb, nb, kb),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((1, 1) + tb, lambda i, j, kk: (j, kk, 0, 0)),
+            b_tile_spec(fmt, lambda i, j, kk: (j, kk, 0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mb * bm, nb * bn), out_dtype),

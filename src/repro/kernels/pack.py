@@ -6,10 +6,18 @@ them (paper Fig. 2b). ``pack_b`` produces [Nb, Kb, bk, bn] in column-of-tiles
 order. Remainder tiles are zero-filled (paper: "the remainder elements are
 filled with zeroes in the packing buffers").
 
-``layout`` chooses the element order *within* each tile ("row" | "col"),
-mirroring the paper's flexible per-target tile layout (MMA wants col-major A,
-row-major B). On TPU the packed buffer makes every grid step's HBM→VMEM DMA a
-single contiguous block instead of a strided gather.
+The B-side geometry is :class:`repro.core.tile_format.TileFormat`-driven
+(legacy ``(bk, bn, layout)`` ints normalize to a format): ``layout`` chooses
+the element order *within* each tile ("row" | "col"), mirroring the paper's
+flexible per-target tile layout (MMA wants col-major A, row-major B). On TPU
+the packed buffer makes every grid step's HBM→VMEM DMA a single contiguous
+block instead of a strided gather.
+
+A QUANTIZED format (int8 elements + a ScaleSpec) makes ``pack_b`` /
+``pack_b_grouped`` return ``(packed, scales)``: the per-(Kb,Nb)-tile absmax
+scales are computed in jnp (packing is a load-time pass; the absmax reduction
+is trivial next to the copy) and the int8 values then take the same Pallas
+tile-major copy as float packing — one packer, every element dtype.
 """
 from __future__ import annotations
 
@@ -19,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.tile_format import (TileFormat, as_tile_format,
+                                    quantize_tiles)
 from repro.kernels.common import cdiv, default_interpret, pad2d, pallas_kwargs
 
 
@@ -61,39 +71,74 @@ def _pack(x: jnp.ndarray, b0: int, b1: int, *, grid_order: str, layout: str,
     )(x_p)
 
 
+def _quantize_natural(b: jnp.ndarray, fmt: TileFormat):
+    """Float B[K,N] -> (int8 natural-layout values, [Nb, Kb] scales).
+
+    The per-tile scales come from the shared ``quantize_b_tiles_ref``
+    contract (absmax/127, zero tiles -> 1.0); the quantized values are
+    scattered back to the natural layout so the Pallas tile-major copy
+    below stays the single packing code path.
+    """
+    assert jnp.issubdtype(b.dtype, jnp.floating), (
+        f"quantized packing consumes float weights; got {b.dtype}")
+    b_p = pad2d(b, fmt.bk, fmt.bn)
+    kb, nb = b_p.shape[0] // fmt.bk, b_p.shape[1] // fmt.bn
+    tiles = b_p.reshape(kb, fmt.bk, nb, fmt.bn).transpose(2, 0, 1, 3)
+    q, scales = quantize_tiles(tiles, fmt)            # [Nb,Kb,bk,bn], [Nb,Kb]
+    q_nat = q.transpose(1, 2, 0, 3).reshape(b_p.shape)
+    return q_nat, scales
+
+
 def pack_a(a: jnp.ndarray, bm: int, bk: int, layout: str = "row",
            interpret: bool | None = None) -> jnp.ndarray:
     """A[M,K] -> [Mb, Kb, bm, bk] ("row") or [Mb, Kb, bk, bm] ("col")."""
     return _pack(a, bm, bk, grid_order="row", layout=layout, interpret=interpret)
 
 
-def pack_b(b: jnp.ndarray, bk: int, bn: int, layout: str = "row",
-           interpret: bool | None = None) -> jnp.ndarray:
-    """B[K,N] -> [Nb, Kb, bk, bn] ("row") or [Nb, Kb, bn, bk] ("col")."""
-    return _pack(b, bk, bn, grid_order="col", layout=layout, interpret=interpret)
+def pack_b(b: jnp.ndarray, bk, bn: int | None = None, layout: str = "row",
+           interpret: bool | None = None):
+    """B[K,N] -> [Nb, Kb, bk, bn] ("row") or [Nb, Kb, bn, bk] ("col").
+
+    ``bk`` may be a :class:`TileFormat` (then ``bn``/``layout`` are unused);
+    a quantized format returns ``(packed, scales)``.
+    """
+    fmt = as_tile_format(bk, bn, layout=layout, dtype=b.dtype)
+    scales = None
+    if fmt.is_quantized:
+        b, scales = _quantize_natural(b, fmt)
+    packed = _pack(b, fmt.bk, fmt.bn, grid_order="col", layout=fmt.layout,
+                   interpret=interpret)
+    return (packed, scales) if fmt.is_quantized else packed
 
 
-def pack_b_grouped(b: jnp.ndarray, bk: int, bn: int, layout: str = "row",
-                   interpret: bool | None = None) -> jnp.ndarray:
+def pack_b_grouped(b: jnp.ndarray, bk, bn: int | None = None,
+                   layout: str = "row", interpret: bool | None = None):
     """B[E,K,N] -> [E, Nb, Kb, bk, bn] ("row") / [E, Nb, Kb, bn, bk] ("col").
 
     The grouped packer for stacked expert weights: each expert's matrix gets
     the same column-of-tiles treatment as :func:`pack_b`, with the expert
     index as the outermost grid dimension — the packed stack is what
     ``gemm_grouped_packed`` consumes (typically packed once at weight-load).
+    ``bk`` may be a :class:`TileFormat`; quantized formats return
+    ``(packed, scales)`` with per-expert scale grids [E, Nb, Kb].
     """
+    fmt = as_tile_format(bk, bn, layout=layout, dtype=b.dtype)
     if interpret is None:
         interpret = default_interpret()
-    transpose = layout == "col"
+    scales = None
+    if fmt.is_quantized:
+        b, scales = jax.vmap(lambda be: _quantize_natural(be, fmt))(b)
+    transpose = fmt.layout == "col"
     e = b.shape[0]
-    b_p = jax.vmap(lambda be: pad2d(be, bk, bn))(b)
-    kb, nb = cdiv(b.shape[1], bk), cdiv(b.shape[2], bn)
-    t0, t1 = (bn, bk) if transpose else (bk, bn)
+    b_p = jax.vmap(lambda be: pad2d(be, fmt.bk, fmt.bn))(b)
+    kb, nb = cdiv(b.shape[1], fmt.bk), cdiv(b.shape[2], fmt.bn)
+    t0, t1 = fmt.tile_shape
 
-    return pl.pallas_call(
+    packed = pl.pallas_call(
         functools.partial(_pack_kernel_grouped, transpose=transpose),
         grid=(e, nb, kb),
-        in_specs=[pl.BlockSpec((1, bk, bn), lambda ee, j, i: (ee, i, j))],
+        in_specs=[pl.BlockSpec((1, fmt.bk, fmt.bn),
+                               lambda ee, j, i: (ee, i, j))],
         out_specs=pl.BlockSpec((1, 1, 1, t0, t1),
                                lambda ee, j, i: (ee, j, i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((e, nb, kb, t0, t1), b.dtype),
@@ -101,6 +146,7 @@ def pack_b_grouped(b: jnp.ndarray, bk: int, bn: int, layout: str = "row",
                         dimension_semantics=("parallel", "parallel",
                                              "parallel")),
     )(b_p)
+    return (packed, scales) if fmt.is_quantized else packed
 
 
 def _pack_kernel_grouped(x_ref, o_ref, *, transpose: bool):

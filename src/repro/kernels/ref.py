@@ -2,12 +2,22 @@
 
 Each kernel's correctness test sweeps shapes/dtypes and asserts allclose against
 these references (interpret=True on CPU, per the validation protocol).
+
+The B-side packers are :class:`repro.core.tile_format.TileFormat`-driven (the
+legacy ``(bk, bn, layout)`` int arguments normalize to a format): a quantized
+format makes ``pack_b_ref`` / ``pack_b_grouped_ref`` return ``(packed,
+scales)`` — int8 tile elements plus one f32 scale per (Kb, Nb) tile — and the
+``*_dequant_ref`` oracles invert them, defining the dequantization contract
+the kernels are tested against.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.tile_format import (TileFormat, as_tile_format,
+                                    quantize_tiles)
 
 
 # ---------------------------------------------------------------------------
@@ -55,21 +65,35 @@ def pack_a_ref(a: jnp.ndarray, bm: int, bk: int, layout: str = "row"):
     return t
 
 
-def pack_b_ref(b: jnp.ndarray, bk: int, bn: int, layout: str = "row"):
+def pack_b_ref(b: jnp.ndarray, bk, bn: int | None = None,
+               layout: str = "row"):
     """Pack B[K,N] into [Nb, Kb, bk, bn] (row) / [Nb, Kb, bn, bk] (col).
 
     Grid-major order is [Nb, Kb]: all tiles of one *column of tiles* are
     contiguous over k — the paper's column-of-tiles packing order for B
     (Fig. 2b), which makes the micro kernel's B stream unit-stride.
+
+    ``bk`` may be a :class:`TileFormat` (the ``bn``/``layout`` arguments are
+    then unused). A QUANTIZED format returns ``(packed, scales)``: per-tile
+    absmax/127 f32 scales [Nb, Kb] and the rounded-and-clipped int8 tiles.
     """
-    b = _pad_to(b, bk, bn)
-    kb, nb = b.shape[0] // bk, b.shape[1] // bn
-    t = b.reshape(kb, bk, nb, bn).transpose(2, 0, 1, 3)  # [Nb, Kb, bk, bn]
-    if layout == "col":
+    fmt = as_tile_format(bk, bn, layout=layout, dtype=b.dtype)
+    b = _pad_to(b, fmt.bk, fmt.bn)
+    kb, nb = b.shape[0] // fmt.bk, b.shape[1] // fmt.bn
+    t = b.reshape(kb, fmt.bk, nb, fmt.bn).transpose(2, 0, 1, 3)
+    scales = None
+    if fmt.is_quantized:
+        assert jnp.issubdtype(b.dtype, jnp.floating), (
+            f"quantized packing consumes float weights; got {b.dtype}")
+        t, scales = quantize_b_tiles_ref(t, fmt)
+    if fmt.layout == "col":
         t = t.transpose(0, 1, 3, 2)
-    elif layout != "row":
-        raise ValueError(f"bad layout {layout!r}")
-    return t
+    return (t, scales) if fmt.is_quantized else t
+
+
+# Re-exported beside the other pack oracles; the implementation (the scale
+# contract) lives with the format descriptor.
+quantize_b_tiles_ref = quantize_tiles
 
 
 def unpack_a_ref(ap: jnp.ndarray, m: int, k: int, layout: str = "row"):
@@ -86,6 +110,25 @@ def unpack_b_ref(bp: jnp.ndarray, k: int, n: int, layout: str = "row"):
     return bp.transpose(1, 2, 0, 3).reshape(kb * bk, nb * bn)[:k, :n]
 
 
+def dequant_b_tiles_ref(bp: jnp.ndarray, scales) -> jnp.ndarray:
+    """[..., Nb, Kb, t0, t1] int tiles + [..., Nb, Kb] scales -> float tiles.
+
+    The dequantization oracle: per-tile scalar multiply (layout-agnostic —
+    the scale grid indexes tiles, not elements). No-op when ``scales`` is
+    None, so every unpack/acc oracle can take the scales unconditionally.
+    """
+    if scales is None:
+        return bp
+    return bp.astype(scales.dtype) * scales[..., None, None]
+
+
+def unpack_b_dequant_ref(bp: jnp.ndarray, scales, k: int, n: int,
+                         layout: str = "row"):
+    """Quantized tile-major stack -> natural dequantized [K, N] (the
+    round-trip oracle for ``pack_b_ref`` with a quantized format)."""
+    return unpack_b_ref(dequant_b_tiles_ref(bp, scales), k, n, layout)
+
+
 def packed_matmul_ref(ap, bp, m: int, n: int, layout_a="row", layout_b="row",
                       out_dtype=None):
     kdim = ap.shape[1] * ap.shape[3 if layout_a == "row" else 2]
@@ -94,17 +137,21 @@ def packed_matmul_ref(ap, bp, m: int, n: int, layout_a="row", layout_b="row",
     return matmul_ref(a, b, out_dtype=out_dtype)
 
 
-def fused_packed_acc_ref(a, bp, n: int, layout_b="row", bm: int = 8):
+def fused_packed_acc_ref(a, bp, n: int, layout_b="row", bm: int = 8,
+                         b_scales=None):
     """Pack-free-A contraction: natural-layout A against packed B.
 
     Returns the f32 accumulator [m, n] — the jnp lowering of
     ``gemm_packed_fused_a`` before its epilogue. A is consumed as a strided
-    blocked view (reshape only — no tile-major copy is materialized).
+    blocked view (reshape only — no tile-major copy is materialized). With
+    ``b_scales`` ([Nb, Kb], quantized B) the tiles are dequantized first —
+    the same function the kernel fuses per K-step.
     """
     m, k = a.shape
+    bp = dequant_b_tiles_ref(bp, b_scales)
+    fmt = TileFormat.from_packed(bp, layout_b)
     nb, kb = bp.shape[:2]
-    bk = bp.shape[2] if layout_b == "row" else bp.shape[3]
-    bn = bp.shape[3] if layout_b == "row" else bp.shape[2]
+    bk, bn = fmt.bk, fmt.bn
     assert -(-k // bk) == kb, (a.shape, bp.shape)
     ap = _pad_to(a, bm, bk)
     mb = ap.shape[0] // bm
@@ -141,27 +188,40 @@ def grouped_silu_gate_ref(a, bg, bu, out_dtype=None):
     return (jax.nn.silu(gate) * up).astype(out_dtype or a.dtype)
 
 
-def pack_b_grouped_ref(b: jnp.ndarray, bk: int, bn: int, layout: str = "row"):
-    """B[E,K,N] -> [E, Nb, Kb, bk, bn] — vmapped :func:`pack_b_ref`."""
-    return jax.vmap(lambda be: pack_b_ref(be, bk, bn, layout))(b)
+def pack_b_grouped_ref(b: jnp.ndarray, bk, bn: int | None = None,
+                       layout: str = "row"):
+    """B[E,K,N] -> [E, Nb, Kb, bk, bn] — vmapped :func:`pack_b_ref`.
+
+    ``bk`` may be a :class:`TileFormat`; a quantized format returns
+    ``(packed, scales)`` with per-expert scale grids [E, Nb, Kb]."""
+    fmt = as_tile_format(bk, bn, layout=layout, dtype=b.dtype)
+    return jax.vmap(lambda be: pack_b_ref(be, fmt))(b)
 
 
 def unpack_b_grouped_ref(bp: jnp.ndarray, k: int, n: int,
-                         layout: str = "row"):
-    """[E, Nb, Kb, bk, bn] -> natural [E, K, N] (single implementation in
-    ``gemm_grouped.unpack_b_grouped``; re-exported here beside the other
-    pack/unpack oracles)."""
+                         layout: str = "row", scales=None):
+    """[E, Nb, Kb, bk, bn] (+optional [E, Nb, Kb] scales) -> natural [E, K, N]
+    (single implementation in ``gemm_grouped.unpack_b_grouped``; re-exported
+    here beside the other pack/unpack oracles)."""
     from repro.kernels.gemm_grouped import unpack_b_grouped
-    return unpack_b_grouped(bp, k, n, layout)
+    return unpack_b_grouped(bp, k, n, layout, scales=scales)
 
 
-def grouped_fused_acc_ref(a, bp, n: int, layout_b="row", bm: int = 8):
+def grouped_fused_acc_ref(a, bp, n: int, layout_b="row", bm: int = 8,
+                          b_scales=None):
     """Grouped pack-free-A contraction: natural [E,M,K] A against the packed
     expert stack [E,Nb,Kb,bk,bn]. Returns the f32 accumulator [E, m, n] —
-    the jnp lowering of ``gemm_grouped_packed`` before its epilogue."""
+    the jnp lowering of ``gemm_grouped_packed`` before its epilogue.
+    ``b_scales`` ([E, Nb, Kb]) dequantizes int8 stacks per tile."""
+    if b_scales is None:
+        return jax.vmap(
+            lambda ae, bpe: fused_packed_acc_ref(ae, bpe, n,
+                                                 layout_b=layout_b,
+                                                 bm=bm))(a, bp)
     return jax.vmap(
-        lambda ae, bpe: fused_packed_acc_ref(ae, bpe, n, layout_b=layout_b,
-                                             bm=bm))(a, bp)
+        lambda ae, bpe, se: fused_packed_acc_ref(ae, bpe, n,
+                                                 layout_b=layout_b, bm=bm,
+                                                 b_scales=se))(a, bp, b_scales)
 
 
 def ragged_row_mask(c: int, counts):

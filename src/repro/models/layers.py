@@ -19,7 +19,6 @@ from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ModelConfig
 from repro.core import GroupedPackedWeight, PackedWeight, gemm
-from repro.kernels import ref as kref
 from repro.parallel.mesh import shard
 
 Init = jax.nn.initializers.normal(stddev=0.02)
@@ -50,45 +49,49 @@ GROUPED_WEIGHT_KEYS = frozenset({"wg", "wu", "wo"})
 _GATE_PAIR_KEYS = frozenset({"wg", "wu"})
 
 
-def _pack_dense(w: jnp.ndarray, compute) -> PackedWeight:
+def _pack_dense(w: jnp.ndarray, compute, quantize=None) -> PackedWeight:
     """Pack one dense weight (2-D, or [L,K,N] scan-stacked) tile-major.
 
-    Uses the jnp packer on every backend: this runs once at load time, and the
-    buffer layout is identical to the Pallas packer's. Stacked weights pack
-    per layer under vmap so ``jax.lax.scan`` can slice the leading axis.
+    Uses the jnp packer on every backend: this runs once at load time, and
+    the buffer layout is identical to the Pallas packer's. Stacking and
+    ``quantize="int8"`` (int8 tiles + a per-tile scale grid that scan-slices
+    alongside the packed buffer) are handled inside ``PackedWeight.pack``.
     """
-    w = w.astype(compute)
-    if w.ndim == 2:
-        return PackedWeight.pack(w, backend="jnp")
-    assert w.ndim == 3, w.shape  # [L, K, N] (vmap-stacked layers)
-    k, n = w.shape[1:]
-    plan = gemm.plan_gemm(1024, k, n, jnp.dtype(w.dtype).name)
-    packed = jax.vmap(
-        lambda wl: kref.pack_b_ref(wl, plan.bk, plan.bn, plan.layout_b))(w)
-    return PackedWeight(packed=packed, k=k, n=n, plan=plan)
+    return PackedWeight.pack(w.astype(compute), backend="jnp",
+                             quantize=quantize)
 
 
-def _pack_grouped(w: jnp.ndarray, compute, key: str) -> GroupedPackedWeight:
+def _pack_grouped(w: jnp.ndarray, compute, key: str,
+                  quantize=None) -> GroupedPackedWeight:
     """Pack one expert stack ([E,K,N], or [L,E,K,N] scan-stacked) grouped
     tile-major in the compute dtype (jnp packer; load-time, runs once)."""
     w = w.astype(compute)
     return GroupedPackedWeight.pack(
-        w, backend="jnp", n_b_streams=2 if key in _GATE_PAIR_KEYS else 1)
+        w, backend="jnp", n_b_streams=2 if key in _GATE_PAIR_KEYS else 1,
+        quantize=quantize)
 
 
-def pack_model_params(cfg: ModelConfig, params: dict, *, dtype=None) -> dict:
+def pack_model_params(cfg: ModelConfig, params: dict, *, dtype=None,
+                      quantize=None) -> dict:
     """Load-time packing pass: replace every dense weight with a PackedWeight
     and every MoE expert stack with a GroupedPackedWeight.
 
     Returns a new params tree in which each ``DENSE_WEIGHT_KEYS`` leaf (float
-    dtypes only — int8 streams keep their narrow-HBM path) is tile-major
-    packed in the compute dtype, each ``GROUPED_WEIGHT_KEYS`` leaf inside a
-    "moe" subtree is grouped-packed per expert, and ``head_packed`` holds the
-    packed LM head ([d_model, vocab], from the tied embedding or the separate
-    head table). Serving engines call this once at weight-load; every
-    subsequent prefill/decode step then runs the pack-free-A fused kernels
-    (dense and grouped), with the MoE gate/up pair fused into one silu-gate
-    kernel pass.
+    dtypes only — pre-quantized int8 streams keep their narrow-HBM path) is
+    tile-major packed in the compute dtype, each ``GROUPED_WEIGHT_KEYS`` leaf
+    inside a "moe" subtree is grouped-packed per expert, and ``head_packed``
+    holds the packed LM head ([d_model, vocab], from the tied embedding or
+    the separate head table). Serving engines call this once at weight-load;
+    every subsequent prefill/decode step then runs the pack-free-A fused
+    kernels (dense and grouped), with the MoE gate/up pair fused into one
+    silu-gate kernel pass.
+
+    ``quantize="int8"`` quantizes every packed weight — dense projections,
+    the LM head, and all three MoE expert stacks — to int8 tiles with
+    per-(Kb,Nb)-tile f32 scales (narrow-HBM serving: B traffic halves vs
+    bf16). The kernels dequantize per tile on the f32 accumulator ahead of
+    the fused epilogues, so the serving numerics match a dequantized-weight
+    run to quantization error.
     """
     compute = jnp.dtype(dtype or cfg.compute_dtype)
 
@@ -102,10 +105,10 @@ def pack_model_params(cfg: ModelConfig, params: dict, *, dtype=None) -> dict:
             if (in_moe and key in GROUPED_WEIGHT_KEYS and is_float
                     and val.ndim in (3, 4)):
                 # [E,K,N] expert stack (+leading L when scan-stacked).
-                out[key] = _pack_grouped(val, compute, key)
+                out[key] = _pack_grouped(val, compute, key, quantize)
             elif (not in_moe and key in DENSE_WEIGHT_KEYS and is_float
                     and val.ndim in (2, 3)):
-                out[key] = _pack_dense(val, compute)
+                out[key] = _pack_dense(val, compute, quantize)
             else:
                 out[key] = walk(val, in_moe or key == "moe")
         return out
@@ -113,7 +116,7 @@ def pack_model_params(cfg: ModelConfig, params: dict, *, dtype=None) -> dict:
     out = walk(params)
     table = (params["embed"]["table"] if cfg.tie_embeddings
              else params["head"]["table"])
-    out["head_packed"] = _pack_dense(jnp.asarray(table).T, compute)
+    out["head_packed"] = _pack_dense(jnp.asarray(table).T, compute, quantize)
     if not cfg.tie_embeddings:
         # lm_logits always prefers head_packed; keeping the raw untied table
         # would hold the model's largest matrix in memory twice.
@@ -253,7 +256,16 @@ def embed_params(cfg: ModelConfig, key) -> dict:
 
 def embed_tokens(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
                  compute_dtype) -> jnp.ndarray:
-    x = params["embed"]["table"].astype(compute_dtype)[tokens]
+    # Annotate the casted lookup table vocab-sharded with d REPLICATED before
+    # the gather: the f32 master is (model, fsdp)-sharded, and gathering from
+    # a d-over-data table forces GSPMD into an involuntary full
+    # rematerialization of the [B, S, d] gather output when it reshards to
+    # the batch-sharded residual layout (measured on the 512-device dry run).
+    # With d replicated, the vocab-sharded gather's masked partial rows
+    # all-reduce over "model" straight into the batch-sharded layout.
+    table = shard(params["embed"]["table"].astype(compute_dtype),
+                  "model", None)
+    x = table[tokens]
     if cfg.family == "vlm":  # gemma-style scaled embeddings
         x = x * jnp.asarray(math.sqrt(cfg.d_model), compute_dtype)
     return shard(x, "batch")
@@ -264,7 +276,14 @@ def lm_logits(cfg: ModelConfig, params: dict, x: jnp.ndarray) -> jnp.ndarray:
     if head is None:
         table = (params["embed"]["table"] if cfg.tie_embeddings
                  else params["head"]["table"])
-        head = table.T.astype(x.dtype)
+        # Megatron vocab-parallel head layout: [d, V] with d REPLICATED and
+        # vocab over "model". Without the annotation the head inherits the
+        # master table's d-over-data sharding and GSPMD contracts x@head by
+        # fully rematerializing the batch-sharded [B, S, d] stream (the
+        # bf16 [2,4096,2048] full-remat on the 512-device dry run); with it
+        # the contraction keeps x batch-sharded and emits logits already in
+        # the ("batch", None, "model") layout pinned below.
+        head = shard(table.T.astype(x.dtype), None, "model")
     # logits keep a full-precision cross-shard reduce (softmax sensitivity)
     logits = gemm.linear(x, head, accum="f32")
     return shard(logits.astype(jnp.float32), "batch", None, "model")

@@ -23,7 +23,17 @@ Production posture:
     expert's capacity segment, all-padding (expert, m-block) grid steps
     early-out the K-loop, and the partial block is clamped with an iota
     mask. A skewed decode/prefill router therefore pays for the tokens it
-    actually routed, not for ``capacity_factor`` times that.
+    actually routed, not for ``capacity_factor`` times that;
+  * ``ServeConfig.quantize="int8"`` (requires ``pack_weights=True``)
+    quantizes every packed weight at load — dense projections, the LM head,
+    and all three MoE expert stacks — to int8 tiles with per-(Kb,Nb)-tile
+    f32 scales (narrow-HBM serving: weight traffic halves vs bf16). Scale
+    contract: the [Nb, Kb] (grouped: [E, Nb, Kb]) scale grid rides next to
+    each packed buffer in the params tree, streams through a BlockSpec
+    mirroring B's index map (including the ragged path's count-aware index
+    pinning), and dequantizes each K-step's partial product on the VMEM f32
+    accumulator BEFORE bias/activation/silu-gate — so every fused epilogue
+    and the ragged counts path run quantized unchanged.
 """
 from __future__ import annotations
 
@@ -47,13 +57,20 @@ class ServeConfig:
     seed: int = 0
     pack_weights: bool = False    # load-time tile-major packing of all
                                   # dense weights (serving fast path)
+    quantize: str | None = None   # "int8": quantize packed weights at load
+                                  # (dequant-in-epilogue narrow-HBM serving;
+                                  # needs pack_weights=True)
 
 
 class Engine:
     def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
         self.model = model
+        if cfg.quantize and not cfg.pack_weights:
+            raise ValueError("ServeConfig.quantize requires pack_weights=True "
+                             "(quantization lives in the packed-tile format)")
         if cfg.pack_weights:
-            params = pack_model_params(model.cfg, params)
+            params = pack_model_params(model.cfg, params,
+                                       quantize=cfg.quantize)
         self.params = params
         self.cfg = cfg
         self._prefill = jax.jit(
