@@ -1,10 +1,13 @@
-"""Reproduce the paper's experiment shape: strategy sweep over GEMM sizes.
+"""Reproduce the paper's experiment shape: lowering sweep over GEMM sizes.
 
   PYTHONPATH=src python examples/gemm_strategies.py [--sizes 64,256,1024]
 
-Prints a Figs. 4-9-style table: time per strategy, speedup over the PLuTo
-proxy, and which strategy wins at each size (expect the paper's crossover:
-Tiling small, Tiling+Packing large, library competitive throughout).
+Prints a Figs. 4-9-style table: time per lowering, speedup over the PLuTo
+proxy, and which lowering wins at each size (expect the paper's crossover:
+Tiling small, Tiling+Packing large, library competitive throughout). Each
+size is ONE declared ContractionSpec; every timed variant is the same spec
+executed under an explicit lowering name, and the ``auto`` column shows
+what the capability registry would dispatch to on this backend.
 """
 import argparse
 import os
@@ -16,7 +19,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks.common import time_fn  # noqa: E402
-from repro.core import run_strategy  # noqa: E402
+from repro.core import ContractionSpec, contract, dispatch  # noqa: E402
 
 STRATEGIES = ("pluto", "intrinsic", "tiling", "tiling_packing",
               "tiling_packing_fused", "xla")
@@ -35,13 +38,14 @@ def main() -> None:
     for n in sizes:
         a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
         b = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+        spec = ContractionSpec.dense(n, n, n, "float32", accum="f32")
         times = {}
         for s in STRATEGIES:
             if s == "pluto" and n > 512:
                 times[s] = float("nan")
                 continue
-            fn = jax.jit(lambda x, y, s=s: run_strategy(s, x, y,
-                                                        backend="jnp"))
+            fn = jax.jit(lambda x, y, s=s: contract(spec, x, y, strategy=s,
+                                                    backend="jnp"))
             times[s] = time_fn(fn, a, b)
         base = times.get("pluto", float("nan"))
         cells = []
@@ -53,7 +57,8 @@ def main() -> None:
                 spd = f" ({base/t:4.1f}x)" if not np.isnan(base) else ""
                 cells.append(f"{t/1e3:8.2f}ms{spd:>7s}")
         best = min((t, s) for s, t in times.items() if not np.isnan(t))[1]
-        print(f"{n:6d} | " + " | ".join(cells) + f"   best={best}")
+        print(f"{n:6d} | " + " | ".join(cells)
+              + f"   best={best}  auto={dispatch(spec).name}")
 
 
 if __name__ == "__main__":

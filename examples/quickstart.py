@@ -1,15 +1,18 @@
-"""Quickstart: the paper's layered GEMM as a library call.
+"""Quickstart: the paper's layered GEMM as a declarative library call.
 
   PYTHONPATH=src python examples/quickstart.py
 
-Walks the public API: planner -> strategies -> LayeredGemm -> PackedWeight,
-and shows the paper's small-vs-large strategy crossover live.
+Walks the public API: planner -> ContractionSpec/EpilogueSpec + dispatch ->
+LayeredGemm -> PackedWeight, and shows the paper's small-vs-large strategy
+crossover live. A contraction is DECLARED (one frozen spec) and the
+capability registry chooses the lowering — explicit > env > auto.
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (LayeredGemm, PackedWeight, plan_gemm, run_strategy,
-                        should_pack)
+from repro.core import (ContractionSpec, EPILOGUE_SPECS, LayeredGemm,
+                        PackedWeight, contract, dispatch, lowerings_for,
+                        plan_gemm, should_pack)
 from repro.kernels import ref
 
 
@@ -24,27 +27,48 @@ def main() -> None:
               f"  accum grid {plan.vaccs}x{plan.haccs}"
               f"  pack={'yes' if should_pack(m, k, n, 'float32') else 'no'}")
 
-    print("\n== 2. Every code-gen strategy computes the same GEMM ==")
+    print("\n== 2. Declare once, dispatch anywhere ==")
     a = jnp.asarray(rng.normal(size=(96, 160)), jnp.float32)
     b = jnp.asarray(rng.normal(size=(160, 224)), jnp.float32)
     want = ref.matmul_ref(a, b)
+    spec = ContractionSpec.dense(96, 160, 224, "float32", accum="f32")
+    names = [low.name for low in lowerings_for(spec)]
+    print(f"  spec: {spec.describe()}")
+    print(f"  capable lowerings: {', '.join(sorted(names))}")
+    print(f"  auto dispatch picks: {dispatch(spec).name}")
     for s in ("naive", "pluto", "intrinsic", "tiling", "tiling_packing",
               "tiling_packing_fused", "xla"):
-        got = run_strategy(s, a, b, backend="jnp")
+        got = contract(spec, a, b, strategy=s, backend="jnp")
         err = float(jnp.abs(got - want).max())
         print(f"  {s:16s} max|err| = {err:.2e}")
 
-    print("\n== 3. LayeredGemm module (plan once, run many) ==")
+    print("\n== 3. EpilogueSpec: the declared store chain ==")
+    bias = jnp.asarray(rng.normal(size=(224,)), jnp.float32)
+    # bias_gelu is one named table entry — it reaches every lowering on
+    # every backend because bias and gelu are existing kernel capabilities.
+    fused = ContractionSpec.dense(96, 160, 224, "float32",
+                                  epilogue=EPILOGUE_SPECS["bias_gelu"],
+                                  accum="f32")
+    y = contract(fused, a, b, bias=bias, strategy="tiling_packing_fused",
+                 backend="jnp")
+    print(f"  {fused.describe()}")
+    print(f"  chain steps = {fused.epilogue.steps}, out = {y.shape}")
+
+    print("\n== 4. LayeredGemm module (plan once, run many) ==")
     lg = LayeredGemm(96, 160, 224, epilogue="relu")
     out = lg(a, b)
     print(f"  strategy={lg.strategy}  out={out.shape}  "
           f"(relu epilogue fused: min={float(out.min()):.1f})")
 
-    print("\n== 4. PackedWeight: load-time packing for serving ==")
+    print("\n== 5. PackedWeight: load-time packing for serving ==")
     w = jnp.asarray(rng.normal(size=(160, 96)), jnp.float32)
     pw = PackedWeight.pack(w)
     x = jnp.asarray(rng.normal(size=(8, 160)), jnp.float32)
-    y = pw.matmul(x)
+    pspec = ContractionSpec.dense(8, 160, 96, "float32", w=pw)
+    print(f"  packed spec: {pspec.describe()}")
+    print(f"  dispatch picks: {dispatch(pspec).name} "
+          f"(the only lowering whose supports() covers packed weights)")
+    y = contract(pspec, x, pw)
     print(f"  packed buffer {pw.packed.shape} (tile-major), y={y.shape}, "
           f"err={float(jnp.abs(y - ref.matmul_ref(x, w)).max()):.2e}")
 

@@ -1,16 +1,48 @@
 """The paper's primary contribution: compiler-only layered GEMM as a framework
 service — planner (macro), kernels behind a clean intrinsic-like interface
-(micro), strategy registry, and the single matmul dispatch point every model
-in this framework uses.
+(micro), a capability-registered lowering registry, and ONE declarative
+dispatch point (:func:`contract` over :class:`ContractionSpec` /
+:class:`EpilogueSpec`) that every model in this framework uses.
+
+The public surface below is pinned by tests/test_api_surface.py — changing a
+facade signature or dropping a name fails tier-1 loudly.
 """
-from repro.core.gemm import (grouped_linear, grouped_silu_gate, linear,  # noqa: F401
+from repro.core.contraction import (ContractionSpec, Lowering,  # noqa: F401
+                                    LOWERINGS, as_compute_weight, dispatch,
+                                    dispatch_table, is_packed, lowerings_for,
+                                    register_lowering, weight_kind)
+from repro.core.epilogue import (EPILOGUE_SPECS, EpilogueSpec,  # noqa: F401
+                                 as_epilogue_spec)
+from repro.core.gemm import (contract, default_backend,  # noqa: F401
+                             grouped_linear, grouped_silu_gate, linear,
                              matmul, plan_gemm, resolve_strategy)
 from repro.core.layered import (GroupedPackedWeight, LayeredGemm,  # noqa: F401
                                 PackedWeight)
-from repro.core.planner import (GemmPlan, choose_strategy,  # noqa: F401
-                                plan_grouped_gemm, should_pack)
+from repro.core.planner import (GemmPlan, choose_grouped_strategy,  # noqa: F401
+                                choose_strategy, plan_grouped_gemm,
+                                should_pack)
 from repro.core.tile_format import (ScaleSpec, TileFormat,  # noqa: F401
                                     as_tile_format)
 from repro.core.strategy import (GROUPED_STRATEGIES, STRATEGIES,  # noqa: F401
                                  run as run_strategy,
                                  run_grouped as run_grouped_strategy)
+
+__all__ = [
+    # declarative surface
+    "ContractionSpec", "EpilogueSpec", "EPILOGUE_SPECS", "as_epilogue_spec",
+    "contract", "dispatch", "dispatch_table",
+    # capability registry
+    "Lowering", "LOWERINGS", "register_lowering", "lowerings_for",
+    "weight_kind", "is_packed", "as_compute_weight",
+    # facades + packed weights
+    "matmul", "linear", "grouped_linear", "grouped_silu_gate",
+    "PackedWeight", "GroupedPackedWeight", "LayeredGemm",
+    # planner
+    "GemmPlan", "plan_gemm", "plan_grouped_gemm", "choose_strategy",
+    "choose_grouped_strategy", "should_pack",
+    # formats
+    "TileFormat", "ScaleSpec", "as_tile_format",
+    # legacy registry views
+    "STRATEGIES", "GROUPED_STRATEGIES", "run_strategy",
+    "run_grouped_strategy", "default_backend", "resolve_strategy",
+]

@@ -1,22 +1,40 @@
 """Fused GEMM epilogues (beyond-paper: the paper stops at alpha/beta).
 
-Frameworks fuse bias/activation into the GEMM's final store. This registry is
-the single source of truth for epilogue names; the Pallas kernels mirror it as
-``repro.kernels.common.KERNEL_EPILOGUES`` (applied to the VMEM-resident f32
-accumulator in the final grid step, before the single HBM store — see
-gemm_tiled / gemm_packed / gemm_packed_fused_a), and the jnp lowerings apply
-it as trailing ops that XLA fuses. Strategy lowerings take ``epilogue=`` and
-``bias=`` directly (``repro.core.strategy.run``), so no caller on the kernel
-path needs a post-kernel bias/activation op.
+Frameworks fuse bias/activation into the GEMM's final store. This module is
+the single source of truth for what an epilogue IS:
+
+  * ``ACTIVATIONS`` — the activation table (name -> callable). The Pallas
+    kernels mirror it as ``repro.kernels.common.KERNEL_EPILOGUES`` (applied to
+    the VMEM-resident f32 accumulator in the final grid step, before the
+    single HBM store), and the jnp lowerings apply it as trailing ops that
+    XLA fuses — tested to stay in sync.
+  * :class:`EpilogueSpec` — the declarative form: an ordered, composable
+    chain ``dequant -> bias -> activation -> gate-mul`` applied to the f32
+    accumulator before the single output store. The *dequant* stage is not a
+    field: it is implied by the weight's quantized
+    :class:`~repro.core.tile_format.TileFormat` (per-tile scales applied per
+    K-step, necessarily ahead of every stage here). ``bias`` and ``gate``
+    are structural flags — the bias vector and the gate partner weight
+    travel as operands of the contraction, the spec only declares that the
+    chain consumes them.
+  * ``EPILOGUE_SPECS`` — the named-spec table. Adding a composite name here
+    (e.g. ``bias_gelu``) makes it reachable from every lowering on every
+    backend with zero per-kernel edits, because each stage is already a
+    kernel capability.
+
+Legacy ``epilogue="<name>"`` strings remain accepted at the public facades
+behind a :class:`DeprecationWarning` (:func:`as_epilogue_spec`).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+import dataclasses
+import warnings
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-EPILOGUES: Dict[str, Callable] = {
+ACTIVATIONS: Dict[str, Callable] = {
     "none": lambda x: x,
     "relu": jax.nn.relu,
     "gelu": lambda x: jax.nn.gelu(x, approximate=True),
@@ -24,8 +42,152 @@ EPILOGUES: Dict[str, Callable] = {
     "tanh": jnp.tanh,
 }
 
+# Historical name for the activation table (kernel modules and tests key on
+# it); same object, so the two can never drift.
+EPILOGUES = ACTIVATIONS
+
 
 def apply_epilogue(name: str, x: jnp.ndarray) -> jnp.ndarray:
-    if name not in EPILOGUES:
-        raise KeyError(f"unknown epilogue {name!r}; one of {list(EPILOGUES)}")
-    return EPILOGUES[name](x)
+    """Apply one ACTIVATION stage by name (the legacy per-stage entry)."""
+    if name not in ACTIVATIONS:
+        raise KeyError(f"unknown epilogue {name!r}; one of {list(ACTIVATIONS)}")
+    return ACTIVATIONS[name](x)
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueSpec:
+    """Declarative GEMM store-epilogue: the ordered chain
+    ``(dequant ->) bias -> activation -> gate-mul`` on the f32 accumulator.
+
+    ``bias``     consume a length-N (grouped: [E, N]) bias operand.
+    ``activation``  one of :data:`ACTIVATIONS`, applied after the bias.
+    ``gate_mul`` multiply the activated accumulator by a SECOND accumulator
+                 (the MoE gate/up pair: ``act(a@w) * (a@w2)``); the partner
+                 weight travels as the contraction's ``w2`` operand. The
+                 kernels implement the silu gate, so ``gate_mul`` requires
+                 ``activation="silu"``.
+
+    Frozen/hashable — safe as a jit cache key and a ContractionSpec field.
+    """
+
+    bias: bool = False
+    activation: str = "none"
+    gate_mul: bool = False
+
+    def __post_init__(self):
+        if self.activation not in ACTIVATIONS:
+            raise ValueError(f"unknown activation {self.activation!r}; "
+                             f"one of {list(ACTIVATIONS)}")
+        if self.gate_mul and self.activation != "silu":
+            raise ValueError(
+                "gate_mul composes with activation='silu' only (the kernels' "
+                f"fused gate is the silu gate); got {self.activation!r}")
+
+    # -- chain view ---------------------------------------------------------
+
+    @property
+    def steps(self) -> Tuple[str, ...]:
+        """The chain in application order (excluding the implied dequant)."""
+        out = []
+        if self.bias:
+            out.append("bias")
+        if self.activation != "none":
+            out.append(self.activation)
+        if self.gate_mul:
+            out.append("gate_mul")
+        return tuple(out)
+
+    @classmethod
+    def chain(cls, *steps: str) -> "EpilogueSpec":
+        """Compose a spec from ordered stage names, e.g.
+        ``EpilogueSpec.chain("bias", "gelu")``. Stage order is validated
+        against the one order the kernels implement."""
+        bias, act, gate = False, "none", False
+        stage = 0  # 0: expect bias|act|gate, 1: expect act|gate, 2: gate seen
+        for s in steps:
+            if s == "bias":
+                if stage > 0 or bias:
+                    raise ValueError(f"bias must lead the chain: {steps}")
+                bias = True
+            elif s in ACTIVATIONS:
+                if stage > 1 or act != "none":
+                    raise ValueError(f"one activation, before gate_mul: {steps}")
+                act, stage = s, 1
+            elif s == "gate_mul":
+                if gate:
+                    raise ValueError(f"duplicate gate_mul: {steps}")
+                gate, stage = True, 2
+            else:
+                raise ValueError(f"unknown epilogue stage {s!r} in {steps}")
+        return cls(bias=bias, activation=act, gate_mul=gate)
+
+    def with_bias(self, flag: bool = True) -> "EpilogueSpec":
+        """The same chain with the bias stage present/absent (the facades
+        complete a caller's activation spec from the bias operand)."""
+        if flag == self.bias:
+            return self
+        return dataclasses.replace(self, bias=flag)
+
+    # -- lowering -----------------------------------------------------------
+
+    @property
+    def kernel_name(self) -> str:
+        """The in-kernel epilogue name this chain lowers to (the bias stage
+        lowers to the kernels' bias operand, not a name)."""
+        return "silu_gate" if self.gate_mul else self.activation
+
+    def apply(self, acc: jnp.ndarray, *, bias: Optional[jnp.ndarray] = None,
+              gate: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Reference (jnp) application of the chain to an accumulator —
+        the single epilogue expression every jnp lowering shares. ``gate``
+        is the second accumulator of a ``gate_mul`` chain."""
+        if self.bias != (bias is not None):
+            raise ValueError(f"epilogue {self} expects bias={self.bias}")
+        if self.gate_mul != (gate is not None):
+            raise ValueError(f"epilogue {self} expects gate_mul={self.gate_mul}")
+        if bias is not None:
+            acc = acc + bias.astype(acc.dtype)
+        out = ACTIVATIONS[self.activation](acc)
+        if gate is not None:
+            out = out * gate
+        return out
+
+
+# The named-spec table: the single place a composite epilogue is added.
+# ``bias_gelu`` is the extensibility proof — a new fused chain that reaches
+# every backend (Pallas dense fused-A, grouped, ragged, jnp) through this
+# entry alone, because bias and gelu are both existing kernel capabilities.
+EPILOGUE_SPECS: Dict[str, EpilogueSpec] = {
+    "none": EpilogueSpec(),
+    "relu": EpilogueSpec(activation="relu"),
+    "gelu": EpilogueSpec(activation="gelu"),
+    "silu": EpilogueSpec(activation="silu"),
+    "tanh": EpilogueSpec(activation="tanh"),
+    "silu_gate": EpilogueSpec(activation="silu", gate_mul=True),
+    "bias_gelu": EpilogueSpec(bias=True, activation="gelu"),
+}
+
+
+def as_epilogue_spec(ep, *, warn: bool = False) -> EpilogueSpec:
+    """Normalize ``EpilogueSpec | str | None`` to an :class:`EpilogueSpec`.
+
+    Strings hit the named table; with ``warn=True`` (the public facades) a
+    non-trivial string raises a :class:`DeprecationWarning` pointing at the
+    spec API. ``None`` means the empty chain.
+    """
+    if ep is None:
+        return EPILOGUE_SPECS["none"]
+    if isinstance(ep, EpilogueSpec):
+        return ep
+    if not isinstance(ep, str):
+        raise TypeError(f"epilogue must be an EpilogueSpec or name; got "
+                        f"{type(ep).__name__}")
+    if ep not in EPILOGUE_SPECS:
+        raise KeyError(
+            f"unknown epilogue {ep!r}; one of {list(EPILOGUE_SPECS)}")
+    if warn and ep != "none":
+        warnings.warn(
+            f"string epilogue={ep!r} is deprecated; pass "
+            f"EpilogueSpec (repro.core.EPILOGUE_SPECS[{ep!r}])",
+            DeprecationWarning, stacklevel=3)
+    return EPILOGUE_SPECS[ep]

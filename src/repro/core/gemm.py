@@ -1,299 +1,232 @@
-"""Public matmul API — the framework's single GEMM dispatch point.
+"""Public contraction API — thin facades over ONE declarative dispatch point.
 
-Every dense contraction in ``repro.models`` goes through :func:`matmul` /
-:func:`linear`. This is the framework analogue of the paper's KernelFaRer +
-compiler pass: the "pattern" (a GEMM) is explicit at this call site, and the
-strategy/planner decide how it is lowered.
+Every contraction in ``repro.models`` goes through here. The surface is
+declarative (paper: the ``llvm.matrix`` interface between tiling/packing and
+the micro kernel; Exo / Library Liberation: lowerings selected against a
+declared contract, not hard-coded call paths):
 
-Resolution of ``strategy="auto"``:
-  * on TPU: ``tiling`` for problems whose streams behave unpacked,
-    ``tiling_packing_fused`` beyond (the fused crossover — packing A is free,
-    so the packed kernel wins earlier than the paper's Figs. 4-6 crossover),
-    via the Pallas kernels;
-  * elsewhere (CPU dry-run/tests): ``xla`` — XLA's GEMM is the correct
-    "library" lowering for a backend we are not hand-scheduling for.
-Overrides: env ``REPRO_GEMM_STRATEGY`` / ``REPRO_GEMM_BACKEND`` (used by the
-integration tests to force the Pallas path inside jitted models).
+  * :class:`~repro.core.contraction.ContractionSpec` +
+    :class:`~repro.core.epilogue.EpilogueSpec` describe WHAT is computed —
+    dense vs grouped geometry, dtypes, weight kind (raw vs load-time-packed
+    tiles incl. the :class:`TileFormat`), ragged counts, accumulation, and
+    the ordered store-epilogue chain.
+  * :func:`repro.core.contraction.dispatch` chooses HOW — every lowering
+    registers ``supports(spec)`` + a planner cost hint, and the one
+    precedence rule is ``explicit > env(REPRO_GEMM_STRATEGY) > auto``.
+  * :func:`contract` executes: it validates operands against the spec,
+    folds leading batch dims for the lowerings that want a folded view
+    (library/einsum lowerings keep them UNFOLDED so GSPMD sharding
+    decisions survive — see :func:`linear`), runs, and restores.
 
-``linear`` also accepts a :class:`repro.core.layered.PackedWeight` for ``w``:
-the weight was packed tile-major once at load time, so every call runs the
-pack-free-A fused kernel with bias + activation applied in the kernel's final
-grid step — no per-call packing, no post-kernel elementwise ops. A weight
-packed with ``quantize="int8"`` additionally carries its per-tile scale grid
-(see ``core/tile_format.py``) and dequantizes inside the same kernel pass.
+:func:`matmul` / :func:`linear` / :func:`grouped_linear` /
+:func:`grouped_silu_gate` are compatibility facades that construct specs
+from their legacy kwargs; string ``epilogue=`` values keep working behind a
+``DeprecationWarning``. Backend resolution (``REPRO_GEMM_BACKEND``, pallas
+on TPU, jnp elsewhere) lives in ``repro.core.contraction.default_backend``.
 
-``grouped_linear`` / ``grouped_silu_gate`` are the batched-expert analogues:
-every MoE expert contraction ([*lead, E, M, K] against an [E, K, N] stack or
-a load-time-packed :class:`GroupedPackedWeight`) routes through them, with
-the gate/up einsum pair fused into one silu-gate kernel pass. Both accept
-``counts`` ([*lead, E] int32 valid-row counts, free from the routing
-one-hot): with counts the dispatch goes ragged — the grouped kernel
-scalar-prefetches the counts and skips the all-padding (expert, m-block)
-grid steps, so a capacity-padded MoE dispatch stops paying for its padding.
+Packed weights (:class:`PackedWeight` / :class:`GroupedPackedWeight`) are
+dispatched by the same registry: the pytrees declare ``weight_kind`` and
+register their kernel paths as lowerings — no isinstance probes anywhere.
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import strategy as strat
-from repro.core.epilogue import apply_epilogue
+from repro.core import contraction as ctr
+from repro.core import strategy as strat  # noqa: F401  (registers lowerings)
+from repro.core.contraction import ContractionSpec, default_backend, dispatch
+from repro.core.epilogue import EpilogueSpec, as_epilogue_spec
 from repro.core.planner import (GemmPlan, choose_strategy, plan_gemm,
                                 should_pack)
 
-_ENV_STRATEGY = "REPRO_GEMM_STRATEGY"
-_ENV_BACKEND = "REPRO_GEMM_BACKEND"
-
-
-def default_backend() -> str:
-    env = os.environ.get(_ENV_BACKEND)
-    if env:
-        return env
-    return "pallas" if jax.default_backend() == "tpu" else "jnp"
-
-
-def resolve_strategy(m: int, k: int, n: int, dtype, strategy: str = "auto") -> str:
-    env = os.environ.get(_ENV_STRATEGY)
-    if env:
-        return env
-    if strategy != "auto":
-        return strategy
-    if jax.default_backend() == "tpu":
-        return choose_strategy(m, k, n, dtype)
-    return "xla"
-
-
-def _is_packed_weight(w) -> bool:
-    from repro.core.layered import PackedWeight  # local: layered imports us
-    return isinstance(w, PackedWeight)
-
-
-def _is_grouped_packed_weight(w) -> bool:
-    from repro.core.layered import GroupedPackedWeight  # local (cycle)
-    return isinstance(w, GroupedPackedWeight)
-
-
-def matmul(a: jnp.ndarray, b, c: Optional[jnp.ndarray] = None, *,
-           alpha: float = 1.0, beta: float = 0.0, strategy: str = "auto",
-           plan: Optional[GemmPlan] = None, backend: Optional[str] = None,
-           out_dtype=None, bias: Optional[jnp.ndarray] = None,
-           epilogue: str = "none") -> jnp.ndarray:
-    """C <- epilogue(alpha * A @ B (+ beta * C) + bias). 2-D operands.
-
-    ``b`` may be a raw [K,N] array or a pre-packed :class:`PackedWeight` (the
-    latter always routes through the fused pack-free-A kernel).
-    """
-    if _is_packed_weight(b):
-        if c is not None or alpha != 1.0 or beta != 0.0:
-            raise ValueError(
-                "PackedWeight matmul supports the linear-layer epilogue only "
-                "(no c/alpha/beta)")
-        return b.matmul(a, bias=bias, epilogue=epilogue, out_dtype=out_dtype,
-                        backend=backend)
-    m, k = a.shape
-    n = b.shape[1]
-    s = resolve_strategy(m, k, n, a.dtype, strategy)
-    be = backend or default_backend()
-    return strat.run(s, a, b, c, alpha=alpha, beta=beta, plan=plan,
-                     backend=be, out_dtype=out_dtype, bias=bias,
-                     epilogue=epilogue)
-
-
-def linear(x: jnp.ndarray, w, bias: Optional[jnp.ndarray] = None,
-           *, strategy: str = "auto", plan: Optional[GemmPlan] = None,
-           backend: Optional[str] = None, out_dtype=None,
-           accum: str = "native", epilogue: str = "none") -> jnp.ndarray:
-    """y = epilogue(x @ w + bias) with arbitrary leading batch dims on x.
-
-    ``w``: raw [K,N] weight or :class:`PackedWeight` (load-time tile-major
-    packing; runs the fused pack-free-A kernel with the epilogue applied in
-    VMEM before the single output store).
-
-    The XLA lowering keeps leading dims UNFLATTENED: collapsing [B, S, d] to
-    [B*S, d] merges two differently-sharded dims, which GSPMD on a 3-axis mesh
-    can only resolve by replicating the whole token set ("involuntary full
-    rematerialization" — measured at +10 GiB/device on the multi-pod prefill
-    cells; EXPERIMENTS.md §Perf). Kernel strategies get the 2-D view they
-    need, but only when explicitly selected.
-
-    ``accum``: "native" keeps the dot output in the input dtype, so when the
-    contraction dim is TP-sharded the cross-shard all-reduce runs in bf16
-    (per-shard MXU accumulation is f32 regardless) — halves the dominant
-    collective (EXPERIMENTS.md §Perf H1). "f32" forces a full-precision
-    cross-shard reduce (used for the LM-head logits).
-    """
-    lead = x.shape[:-1]
-    k = x.shape[-1]
-    if _is_packed_weight(w):
-        # Like every kernel strategy, the fused kernel takes the flattened
-        # 2-D view (explicitly selected by packing the weight — the GSPMD
-        # unflattened-dims caveat below applies only to the auto/XLA path).
-        # The kernel accumulates in f32 regardless, matching accum="f32"'s
-        # einsum precision; the output dtype mirrors the raw-weight path.
-        x2 = x if x.ndim == 2 else x.reshape(-1, k)
-        y = w.matmul(x2, bias=bias, epilogue=epilogue,
-                     out_dtype=out_dtype or x.dtype, backend=backend)
-        return y.reshape(*lead, w.n)
-    n = w.shape[-1]
-    s = resolve_strategy(int(jnp.size(x) // max(k, 1)), k, n, x.dtype, strategy)
-    if s == "xla" or x.ndim == 2:
-        if s == "xla":
-            pet = jnp.float32 if accum == "f32" else None
-            acc = jnp.einsum("...k,kn->...n", x, w,
-                             preferred_element_type=pet)
-            y = acc.astype(out_dtype or x.dtype)
-            if bias is not None:
-                y = y + bias.astype(y.dtype)
-            return apply_epilogue(epilogue, y)
-        y = matmul(x, w, strategy=s, plan=plan, backend=backend,
-                   out_dtype=out_dtype or x.dtype, bias=bias,
-                   epilogue=epilogue)
-        return y
-    x2 = x.reshape(-1, k)
-    y = matmul(x2, w, strategy=s, plan=plan, backend=backend,
-               out_dtype=out_dtype or x.dtype, bias=bias, epilogue=epilogue)
-    return y.reshape(*lead, n)
+# Importing the packed-weight module registers its lowerings (kept as a
+# module-level side effect so `contract` never sees a half-built registry).
+from repro.core import layered as _layered  # noqa: F401  isort: skip
 
 
 # ---------------------------------------------------------------------------
-# Grouped (batched-expert) entry points — the MoE contraction surface
+# Execution: the one place operands meet a chosen lowering
 # ---------------------------------------------------------------------------
 
-def _fold_expert_lead(x: jnp.ndarray):
-    """[*lead, E, M, K] -> ([E, lead*M, K], restore_fn)."""
+def _check_operands(spec: ContractionSpec, w, w2, bias, counts) -> None:
+    """The spec is a contract: the operands must realize exactly it."""
+    if ctr.weight_kind(w) != spec.weight:
+        raise ValueError(f"weight kind {ctr.weight_kind(w)!r} != spec "
+                         f"{spec.weight!r} ({spec.describe()})")
+    if spec.epilogue.bias != (bias is not None):
+        raise ValueError(f"spec declares bias={spec.epilogue.bias} but "
+                         f"bias operand is {'set' if bias is not None else 'missing'}")
+    if spec.epilogue.gate_mul != (w2 is not None):
+        raise ValueError(f"spec declares gate_mul={spec.epilogue.gate_mul} "
+                         f"but w2 is {'set' if w2 is not None else 'missing'}")
+    if spec.counts != (counts is not None):
+        raise ValueError(f"spec declares counts={spec.counts} but counts "
+                         f"operand is {'set' if counts is not None else 'missing'}")
+
+
+def _check_gemm_extras(spec: ContractionSpec, c, alpha, beta) -> None:
+    # The c/alpha/beta GEMM form is a dense-only contract (the grouped
+    # lowerings have no accumulate-into-C path) — reject rather than
+    # silently computing alpha=1, beta=0.
+    if spec.kind == "grouped" and (c is not None or alpha != 1.0
+                                   or beta != 0.0):
+        raise ValueError("c/alpha/beta are dense-only GEMM operands; "
+                         f"got them with {spec.describe()}")
+
+
+def fold_grouped(x: jnp.ndarray, counts: Optional[jnp.ndarray] = None):
+    """Fold ``[*lead, E, M, K]`` (+ optional ``[*lead, E]`` counts) to the
+    kernel lowerings' expert-major form — the ONE fold/restore helper.
+
+    Returns ``(x3 [E, lead*M, K], counts [E, S=prod(lead)] or None,
+    restore)``. Folding is expert-major, so each expert's rows are S
+    contiguous M-row segments, one per leading index — exactly the ragged
+    contract's capacity segments, which is why the counts fold the same way.
+    """
     lead = x.shape[:-3]
     e, m, k = x.shape[-3:]
     x3 = jnp.moveaxis(x, -3, 0).reshape(e, -1, k)
+    fc = None
+    if counts is not None:
+        if counts.shape != lead + (e,):
+            raise ValueError(
+                f"counts shape {counts.shape} != lead {lead} + (E={e},)")
+        fc = jnp.moveaxis(counts, -1, 0).reshape(e, -1).astype(jnp.int32)
 
     def restore(y):
         n = y.shape[-1]
         return jnp.moveaxis(y.reshape((e,) + lead + (m, n)), 0, -3)
 
-    return x3, restore
+    return x3, fc, restore
 
 
-def _fold_counts(counts: jnp.ndarray, lead, e: int) -> jnp.ndarray:
-    """[*lead, E] routing counts -> [E, S] expert-major segment counts.
+def contract(spec: ContractionSpec, a: jnp.ndarray, w, *, w2=None, c=None,
+             bias=None, counts=None, alpha: float = 1.0, beta: float = 0.0,
+             strategy: Optional[str] = None, plan: Optional[GemmPlan] = None,
+             backend: Optional[str] = None) -> jnp.ndarray:
+    """Execute a declared contraction: validate -> dispatch -> fold -> run.
 
-    Must mirror :func:`_fold_expert_lead`'s row order: folding [*lead, E, C,
-    K] expert-major gives each expert S = prod(lead) contiguous C-row
-    segments, one per leading index, so counts fold the same way.
+    ``a`` is the activation operand in its natural layout (dense: [*lead,
+    K]; grouped: [*lead, E, M, K]); ``w`` the weight (raw array or packed
+    pytree per ``spec.weight``); ``w2`` the gate-mul partner weight;
+    ``bias``/``counts`` the operands the spec's epilogue/ragged flags
+    declare. ``strategy`` forces an explicit lowering (explicit > env >
+    auto — see :func:`repro.core.contraction.dispatch`).
     """
-    s = 1
-    for d in lead:
-        s *= d
-    if counts.shape != lead + (e,):
-        raise ValueError(
-            f"counts shape {counts.shape} != lead {lead} + (E={e},)")
-    return jnp.moveaxis(counts, -1, 0).reshape(e, s).astype(jnp.int32)
+    _check_operands(spec, w, w2, bias, counts)
+    _check_gemm_extras(spec, c, alpha, beta)
+    low = dispatch(spec, strategy=strategy)
+    if spec.kind == "dense":
+        if low.folds and a.ndim != 2:
+            lead = a.shape[:-1]
+            out = low.run(spec, a.reshape(-1, a.shape[-1]), w, w2=w2, c=c,
+                          bias=bias, counts=counts, alpha=alpha, beta=beta,
+                          plan=plan, backend=backend)
+            return out.reshape(*lead, out.shape[-1])
+        return low.run(spec, a, w, w2=w2, c=c, bias=bias, counts=counts,
+                       alpha=alpha, beta=beta, plan=plan, backend=backend)
+    if low.folds:
+        x3, fc, restore = fold_grouped(a, counts)
+        return restore(low.run(spec, x3, w, w2=w2, c=c, bias=bias, counts=fc,
+                               alpha=alpha, beta=beta, plan=plan,
+                               backend=backend))
+    return low.run(spec, a, w, w2=w2, c=c, bias=bias, counts=counts,
+                   alpha=alpha, beta=beta, plan=plan, backend=backend)
 
 
-def _mask_ragged_rows(x: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
-    """Zero rows at/past counts: x [*lead, E, C, ...], counts [*lead, E]."""
-    c = x.shape[-2]
-    mask = jnp.arange(c)[(None,) * counts.ndim] < counts[..., None]
-    return jnp.where(mask[..., None], x, 0)
+# ---------------------------------------------------------------------------
+# Legacy facades (spec constructors with the historical signatures)
+# ---------------------------------------------------------------------------
 
+def matmul(a: jnp.ndarray, b, c: Optional[jnp.ndarray] = None, *,
+           alpha: float = 1.0, beta: float = 0.0, strategy: str = "auto",
+           plan: Optional[GemmPlan] = None, backend: Optional[str] = None,
+           out_dtype=None, bias: Optional[jnp.ndarray] = None,
+           epilogue="none") -> jnp.ndarray:
+    """C <- epilogue(alpha * A @ B (+ beta * C) + bias). 2-D operands.
 
-def resolve_grouped_strategy(e: int, m: int, k: int, n: int, dtype,
-                             strategy: str = "auto", *,
-                             counts_known: bool = False,
-                             occupancy: float = 1.0) -> str:
-    """Grouped analogue of :func:`resolve_strategy`.
-
-    An explicit ``strategy`` always wins. The env override is consulted only
-    for ``"auto"`` and only when it names a *grouped* strategy (a dense-path
-    value like ``tiling`` forced by the integration tests must not silently
-    re-route the grouped contractions). Auto on TPU crosses over to the
-    grouped kernel at ``should_pack(group=E)`` shapes — B resident
-    per-expert, per-call stack packing amortized like the 2-D fused path —
-    and stays on the batched einsum elsewhere.
-
-    ``counts_known=True`` (the caller can thread valid-row counts) makes the
-    kernel crossover land on the ragged variant, and the crossover itself is
-    occupancy-aware: ``occupancy`` discounts the padded per-expert M to the
-    EXPECTED occupied rows, so a skewed dispatch whose real work is
-    decode-shaped stays on the einsum even when its padded capacity looks
-    prefill-shaped.
+    ``b`` may be a raw [K,N] array or a pre-packed :class:`PackedWeight`
+    (dispatched to the fused pack-free-A kernel lowering). ``accum`` is
+    pinned "f32" — the historical matmul contract accumulates and applies
+    the epilogue in full precision.
     """
-    if strategy != "auto":
-        return strategy
-    env = os.environ.get(_ENV_STRATEGY)
-    if env in strat.GROUPED_STRATEGIES:
-        return env
-    if jax.default_backend() == "tpu" and should_pack(
-            m, k, n, dtype, fused=True, group=e, occupancy=occupancy):
-        return "grouped_packed_ragged" if counts_known else "grouped_packed"
-    return "grouped_einsum"
+    m, k = a.shape
+    n = b.n if ctr.is_packed(b) else b.shape[1]
+    spec = ContractionSpec.dense(
+        m, k, n, a.dtype, w=b, epilogue=as_epilogue_spec(epilogue, warn=True),
+        bias=bias is not None, out_dtype=out_dtype, accum="f32")
+    return contract(spec, a, b, c=c, bias=bias, alpha=alpha, beta=beta,
+                    strategy=strategy, plan=plan, backend=backend)
+
+
+def linear(x: jnp.ndarray, w, bias: Optional[jnp.ndarray] = None,
+           *, strategy: str = "auto", plan: Optional[GemmPlan] = None,
+           backend: Optional[str] = None, out_dtype=None,
+           accum: str = "native", epilogue="none") -> jnp.ndarray:
+    """y = epilogue(x @ w + bias) with arbitrary leading batch dims on x.
+
+    ``w``: raw [K,N] weight or :class:`PackedWeight` (load-time tile-major
+    packing; the packed lowering runs the fused pack-free-A kernel with the
+    epilogue chain applied in VMEM before the single output store).
+
+    The library (xla) lowering keeps leading dims UNFLATTENED: collapsing
+    [B, S, d] merges two differently-sharded dims, which GSPMD on a 3-axis
+    mesh can only resolve by replicating the whole token set ("involuntary
+    full rematerialization" — measured at +10 GiB/device on the multi-pod
+    prefill cells; EXPERIMENTS.md §Perf). Kernel lowerings get the folded
+    2-D view they need.
+
+    ``accum``: "native" keeps the dot output in the input dtype, so when
+    the contraction dim is TP-sharded the cross-shard all-reduce runs in
+    bf16 — halves the dominant collective (EXPERIMENTS.md §Perf H1). "f32"
+    forces a full-precision cross-shard reduce (used for LM-head logits).
+    Kernel lowerings accumulate in f32 regardless.
+    """
+    k = x.shape[-1]
+    n = w.n if ctr.is_packed(w) else w.shape[-1]
+    m = int(jnp.size(x) // max(k, 1))
+    spec = ContractionSpec.dense(
+        m, k, n, x.dtype, w=w, epilogue=as_epilogue_spec(epilogue, warn=True),
+        bias=bias is not None, out_dtype=out_dtype or x.dtype, accum=accum)
+    return contract(spec, x, w, bias=bias, strategy=strategy, plan=plan,
+                    backend=backend)
 
 
 def grouped_linear(x: jnp.ndarray, w, bias: Optional[jnp.ndarray] = None, *,
                    counts: Optional[jnp.ndarray] = None,
                    occupancy: Optional[float] = None,
                    strategy: str = "auto", backend: Optional[str] = None,
-                   out_dtype=None, epilogue: str = "none") -> jnp.ndarray:
+                   out_dtype=None, epilogue="none") -> jnp.ndarray:
     """out[..., e, m, :] = epilogue(x[..., e, m, :] @ w[e] + bias[e]).
 
     The grouped analogue of :func:`linear`: one batch of per-expert GEMMs
-    sharing a single dispatch point. ``x``: [*lead, E, M, K] (the MoE path
-    passes its [G, E, C, d] capacity tensor directly); ``w``: a raw [E, K, N]
-    expert stack or a load-time-packed :class:`GroupedPackedWeight`.
+    behind the same dispatch point. ``x``: [*lead, E, M, K] (the MoE path
+    passes its [G, E, C, d] capacity tensor directly); ``w``: a raw [E, K,
+    N] expert stack or a load-time-packed :class:`GroupedPackedWeight`.
 
-    ``counts`` ([*lead, E] int32, ``counts <= M``): per-(lead, expert)
-    valid-row counts — the MoE router computes them for free from its
-    one-hot. With counts the contraction is RAGGED: rows at/past the count
-    are treated as padding, skipped by the kernel's scalar-prefetch grid and
-    zeroed in the output. ``occupancy`` (static, in (0, 1]) is the expected
-    fill fraction used by the auto-strategy crossover; it defaults to 1.
+    ``counts`` ([*lead, E] int32, ``counts <= M``) declares the contraction
+    RAGGED: rows at/past the count are padding, skipped by the kernel's
+    scalar-prefetch grid and zeroed in the output. ``occupancy`` (static,
+    in (0, 1]) is the expected fill fraction — the auto-crossover prior.
 
-    Raw weights on the einsum strategy contract WITHOUT folding the leading
-    dims (the batched einsum keeps GSPMD's sharding choices intact — see the
-    :func:`linear` rematerialization caveat); kernel strategies fold the
-    leading dims into the per-expert M. The MoE model path therefore pins
+    Raw weights on the einsum lowering contract WITHOUT folding the leading
+    dims (GSPMD sharding stays intact — see :func:`linear`); kernel
+    lowerings fold them into the per-expert M. The MoE model path pins
     ``strategy="grouped_einsum"`` for raw weights (training keeps the exact
-    historical lowering) and reaches the kernel by load-time packing; auto
-    only crosses a raw weight over on TPU at grouped-crossover shapes.
+    historical lowering) and reaches the kernels by load-time packing.
     """
-    if _is_grouped_packed_weight(w):
-        if counts is not None:
-            lead = x.shape[:-3]
-            e, m, _ = x.shape[-3:]
-            x4 = jnp.moveaxis(x, -3, 0).reshape((e, -1) + x.shape[-2:])
-            y = w.matmul(x4, counts=_fold_counts(counts, lead, e), bias=bias,
-                         epilogue=epilogue, out_dtype=out_dtype or x.dtype,
-                         backend=backend)
-            n = y.shape[-1]
-            return jnp.moveaxis(y.reshape((e,) + lead + (m, n)), 0, -3)
-        x3, restore = _fold_expert_lead(x)
-        return restore(w.matmul(x3, bias=bias, epilogue=epilogue,
-                                out_dtype=out_dtype or x.dtype,
-                                backend=backend))
     e, m, k = x.shape[-3:]
-    n = w.shape[-1]
+    n = w.n if ctr.is_packed(w) else w.shape[-1]
     lead = int(jnp.size(x) // max(e * m * k, 1))
-    s = resolve_grouped_strategy(e, lead * m, k, n, x.dtype, strategy,
-                                 counts_known=counts is not None,
-                                 occupancy=occupancy or 1.0)
-    if s == "grouped_packed" and counts is not None:
-        s = "grouped_packed_ragged"  # counts strictly add information
-    if s == "grouped_einsum":
-        acc = jnp.einsum("...emk,ekn->...emn", x, w)
-        out = strat.grouped_epilogue(acc, None, bias, epilogue,
-                                     out_dtype or x.dtype)
-        # ragged contract: rows at/past the count are zero. The contraction
-        # is row-local, so the output mask alone establishes it (no input
-        # masking pass over the capacity tensor needed).
-        return _mask_ragged_rows(out, counts) if counts is not None else out
-    x3, restore = _fold_expert_lead(x)
-    folded = (_fold_counts(counts, x.shape[:-3], e)
-              if counts is not None else None)
-    return restore(strat.run_grouped(s, x3, w, counts=folded,
-                                     backend=backend or default_backend(),
-                                     bias=bias, epilogue=epilogue,
-                                     out_dtype=out_dtype or x.dtype))
+    spec = ContractionSpec.grouped(
+        e, lead * m, k, n, x.dtype, w=w,
+        epilogue=as_epilogue_spec(epilogue, warn=True),
+        bias=bias is not None, counts=counts is not None,
+        occupancy=occupancy, out_dtype=out_dtype or x.dtype)
+    return contract(spec, x, w, bias=bias, counts=counts, strategy=strategy,
+                    backend=backend)
 
 
 def grouped_silu_gate(x: jnp.ndarray, wg, wu, *,
@@ -303,53 +236,61 @@ def grouped_silu_gate(x: jnp.ndarray, wg, wu, *,
                       out_dtype=None) -> jnp.ndarray:
     """silu(x @ wg) * (x @ wu), per expert — the fused MoE gate/up pair.
 
-    ``x``: [*lead, E, M, K]; ``wg``/``wu``: raw [E, K, N] stacks or a
-    :class:`GroupedPackedWeight` pair packed with ``n_b_streams=2``. On the
-    kernel path both packed stacks stream against ONE A read with the
-    silu*mul applied on the VMEM gate accumulator (one kernel, one store);
-    the einsum lowering computes the matching fused jnp expression so every
-    backend agrees. ``counts``/``occupancy`` behave as in
-    :func:`grouped_linear` — with counts, BOTH dots skip the padding rows.
+    The ``silu_gate`` epilogue chain (activation + gate-mul) with ``wu`` as
+    the gate-mul partner operand. On the kernel lowerings both packed
+    stacks stream against ONE A read with silu*mul applied on the VMEM gate
+    accumulator (one kernel, one store); the einsum lowering computes the
+    matching fused jnp expression so every backend agrees.
+    ``counts``/``occupancy`` behave as in :func:`grouped_linear` — with
+    counts, BOTH dots skip the padding rows.
     """
-    gp, up = _is_grouped_packed_weight(wg), _is_grouped_packed_weight(wu)
-    if gp != up:
+    if ctr.is_packed(wg) != ctr.is_packed(wu):
         raise ValueError("gate/up pair must be both packed or both raw")
-    if gp:
-        if counts is not None:
-            lead = x.shape[:-3]
-            e, m, _ = x.shape[-3:]
-            x4 = jnp.moveaxis(x, -3, 0).reshape((e, -1) + x.shape[-2:])
-            y = wg.silu_gate(wu, x4, counts=_fold_counts(counts, lead, e),
-                             out_dtype=out_dtype or x.dtype, backend=backend)
-            n = y.shape[-1]
-            return jnp.moveaxis(y.reshape((e,) + lead + (m, n)), 0, -3)
-        x3, restore = _fold_expert_lead(x)
-        return restore(wg.silu_gate(wu, x3, out_dtype=out_dtype or x.dtype,
-                                    backend=backend))
     e, m, k = x.shape[-3:]
-    n = wg.shape[-1]
+    n = wg.n if ctr.is_packed(wg) else wg.shape[-1]
     lead = int(jnp.size(x) // max(e * m * k, 1))
-    s = resolve_grouped_strategy(e, lead * m, k, n, x.dtype, strategy,
-                                 counts_known=counts is not None,
-                                 occupancy=occupancy or 1.0)
-    if s == "grouped_packed" and counts is not None:
-        s = "grouped_packed_ragged"
-    if s == "grouped_einsum":
-        gate = jnp.einsum("...emk,ekn->...emn", x, wg)
-        upp = jnp.einsum("...emk,ekn->...emn", x, wu)
-        out = strat.grouped_epilogue(gate, upp, None, "silu_gate",
-                                     out_dtype or x.dtype)
-        # row-local contraction: the output mask alone is the ragged contract
-        return _mask_ragged_rows(out, counts) if counts is not None else out
-    x3, restore = _fold_expert_lead(x)
-    folded = (_fold_counts(counts, x.shape[:-3], e)
-              if counts is not None else None)
-    return restore(strat.run_grouped(s, x3, wg, b2=wu, counts=folded,
-                                     backend=backend or default_backend(),
-                                     epilogue="silu_gate",
-                                     out_dtype=out_dtype or x.dtype))
+    spec = ContractionSpec.grouped(
+        e, lead * m, k, n, x.dtype, w=wg,
+        epilogue=as_epilogue_spec("silu_gate"), counts=counts is not None,
+        occupancy=occupancy, out_dtype=out_dtype or x.dtype)
+    return contract(spec, x, wg, w2=wu, counts=counts, strategy=strategy,
+                    backend=backend)
 
 
-__all__ = ["matmul", "linear", "grouped_linear", "grouped_silu_gate",
-           "resolve_strategy", "resolve_grouped_strategy", "default_backend",
-           "plan_gemm", "GemmPlan", "choose_strategy", "should_pack"]
+# ---------------------------------------------------------------------------
+# Deprecated resolvers (kept as shims over dispatch for callers/tests that
+# want the chosen lowering NAME for a raw-weight contraction)
+# ---------------------------------------------------------------------------
+
+def resolve_strategy(m: int, k: int, n: int, dtype,
+                     strategy: str = "auto") -> str:
+    """Deprecated: ``dispatch(ContractionSpec.dense(...)).name``.
+
+    Precedence is the registry's single rule (explicit > env > auto) — the
+    seed-era behavior of the env var beating an *explicit* argument is gone
+    (regression-tested in tests/test_dispatch.py).
+    """
+    spec = ContractionSpec.dense(m, k, n, dtype)
+    return dispatch(spec, strategy=strategy).name
+
+
+def resolve_grouped_strategy(e: int, m: int, k: int, n: int, dtype,
+                             strategy: str = "auto", *,
+                             counts_known: bool = False,
+                             occupancy: float = 1.0) -> str:
+    """Deprecated: ``dispatch(ContractionSpec.grouped(...)).name``.
+
+    The env override is honored only when it names a grouped lowering that
+    supports the spec (a dense-path value like ``tiling`` forced by the
+    integration tests must not silently re-route the grouped contractions).
+    """
+    spec = ContractionSpec.grouped(e, m, k, n, dtype, counts=counts_known,
+                                   occupancy=occupancy)
+    return dispatch(spec, strategy=strategy).name
+
+
+__all__ = ["contract", "dispatch", "matmul", "linear", "grouped_linear",
+           "grouped_silu_gate", "fold_grouped", "ContractionSpec",
+           "EpilogueSpec", "resolve_strategy", "resolve_grouped_strategy",
+           "default_backend", "plan_gemm", "GemmPlan", "choose_strategy",
+           "should_pack"]

@@ -38,10 +38,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import contraction as ctr
 from repro.core import dtypes as mdt
 from repro.core import strategy as strat
-from repro.core.epilogue import apply_epilogue
-from repro.core.gemm import default_backend
+from repro.core.contraction import ContractionSpec, default_backend
+from repro.core.epilogue import apply_epilogue, as_epilogue_spec
 from repro.core.planner import (GemmPlan, choose_strategy, plan_gemm,
                                 plan_grouped_gemm)
 from repro.core.tile_format import TileFormat, normalize_packed
@@ -98,7 +99,13 @@ class _PackedCommon:
     single source of truth for packing (dense or grouped, float or
     quantized), the runtime M-block clamp, and the quantization pairing
     rules — the dense and grouped classes only differ in operand rank.
+
+    ``weight_kind`` is the declarative classification the dispatch layer
+    keys on (``repro.core.contraction.weight_kind``) — the registry probes
+    this attribute, never the concrete class.
     """
+
+    weight_kind = "packed"
 
     @property
     def fmt(self) -> TileFormat:
@@ -177,9 +184,25 @@ class PackedWeight(_PackedCommon):
             packed, scales = cls._pack_pair(w, fmt, be, grouped=False)
         return cls(packed=packed, k=k, n=n, plan=plan, scales=scales)
 
-    def matmul(self, a: jnp.ndarray, *, bias=None, epilogue: str = "none",
+    def matmul(self, a: jnp.ndarray, *, bias=None, epilogue="none",
                out_dtype=None, backend: Optional[str] = None) -> jnp.ndarray:
         """epilogue(a[M,K] @ W + bias) via the pack-free-A fused pipeline.
+
+        A spec facade: builds the :class:`ContractionSpec` for this packed
+        contraction and routes it through the one dispatch point
+        (``repro.core.gemm.contract``). ``epilogue`` is an
+        :class:`EpilogueSpec` (legacy name strings keep working).
+        """
+        from repro.core.gemm import contract  # late: gemm imports this module
+        spec = ContractionSpec.dense(
+            a.shape[0], a.shape[1], self.n, a.dtype, w=self,
+            epilogue=as_epilogue_spec(epilogue), bias=bias is not None,
+            out_dtype=out_dtype)
+        return contract(spec, a, self, bias=bias, backend=backend)
+
+    def _matmul_impl(self, a: jnp.ndarray, *, bias, epilogue: str,
+                     out_dtype, backend: Optional[str]) -> jnp.ndarray:
+        """The registered lowering body (``packed_weight``).
 
         B's packing cost was paid once at load time; A is consumed directly
         from its natural layout (no pack_a materialization on any backend),
@@ -287,6 +310,13 @@ class GroupedPackedWeight(_PackedCommon):
         sub, _ = mdt.alignment(a.dtype)
         return be == "pallas" and a.shape[1] > sub
 
+    def _check_pair(self, up: "GroupedPackedWeight") -> None:
+        if self.plan != up.plan or self.packed.shape != up.packed.shape:
+            raise ValueError("silu_gate pair must share plan and geometry "
+                             f"({self.plan} vs {up.plan})")
+        if (self.scales is None) != (up.scales is None):
+            raise ValueError("silu_gate pair must be quantized together")
+
     def _check_ragged(self, a: jnp.ndarray, counts: jnp.ndarray) -> None:
         if a.ndim != 4 or a.shape[0] != self.e or a.shape[3] != self.k:
             raise ValueError(
@@ -342,24 +372,69 @@ class GroupedPackedWeight(_PackedCommon):
                                       bias=bias, epilogue_fn=epi,
                                       out_dtype=out_dtype or a.dtype)
 
+    def _spec(self, a3, *, epilogue, bias, counts, out_dtype):
+        return ContractionSpec.grouped(
+            self.e, a3.shape[1], self.k, self.n, a3.dtype, w=self,
+            epilogue=epilogue, bias=bias is not None, counts=counts,
+            out_dtype=out_dtype)
+
     def matmul(self, a: jnp.ndarray, *, counts=None, bias=None,
-               epilogue: str = "none", out_dtype=None,
+               epilogue="none", out_dtype=None,
                backend: Optional[str] = None) -> jnp.ndarray:
         """out[e] = epilogue(a[e] @ W[e] + bias[e]); a: [E, M, K].
 
-        Every expert's B tiles stream contiguously from the load-time-packed
-        stack; A is consumed directly from its natural [E, M, K] layout.
-
-        With ``counts`` ([E, S] int32) the call is RAGGED: ``a`` must be
-        [E, S, C, K] (S capacity segments of C rows per expert) and rows
-        at/past ``counts[e, s]`` are padding — skipped by the kernel grid
-        and zero in the [E, S, C, N] output.
+        A spec facade over the one dispatch point (the operands arrive
+        already expert-major, so this calls ``dispatch`` directly on the
+        folded form). With ``counts`` ([E, S] int32) the call is RAGGED:
+        ``a`` must be [E, S, C, K] (S capacity segments of C rows per
+        expert) and rows at/past ``counts[e, s]`` are padding — skipped by
+        the kernel grid and zero in the [E, S, C, N] output.
         """
+        epi = as_epilogue_spec(epilogue)
         if counts is not None:
             self._check_ragged(a, counts)
-            return self._ragged(a, counts, bias=bias, epilogue=epilogue,
-                                out_dtype=out_dtype, backend=backend)
-        self._check(a)
+            a3 = a.reshape(self.e, -1, self.k)
+        else:
+            self._check(a)
+            a3 = a
+        spec = self._spec(a3, epilogue=epi, bias=bias,
+                          counts=counts is not None, out_dtype=out_dtype)
+        out = ctr.dispatch(spec).run(spec, a3, self, bias=bias,
+                                     counts=counts, backend=backend)
+        return out.reshape(a.shape[:-1] + (self.n,))
+
+    def silu_gate(self, up: "GroupedPackedWeight", a: jnp.ndarray, *,
+                  counts=None, out_dtype=None,
+                  backend: Optional[str] = None) -> jnp.ndarray:
+        """silu(a @ self) * (a @ up) — the fused MoE gate/up pair.
+
+        One pass over the gate accumulator: the kernel streams both packed
+        stacks against a single A read and applies silu*mul in VMEM before
+        the one HBM store. ``counts`` selects the ragged form exactly as in
+        :meth:`matmul` — both packed streams skip the padding blocks.
+        """
+        self._check_pair(up)
+        if counts is not None:
+            self._check_ragged(a, counts)
+            up._check_ragged(a, counts)
+            a3 = a.reshape(self.e, -1, self.k)
+        else:
+            self._check(a)
+            up._check(a)
+            a3 = a
+        spec = self._spec(a3, epilogue=as_epilogue_spec("silu_gate"),
+                          bias=None, counts=counts is not None,
+                          out_dtype=out_dtype)
+        out = ctr.dispatch(spec).run(spec, a3, self, w2=up, counts=counts,
+                                     backend=backend)
+        return out.reshape(a.shape[:-1] + (self.n,))
+
+    def _matmul_impl(self, a, *, bias, epilogue: str, out_dtype,
+                     backend) -> jnp.ndarray:
+        """Non-ragged lowering body: every expert's B tiles stream
+        contiguously from the load-time-packed stack; A is consumed from
+        its natural [E, M, K] layout. Decode-shaped per-expert M keeps the
+        jnp reference contraction (see :meth:`_use_kernel`)."""
         bm = self._clamp_bm(a.shape[1], a.dtype)
         if self._use_kernel(a, backend):
             return gemm_grouped_packed(a, self.packed, self.n, bm=bm,
@@ -373,29 +448,8 @@ class GroupedPackedWeight(_PackedCommon):
         return strat.grouped_epilogue(acc, None, bias, epilogue,
                                       out_dtype or a.dtype)
 
-    def silu_gate(self, up: "GroupedPackedWeight", a: jnp.ndarray, *,
-                  counts=None, out_dtype=None,
-                  backend: Optional[str] = None) -> jnp.ndarray:
-        """silu(a @ self) * (a @ up) — the fused MoE gate/up pair.
-
-        One pass over the gate accumulator: the kernel streams both packed
-        stacks against a single A read and applies silu*mul in VMEM before
-        the one HBM store. ``counts`` selects the ragged form exactly as in
-        :meth:`matmul` — both packed streams skip the padding blocks.
-        """
-        if self.plan != up.plan or self.packed.shape != up.packed.shape:
-            raise ValueError("silu_gate pair must share plan and geometry "
-                             f"({self.plan} vs {up.plan})")
-        if (self.scales is None) != (up.scales is None):
-            raise ValueError("silu_gate pair must be quantized together")
-        if counts is not None:
-            self._check_ragged(a, counts)
-            up._check_ragged(a, counts)
-            return self._ragged(a, counts, b2=up,
-                                epilogue="silu_gate", out_dtype=out_dtype,
-                                backend=backend)
-        self._check(a)
-        up._check(a)
+    def _silu_gate_impl(self, up: "GroupedPackedWeight", a, *, out_dtype,
+                        backend) -> jnp.ndarray:
         bm = self._clamp_bm(a.shape[1], a.dtype)
         if self._use_kernel(a, backend):
             return gemm_grouped_packed(a, self.packed, self.n,
@@ -428,3 +482,54 @@ def _grouped_weight_unflatten(aux, children):
 jax.tree_util.register_pytree_node(GroupedPackedWeight,
                                    _grouped_weight_flatten,
                                    _grouped_weight_unflatten)
+
+
+# ---------------------------------------------------------------------------
+# Capability registration: the load-time-packed weight lowerings
+# ---------------------------------------------------------------------------
+
+def _run_packed_weight(spec, a, w, *, w2=None, c=None, bias=None, counts=None,
+                       alpha=1.0, beta=0.0, plan=None, backend=None,
+                       interpret=None):
+    if c is not None or alpha != 1.0 or beta != 0.0:
+        raise ValueError(
+            "PackedWeight matmul supports the linear-layer epilogue only "
+            "(no c/alpha/beta)")
+    return w._matmul_impl(a, bias=bias, epilogue=spec.epilogue.kernel_name,
+                          out_dtype=spec.resolved_out_dtype(a),
+                          backend=backend)
+
+
+def _run_grouped_packed_weight(spec, a, w, *, w2=None, c=None, bias=None,
+                               counts=None, alpha=1.0, beta=0.0, plan=None,
+                               backend=None, interpret=None):
+    # Operands arrive folded: a [E, M, K], counts [E, S] (M = S*C). The
+    # kernel-vs-reference choice per backend/shape lives in the impls —
+    # the registry records the CAPABILITY, the impl owns the execution.
+    w._check(a)
+    if w2 is not None:
+        w._check_pair(w2)
+    out_dtype = spec.resolved_out_dtype(a)
+    epi = spec.epilogue.kernel_name
+    if counts is not None:
+        s = counts.shape[1]
+        a4 = a.reshape(w.e, s, -1, a.shape[-1])
+        out = w._ragged(a4, counts, b2=w2, bias=bias, epilogue=epi,
+                        out_dtype=out_dtype, backend=backend)
+        return out.reshape(w.e, a.shape[1], w.n)
+    if w2 is not None:
+        return w._silu_gate_impl(w2, a, out_dtype=out_dtype, backend=backend)
+    return w._matmul_impl(a, bias=bias, epilogue=epi, out_dtype=out_dtype,
+                          backend=backend)
+
+
+ctr.register_lowering(
+    "packed_weight", "dense",
+    supports=lambda spec: spec.weight == "packed",
+    cost=lambda spec: 0.0,   # load-time packing already paid: always the pick
+    run=_run_packed_weight)
+ctr.register_lowering(
+    "grouped_packed_weight", "grouped",
+    supports=lambda spec: spec.weight == "packed",
+    cost=lambda spec: 0.0,
+    run=_run_grouped_packed_weight)

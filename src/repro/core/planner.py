@@ -276,6 +276,28 @@ def should_pack(m: int, k: int, n: int, dtype="float32", *,
     return total > target.vmem_bytes
 
 
+def choose_grouped_strategy(e: int, m: int, k: int, n: int, dtype="float32",
+                            *, b_dtype: str | None = None,
+                            target: TpuTarget = V5E,
+                            counts_known: bool = False,
+                            occupancy: float = 1.0) -> str:
+    """Grouped analogue of :func:`choose_strategy` — the planner's cost model
+    for the batched-expert contraction (backend-agnostic; the dispatch layer
+    gates it on the kernel target).
+
+    The kernel crossover is :func:`should_pack`'s ``group=E`` form: B
+    resident per expert, condition (a) tested against the EXPECTED occupied
+    rows ``m * occupancy``. With ``counts_known`` the crossover lands on the
+    ragged variant (the counts strictly add information: all-padding grid
+    steps early-out); below the crossover the batched einsum is the right
+    library lowering.
+    """
+    if should_pack(m, k, n, dtype, b_dtype=b_dtype, target=target,
+                   fused=True, group=e, occupancy=occupancy):
+        return "grouped_packed_ragged" if counts_known else "grouped_packed"
+    return "grouped_einsum"
+
+
 def choose_strategy(m: int, k: int, n: int, dtype="float32", *,
                     b_dtype: str | None = None,
                     target: TpuTarget = V5E,

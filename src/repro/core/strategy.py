@@ -40,9 +40,11 @@ from typing import Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import contraction as ctr
 from repro.core import dtypes as mdt
-from repro.core.epilogue import apply_epilogue
-from repro.core.planner import GemmPlan, plan_gemm, plan_grouped_gemm
+from repro.core.epilogue import apply_epilogue, as_epilogue_spec
+from repro.core.planner import (GemmPlan, choose_grouped_strategy,
+                                choose_strategy, plan_gemm, plan_grouped_gemm)
 from repro.core.tile_format import TileFormat, normalize_packed
 from repro.kernels import ref
 from repro.kernels.gemm_grouped import (gemm_grouped_packed,
@@ -76,9 +78,10 @@ def _epilogue(acc, c, alpha, beta, out_dtype, bias=None, epilogue="none"):
     out = alpha * acc
     if c is not None and beta != 0:
         out = out + beta * c.astype(acc.dtype)
-    if bias is not None:
-        out = out + bias.astype(acc.dtype)
-    out = apply_epilogue(epilogue, out)
+    # The EpilogueSpec chain is the one jnp epilogue expression (bias ->
+    # activation); kernels fuse the identical chain into their store step.
+    spec = as_epilogue_spec(epilogue).with_bias(bias is not None)
+    out = spec.apply(out, bias=bias)
     return out.astype(out_dtype)
 
 
@@ -347,15 +350,12 @@ def run(strategy: str, a, b, c=None, *, alpha=1.0, beta=0.0,
 
 def grouped_epilogue(acc, acc2, bias, epilogue, out_dtype):
     """Shared grouped-GEMM epilogue for every jnp lowering (run_grouped and
-    the GroupedPackedWeight fallbacks): bias, then silu-gate or activation,
-    then the single output cast."""
-    if bias is not None:
-        acc = acc + bias[:, None, :].astype(acc.dtype)
-    if epilogue == "silu_gate":
-        out = jax.nn.silu(acc) * acc2
-    else:
-        out = apply_epilogue(epilogue, acc)
-    return out.astype(out_dtype)
+    the GroupedPackedWeight fallbacks): the EpilogueSpec chain (bias, then
+    activation, then gate-mul) and the single output cast. ``bias`` is the
+    per-expert [E, N] vector; ``acc2`` the gate-mul partner accumulator."""
+    spec = as_epilogue_spec(epilogue).with_bias(bias is not None)
+    b = bias[:, None, :] if bias is not None else None
+    return spec.apply(acc, bias=b, gate=acc2).astype(out_dtype)
 
 
 # Block rows per cond-guarded dot in the ragged jnp lowering: 16 is sublane-
@@ -453,3 +453,155 @@ def run_grouped(strategy: str, a, b, *, b2=None, counts=None,
         acc2 = ref.grouped_fused_acc_ref(a, b2p, n, layout_b=plan.layout_b,
                                          bm=plan.bm, b_scales=b2s)
     return grouped_epilogue(acc, acc2, bias, epilogue, out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Capability registry: every per-call lowering declares what it supports
+# and a planner cost hint; repro.core.contraction.dispatch does the choosing
+# ---------------------------------------------------------------------------
+
+def mask_ragged_rows(x: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """Ragged output contract on the library path: zero rows at/past counts.
+    x: [*lead, E, C, ...], counts: [*lead, E]. The contraction is row-local,
+    so the output mask alone establishes the contract (no input masking pass
+    over the capacity tensor needed)."""
+    c = x.shape[-2]
+    mask = jnp.arange(c)[(None,) * counts.ndim] < counts[..., None]
+    return jnp.where(mask[..., None], x, 0)
+
+
+def _dense_supports(spec: ctr.ContractionSpec) -> bool:
+    # The per-call dense lowerings share one capability envelope: a raw
+    # [K, N] weight, no ragged counts, no gate-mul (dense has no pair), any
+    # activation in the shared table, bias welcome.
+    return spec.weight == "raw" and not spec.counts \
+        and not spec.epilogue.gate_mul
+
+
+_DENSE_CONTENDERS = ("tiling", "tiling_packing_fused", "xla")
+
+
+def _dense_auto(spec: ctr.ContractionSpec) -> str:
+    """The planner's dense pick (cost-hint source): the hand-scheduled
+    kernels on the kernel target, the library proxy elsewhere."""
+    if ctr.kernel_backend():
+        return choose_strategy(spec.m, spec.k, spec.n, spec.dtype,
+                               b_dtype=spec.b_dtype)
+    return "xla"
+
+
+def _dense_cost(name: str):
+    def cost(spec: ctr.ContractionSpec) -> float:
+        if name not in _DENSE_CONTENDERS:
+            # comparison lowerings (paper §4.1.3): runnable when named
+            # explicitly, never auto-chosen
+            return ctr.COMPARISON_COST
+        return 0.0 if _dense_auto(spec) == name else 1.0
+    return cost
+
+
+def _dense_run(name: str):
+    def _run(spec, a, w, *, w2=None, c=None, bias=None, counts=None,
+             alpha=1.0, beta=0.0, plan=None, backend=None, interpret=None):
+        assert w2 is None and counts is None, (name, spec)
+        return run(name, a, w, c, alpha=alpha, beta=beta, plan=plan,
+                   backend=backend or ctr.default_backend(),
+                   out_dtype=spec.resolved_out_dtype(a, c), bias=bias,
+                   epilogue=spec.epilogue.kernel_name, interpret=interpret)
+    return _run
+
+
+def _xla_facade_run(spec, a, w, *, w2=None, c=None, bias=None, counts=None,
+                    alpha=1.0, beta=0.0, plan=None, backend=None,
+                    interpret=None):
+    """The library lowering as the facades use it: leading dims stay
+    UNFOLDED (collapsing differently-sharded dims forces GSPMD into full
+    rematerializations — see ``gemm.linear``), and ``spec.accum`` picks the
+    accumulation contract: "f32" forces a full-precision accumulator and
+    applies the epilogue chain on it (the legacy ``matmul`` semantics);
+    "native" keeps the dot output in the input dtype so TP-sharded
+    contractions all-reduce narrow, with the epilogue in the output dtype.
+    """
+    assert w2 is None and counts is None, spec
+    out_dtype = spec.resolved_out_dtype(a, c)
+    pet = jnp.float32 if spec.accum == "f32" else None
+    acc = jnp.einsum("...k,kn->...n", a, w, preferred_element_type=pet)
+    epi = spec.epilogue.with_bias(bias is not None)
+    if spec.accum == "f32":
+        out = alpha * acc
+        if c is not None and beta != 0:
+            out = out + beta * c.astype(acc.dtype)
+        return epi.apply(out, bias=bias).astype(out_dtype)
+    if c is not None or alpha != 1.0 or beta != 0.0:
+        raise ValueError("c/alpha/beta need accum='f32' (matmul semantics)")
+    return epi.apply(acc.astype(out_dtype), bias=bias)
+
+
+def _grouped_auto(spec: ctr.ContractionSpec) -> str:
+    if ctr.kernel_backend():
+        return choose_grouped_strategy(
+            spec.e, spec.m, spec.k, spec.n, spec.dtype, b_dtype=spec.b_dtype,
+            counts_known=spec.counts, occupancy=spec.occupancy)
+    return "grouped_einsum"
+
+
+def _grouped_cost(name: str):
+    def cost(spec: ctr.ContractionSpec) -> float:
+        return 0.0 if _grouped_auto(spec) == name else 1.0
+    return cost
+
+
+def _grouped_einsum_run(spec, a, w, *, w2=None, c=None, bias=None,
+                        counts=None, alpha=1.0, beta=0.0, plan=None,
+                        backend=None, interpret=None):
+    """The historical MoE lowering, on UNFOLDED operands (``folds=False``:
+    the batched einsum keeps GSPMD's sharding choices intact). The ragged
+    contract lowers to the output mask — XLA:CPU's monolithic batched GEMM
+    beats runtime skipping at serving shapes (measured; see
+    benchmarks/bench_moe_grouped.py)."""
+    acc = jnp.einsum("...emk,ekn->...emn", a, w)
+    acc2 = jnp.einsum("...emk,ekn->...emn", a, w2) if w2 is not None else None
+    out = grouped_epilogue(acc, acc2, bias, spec.epilogue.kernel_name,
+                           spec.resolved_out_dtype(a))
+    return mask_ragged_rows(out, counts) if counts is not None else out
+
+
+def _grouped_kernel_run(name: str):
+    def _run(spec, a, w, *, w2=None, c=None, bias=None, counts=None,
+             alpha=1.0, beta=0.0, plan=None, backend=None, interpret=None):
+        return run_grouped(name, a, w, b2=w2, counts=counts,
+                           backend=backend or ctr.default_backend(),
+                           plan=plan, bias=bias,
+                           epilogue=spec.epilogue.kernel_name,
+                           out_dtype=spec.resolved_out_dtype(a),
+                           interpret=interpret)
+    return _run
+
+
+for _name in STRATEGIES:
+    if _name == "xla":
+        continue
+    ctr.register_lowering(_name, "dense", supports=_dense_supports,
+                          cost=_dense_cost(_name), run=_dense_run(_name))
+ctr.register_lowering("xla", "dense", supports=_dense_supports,
+                      cost=_dense_cost("xla"), run=_xla_facade_run,
+                      folds=False)
+
+ctr.register_lowering(
+    "grouped_einsum", "grouped",
+    supports=lambda spec: spec.weight == "raw",
+    cost=_grouped_cost("grouped_einsum"), run=_grouped_einsum_run,
+    folds=False)
+ctr.register_lowering(
+    "grouped_packed", "grouped",
+    supports=lambda spec: spec.weight == "raw" and not spec.counts,
+    cost=_grouped_cost("grouped_packed"),
+    run=_grouped_kernel_run("grouped_packed"),
+    # counts strictly add information: an explicit/env choice of the padded
+    # kernel on a counts-declaring spec lands on the ragged variant
+    upgrade=lambda spec: "grouped_packed_ragged" if spec.counts else None)
+ctr.register_lowering(
+    "grouped_packed_ragged", "grouped",
+    supports=lambda spec: spec.weight == "raw" and spec.counts,
+    cost=_grouped_cost("grouped_packed_ragged"),
+    run=_grouped_kernel_run("grouped_packed_ragged"))

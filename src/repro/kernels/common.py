@@ -59,7 +59,12 @@ def vmem_scratch(shape, dtype):
 
 # In-kernel epilogue table shared by every GEMM kernel: applied to the f32
 # accumulator tile in VMEM during the final grid step, before the single HBM
-# store. Must stay in sync with repro.core.epilogue.EPILOGUES (tested).
+# store. Must stay in sync with repro.core.epilogue.ACTIVATIONS (tested) —
+# an EpilogueSpec chain lowers onto this table via its ``kernel_name`` (the
+# bias stage lowers to the kernels' bias operand, the dequant stage to the
+# scale operand), which is why a new composite epilogue in
+# ``repro.core.epilogue.EPILOGUE_SPECS`` reaches every kernel with zero
+# per-kernel edits.
 KERNEL_EPILOGUES = {
     "none": lambda x: x,
     "relu": lambda x: jnp.maximum(x, 0),
@@ -69,12 +74,24 @@ KERNEL_EPILOGUES = {
 }
 
 
+def kernel_epilogue_name(epilogue) -> str:
+    """Normalize an ``EpilogueSpec | str`` to the in-kernel epilogue name
+    (kernels speak the lowered string form; specs carry the chain)."""
+    name = getattr(epilogue, "kernel_name", epilogue)
+    if name not in KERNEL_EPILOGUES and name != "silu_gate":
+        raise KeyError(f"unknown kernel epilogue {name!r}")
+    return name
+
+
 class GemmRefs:
     """A GEMM kernel's refs, split once by the shared operand convention.
 
     Every packed kernel (dense, fused-A, grouped, ragged) orders its refs as
     ``<lead operands>, b2?, scale?, scale2?, bias?, out, acc, acc2?`` — this
-    is the single splitter replacing the per-kernel index arithmetic.
+    is the single splitter replacing the per-kernel index arithmetic. The
+    optional-operand flags mirror the EpilogueSpec chain (``has_bias`` = the
+    bias stage, ``has_gate`` = the gate-mul stage, ``has_scale`` = the
+    implied dequant stage of a quantized TileFormat).
     """
 
     def __init__(self, refs, *, n_lead: int, has_gate: bool = False,
@@ -146,14 +163,15 @@ def bias_spec_and_operand(bias, n, bn):
 
 def finalize_gemm(acc_ref, c_ref, bias_ref, o_ref, *, alpha, beta, epilogue):
     """Shared fused store epilogue for every GEMM kernel: alpha/beta, then
-    bias, then activation — all on the VMEM-resident f32 accumulator, then
-    the single cast-and-store to HBM."""
+    bias, then activation — the EpilogueSpec chain order, applied to the
+    VMEM-resident f32 accumulator, then the single cast-and-store to HBM.
+    ``epilogue`` is an in-kernel name or an EpilogueSpec (normalized)."""
     out = alpha * acc_ref[...]
     if beta != 0:
         out = out + beta * c_ref[...].astype(acc_ref.dtype)
     if bias_ref is not None:
         out = out + bias_ref[...].astype(acc_ref.dtype)  # [1,bn] broadcast
-    out = KERNEL_EPILOGUES[epilogue](out)
+    out = KERNEL_EPILOGUES[kernel_epilogue_name(epilogue)](out)
     o_ref[...] = out.astype(o_ref.dtype)
 
 

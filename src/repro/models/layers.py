@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ModelConfig
-from repro.core import GroupedPackedWeight, PackedWeight, gemm
+from repro.core import (EPILOGUE_SPECS, EpilogueSpec, GroupedPackedWeight,
+                        PackedWeight, as_compute_weight, gemm)
 from repro.parallel.mesh import shard
 
 Init = jax.nn.initializers.normal(stddev=0.02)
@@ -29,11 +30,10 @@ def dense_param(key, in_dim: int, out_dim: int, dtype=jnp.float32):
 
 
 def resolve_weight(w, dtype):
-    """Dense-weight accessor: PackedWeight passes through (it was packed in
-    the compute dtype at load time); raw arrays are cast to the compute dtype."""
-    if isinstance(w, PackedWeight):
-        return w
-    return w.astype(dtype)
+    """Dense-weight accessor: packed weights pass through (packed in the
+    compute dtype at load time); raw arrays are cast to the compute dtype.
+    Weight-kind classification lives in core (no isinstance probes here)."""
+    return as_compute_weight(w, dtype)
 
 
 # Dense [K,N] weight names eligible for load-time packing, across every
@@ -221,16 +221,17 @@ def mlp_params(cfg: ModelConfig, key) -> dict:
 def apply_mlp(cfg: ModelConfig, p: dict, x: jnp.ndarray,
               epilogue_shard: bool = True) -> jnp.ndarray:
     if cfg.mlp_type in ("swiglu", "geglu"):
-        act = "silu" if cfg.mlp_type == "swiglu" else "gelu"
-        # Activation rides as the GEMM's fused epilogue (in-kernel on the
-        # Pallas path; XLA-fused on the jnp path) — no post-GEMM op.
+        act = EpilogueSpec(activation="silu" if cfg.mlp_type == "swiglu"
+                           else "gelu")
+        # The activation rides as the GEMM's declared epilogue chain
+        # (in-kernel on the Pallas path; XLA-fused on the jnp path).
         gate = gemm.linear(x, resolve_weight(p["wg"], x.dtype), p.get("bi"),
                            epilogue=act)
         up = gemm.linear(x, resolve_weight(p["wu"], x.dtype))
         h = gate * up
     else:
         h = gemm.linear(x, resolve_weight(p["wi"], x.dtype), p.get("bi"),
-                        epilogue="gelu")
+                        epilogue=EPILOGUE_SPECS["gelu"])
     h = shard(h, "batch", None, "model")
     out = gemm.linear(h, resolve_weight(p["wo"], x.dtype), p.get("bo"))
     if not epilogue_shard:

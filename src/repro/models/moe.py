@@ -8,12 +8,12 @@ all-to-all dispatch); otherwise (mixtral: 8e) the inner FFN dim is TP-sharded
 within every expert.
 
 The three expert contractions ([G,E,C,d] capacity tensors against stacked
-[E,·,·] weights) dispatch through the grouped layered-GEMM subsystem
-(``core.gemm.grouped_linear`` / ``grouped_silu_gate``): raw weights take the
-batched-einsum lowering (dtype- and sharding-preserving — identical to the
-historical einsums, so CPU/training parity is exact), while load-time
-tile-major-packed stacks (:class:`repro.core.GroupedPackedWeight`, produced
-by ``pack_model_params``) run the ``gemm_grouped_packed`` Pallas kernel:
+[E,·,·] weights) are DECLARED as :class:`repro.core.ContractionSpec`s and
+executed through the one dispatch point (``core.gemm.contract``): raw
+weights take the batched-einsum lowering (dtype- and sharding-preserving —
+identical to the historical einsums, so CPU/training parity is exact), while
+load-time tile-major-packed stacks (:class:`repro.core.GroupedPackedWeight`,
+produced by ``pack_model_params``) run the ``gemm_grouped_packed`` kernel:
 pack-free A streaming over the expert grid axis, and the gate/up pair fused
 into ONE silu-gate kernel pass (silu applied to the VMEM gate accumulator,
 single HBM store). Decode-shaped per-expert capacity falls back to the jnp
@@ -38,8 +38,9 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ModelConfig
-from repro.core import GroupedPackedWeight
-from repro.core.gemm import grouped_linear, grouped_silu_gate
+from repro.core import (EPILOGUE_SPECS, ContractionSpec, as_compute_weight,
+                        is_packed)
+from repro.core.gemm import contract
 from repro.models.layers import dense_param
 from repro.parallel.mesh import shard
 
@@ -114,11 +115,10 @@ def route(cfg: ModelConfig, router_w, x_grp) -> Tuple[jnp.ndarray, jnp.ndarray, 
 
 
 def _expert_weight(w, dtype):
-    """Expert-stack accessor: GroupedPackedWeight passes through (packed in
-    the compute dtype at load time); raw [E,K,N] stacks are cast per call."""
-    if isinstance(w, GroupedPackedWeight):
-        return w
-    return w.astype(dtype)
+    """Expert-stack accessor: packed stacks pass through (packed in the
+    compute dtype at load time); raw [E,K,N] stacks are cast per call.
+    Weight-kind classification lives in core (no isinstance probes here)."""
+    return as_compute_weight(w, dtype)
 
 
 def apply_moe(cfg: ModelConfig, p: dict,
@@ -150,17 +150,18 @@ def apply_moe(cfg: ModelConfig, p: dict,
     wg = _expert_weight(p["wg"], x.dtype)
     wu = _expert_weight(p["wu"], x.dtype)
     wo = _expert_weight(p["wo"], x.dtype)
-    # gate/up as ONE grouped pass (fused silu-gate), then the down-projection
-    # — all three contractions through the grouped layered-GEMM dispatch.
-    # Raw weights pin the einsum strategy: the [G,E,C,d] capacity tensor must
-    # contract unfolded (GSPMD sharding stays intact) and with the exact
-    # historical lowering; the kernel path is selected by load-time packing
-    # (GroupedPackedWeight), which bypasses the strategy resolver entirely.
-    # Packed weights additionally go RAGGED: the routing counts ride down to
-    # the kernel grid, which skips every all-padding (expert, m-block) step.
-    # Padding rows of expert_in are zero, so ragged and padded agree exactly
-    # (silu(0)*0 == 0 and 0 @ wo == 0); the einsum path needs no counts.
-    packed = isinstance(wg, GroupedPackedWeight)
+    # gate/up as ONE grouped pass (fused silu-gate chain), then the down-
+    # projection — all three contractions DECLARED as ContractionSpecs and
+    # executed through the one dispatch point. Raw weights pin the einsum
+    # lowering: the [G,E,C,d] capacity tensor must contract unfolded (GSPMD
+    # sharding stays intact) and with the exact historical lowering; packed
+    # stacks dispatch to the grouped kernel lowerings by their declared
+    # weight kind. Packed specs additionally declare RAGGED counts: the
+    # routing counts ride down to the kernel grid, which skips every
+    # all-padding (expert, m-block) step. Padding rows of expert_in are
+    # zero, so ragged and padded agree exactly (silu(0)*0 == 0 and
+    # 0 @ wo == 0); the einsum path needs no counts.
+    packed = is_packed(wg)
     strategy = "auto" if packed else "grouped_einsum"
     rcounts = counts if packed else None
     # Static expected occupancy of the capacity tensor (the crossover prior):
@@ -168,10 +169,18 @@ def apply_moe(cfg: ModelConfig, p: dict,
     cap = dispatch.shape[-1]
     occ = min(1.0, (g * cfg.num_experts_per_tok)
               / max(cfg.num_experts * cap, 1))
-    h = grouped_silu_gate(expert_in, wg, wu, strategy=strategy,
-                          counts=rcounts, occupancy=occ)
-    expert_out = grouped_linear(h, wo, strategy=strategy, counts=rcounts,
-                                occupancy=occ)
+    e = cfg.num_experts
+
+    def gspec(xx, w, epilogue):
+        return ContractionSpec.grouped(
+            e, xx.shape[0] * xx.shape[2], xx.shape[-1],
+            w.n if packed else w.shape[-1], xx.dtype, w=w, epilogue=epilogue,
+            counts=rcounts is not None, occupancy=occ)
+
+    h = contract(gspec(expert_in, wg, EPILOGUE_SPECS["silu_gate"]),
+                 expert_in, wg, w2=wu, counts=rcounts, strategy=strategy)
+    expert_out = contract(gspec(h, wo, EPILOGUE_SPECS["none"]),
+                          h, wo, counts=rcounts, strategy=strategy)
     # NOTE: no sharding constraint on expert_out — pinning it would force the
     # TP partial-sum all-reduce onto the capacity tensor [G,E,C,d], which is
     # k*capacity_factor (2.5x) larger than the token tensor the combine

@@ -39,12 +39,13 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ContractionSpec, EPILOGUE_SPECS, dispatch, is_packed
 from repro.models import Model
 from repro.models.layers import pack_model_params
 
@@ -62,6 +63,58 @@ class ServeConfig:
                                   # needs pack_weights=True)
 
 
+def _find_moe_subtree(tree):
+    if not isinstance(tree, dict):
+        return None
+    if isinstance(tree.get("moe"), dict):
+        return tree["moe"]
+    for v in tree.values():
+        found = _find_moe_subtree(v)
+        if found is not None:
+            return found
+    return None
+
+
+def serving_dispatch_report(model_cfg, cfg: "ServeConfig",
+                            params) -> Dict[str, str]:
+    """Declare the serving step's canonical contractions as ContractionSpecs
+    and record which registered lowering ``dispatch`` chooses for each.
+
+    The declarative surface makes the serving plan inspectable before the
+    first token: the report keys are stable spec descriptions (LM head at
+    prefill/decode shapes; the MoE gate/up chain and down-projection when
+    the model has expert stacks), the values the chosen lowering names.
+    Representative shapes: prefill = one ``max_len`` sequence, decode = one
+    token; grouped specs use the routing group's capacity envelope with the
+    balanced-router occupancy prior ``1/capacity_factor``.
+    """
+    compute = model_cfg.compute_dtype
+    d, v = model_cfg.d_model, model_cfg.vocab_size
+    head = params.get("head_packed")
+    report = {}
+    for phase, m in (("prefill", cfg.max_len), ("decode", 1)):
+        spec = ContractionSpec.dense(m, d, v, compute, w=head, accum="f32")
+        report[f"lm_head.{phase}:{spec.describe()}"] = dispatch(spec).name
+    moe = _find_moe_subtree(params)
+    if moe is not None and getattr(model_cfg, "num_experts", 0) > 1:
+        from repro.models.moe import GROUP_SIZE, _capacity
+        e = model_cfg.num_experts
+        capacity = _capacity(min(GROUP_SIZE, cfg.max_len), model_cfg)
+        occ = min(1.0, 1.0 / model_cfg.capacity_factor)
+        wg, wo = moe["wg"], moe["wo"]
+        ragged = is_packed(wg)  # packed serving threads the routing counts
+        f = wg.n if is_packed(wg) else wg.shape[-1]
+        gate = ContractionSpec.grouped(
+            e, capacity, d, f, compute, w=wg,
+            epilogue=EPILOGUE_SPECS["silu_gate"], counts=ragged,
+            occupancy=occ)
+        down = ContractionSpec.grouped(
+            e, capacity, f, d, compute, w=wo, counts=ragged, occupancy=occ)
+        report[f"moe.gate_up:{gate.describe()}"] = dispatch(gate).name
+        report[f"moe.down:{down.describe()}"] = dispatch(down).name
+    return report
+
+
 class Engine:
     def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
         self.model = model
@@ -73,6 +126,9 @@ class Engine:
                                        quantize=cfg.quantize)
         self.params = params
         self.cfg = cfg
+        # The serving plan, declared: spec -> chosen lowering per canonical
+        # serving contraction (observability; see serving_dispatch_report).
+        self.dispatch_report = serving_dispatch_report(model.cfg, cfg, params)
         self._prefill = jax.jit(
             lambda p, batch: model.prefill(
                 p, batch, max_len=cfg.max_len,

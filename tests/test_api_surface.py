@@ -1,0 +1,112 @@
+"""API-surface stability check (wired as an explicit CI step).
+
+Snapshot-tests the public contract of ``repro.core``: the exported
+``__all__``, the facade signatures, the ContractionSpec/EpilogueSpec field
+lists, and the registered lowering names. A refactor that breaks the facade
+fails tier-1 LOUDLY here, with a diff against the committed snapshot —
+update the snapshot in the same PR that intentionally changes the surface.
+"""
+import dataclasses
+import inspect
+
+import repro.core as core
+from repro.core import ContractionSpec, EpilogueSpec, LOWERINGS
+
+EXPECTED_ALL = {
+    # declarative surface
+    "ContractionSpec", "EpilogueSpec", "EPILOGUE_SPECS", "as_epilogue_spec",
+    "contract", "dispatch", "dispatch_table",
+    # capability registry
+    "Lowering", "LOWERINGS", "register_lowering", "lowerings_for",
+    "weight_kind", "is_packed", "as_compute_weight",
+    # facades + packed weights
+    "matmul", "linear", "grouped_linear", "grouped_silu_gate",
+    "PackedWeight", "GroupedPackedWeight", "LayeredGemm",
+    # planner
+    "GemmPlan", "plan_gemm", "plan_grouped_gemm", "choose_strategy",
+    "choose_grouped_strategy", "should_pack",
+    # formats
+    "TileFormat", "ScaleSpec", "as_tile_format",
+    # legacy registry views
+    "STRATEGIES", "GROUPED_STRATEGIES", "run_strategy",
+    "run_grouped_strategy", "default_backend", "resolve_strategy",
+}
+
+# Frozen signature snapshot: the exact public calling conventions. A change
+# here is an API break — deliberate changes update this table in-PR.
+EXPECTED_SIGNATURES = {
+    "matmul": "(a: 'jnp.ndarray', b, c: 'Optional[jnp.ndarray]' = None, *, "
+              "alpha: 'float' = 1.0, beta: 'float' = 0.0, "
+              "strategy: 'str' = 'auto', plan: 'Optional[GemmPlan]' = None, "
+              "backend: 'Optional[str]' = None, out_dtype=None, "
+              "bias: 'Optional[jnp.ndarray]' = None, epilogue='none') "
+              "-> 'jnp.ndarray'",
+    "linear": "(x: 'jnp.ndarray', w, bias: 'Optional[jnp.ndarray]' = None, "
+              "*, strategy: 'str' = 'auto', "
+              "plan: 'Optional[GemmPlan]' = None, "
+              "backend: 'Optional[str]' = None, out_dtype=None, "
+              "accum: 'str' = 'native', epilogue='none') -> 'jnp.ndarray'",
+    "grouped_linear":
+        "(x: 'jnp.ndarray', w, bias: 'Optional[jnp.ndarray]' = None, *, "
+        "counts: 'Optional[jnp.ndarray]' = None, "
+        "occupancy: 'Optional[float]' = None, strategy: 'str' = 'auto', "
+        "backend: 'Optional[str]' = None, out_dtype=None, epilogue='none') "
+        "-> 'jnp.ndarray'",
+    "grouped_silu_gate":
+        "(x: 'jnp.ndarray', wg, wu, *, "
+        "counts: 'Optional[jnp.ndarray]' = None, "
+        "occupancy: 'Optional[float]' = None, strategy: 'str' = 'auto', "
+        "backend: 'Optional[str]' = None, out_dtype=None) -> 'jnp.ndarray'",
+    "contract":
+        "(spec: 'ContractionSpec', a: 'jnp.ndarray', w, *, w2=None, c=None, "
+        "bias=None, counts=None, alpha: 'float' = 1.0, "
+        "beta: 'float' = 0.0, strategy: 'Optional[str]' = None, "
+        "plan: 'Optional[GemmPlan]' = None, "
+        "backend: 'Optional[str]' = None) -> 'jnp.ndarray'",
+    "dispatch": "(spec: 'ContractionSpec', *, "
+                "strategy: 'Optional[str]' = None) -> 'Lowering'",
+    "resolve_strategy":
+        "(m: 'int', k: 'int', n: 'int', dtype, strategy: 'str' = 'auto') "
+        "-> 'str'",
+}
+
+EXPECTED_SPEC_FIELDS = ("kind", "m", "k", "n", "e", "dtype", "out_dtype",
+                        "weight", "b_format", "counts", "occupancy", "accum",
+                        "epilogue")
+EXPECTED_EPILOGUE_FIELDS = ("bias", "activation", "gate_mul")
+
+# The registered lowering names are part of the surface: strategy= values,
+# env-override values, and the golden dispatch table all key on them.
+EXPECTED_LOWERINGS = {
+    "dense": {"naive", "pluto", "intrinsic", "tiling", "tiling_packing",
+              "tiling_packing_fused", "vsx", "xla", "packed_weight"},
+    "grouped": {"grouped_einsum", "grouped_packed", "grouped_packed_ragged",
+                "grouped_packed_weight"},
+}
+
+
+def test_public_all_is_stable():
+    assert hasattr(core, "__all__"), "repro.core must pin __all__"
+    assert set(core.__all__) == EXPECTED_ALL
+    for name in core.__all__:
+        assert hasattr(core, name), f"__all__ exports missing name {name!r}"
+
+
+def test_facade_signatures_are_stable():
+    got = {name: str(inspect.signature(getattr(core, name)))
+           for name in EXPECTED_SIGNATURES}
+    assert got == EXPECTED_SIGNATURES
+
+
+def test_spec_dataclass_fields_are_stable():
+    assert tuple(f.name for f in dataclasses.fields(ContractionSpec)) \
+        == EXPECTED_SPEC_FIELDS
+    assert tuple(f.name for f in dataclasses.fields(EpilogueSpec)) \
+        == EXPECTED_EPILOGUE_FIELDS
+
+
+def test_registered_lowering_names_are_stable():
+    got = {"dense": {n for n, lw in LOWERINGS.items() if lw.kind == "dense"},
+           "grouped": {n for n, lw in LOWERINGS.items()
+                       if lw.kind == "grouped"}}
+    assert got == EXPECTED_LOWERINGS

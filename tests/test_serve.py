@@ -60,6 +60,32 @@ def test_engine_batched_requests_isolated(rng):
     np.testing.assert_array_equal(batched[:1], solo)
 
 
+def test_engine_dispatch_report(rng):
+    """The engine declares its serving contractions as ContractionSpecs and
+    reports the lowering each dispatches to — the serving plan is
+    inspectable before the first token."""
+    from repro.core import LOWERINGS
+    cfg, model, params = _model("mixtral-8x22b")
+    raw = Engine(model, params, ServeConfig(max_len=32))
+    packed = Engine(model, params, ServeConfig(max_len=32,
+                                               pack_weights=True))
+    for engine, n_min in ((raw, 4), (packed, 4)):
+        assert len(engine.dispatch_report) >= n_min
+        assert all(v in LOWERINGS for v in engine.dispatch_report.values())
+    # packed serving dispatches every reported contraction to a packed-
+    # weight kernel lowering; raw serving never does
+    assert all("packed_weight" in v
+               for v in packed.dispatch_report.values())
+    assert not any("packed_weight" in v
+                   for v in raw.dispatch_report.values())
+    # the MoE rows only appear for expert models, and declare ragged counts
+    # exactly when serving packed (the counts thread down to the kernels)
+    moe_keys = [k for k in packed.dispatch_report if k.startswith("moe.")]
+    assert moe_keys and all("|counts" in k for k in moe_keys)
+    dense_only = Engine(*_model()[1:], ServeConfig(max_len=16))
+    assert not any(k.startswith("moe.") for k in dense_only.dispatch_report)
+
+
 def test_sampling_temperature_is_deterministic_per_seed(rng):
     cfg, model, params = _model()
     prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 4)), jnp.int32)
