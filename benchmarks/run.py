@@ -72,6 +72,10 @@ def snapshot_baselines() -> dict:
     return baselines
 
 
+def _key_str(key) -> str:
+    return "/".join(str(p) for p in key if p is not None) or "<row>"
+
+
 def check_regressions(baselines: dict) -> int:
     """Compare fresh smoke speedups against the snapshot; return #failures.
 
@@ -79,19 +83,27 @@ def check_regressions(baselines: dict) -> int:
     committed baseline: the baseline-key diff that makes a newly added
     smoke bench fail CI until its ``*.smoke.json`` is committed, instead of
     passing unguarded.
+
+    Every comparison — pass or fail — is appended to
+    ``BENCH_check_report.json`` (machine-readable guard verdicts: artifact,
+    row key, field, fresh vs baseline value, status), uploaded as a CI
+    artifact so a red guard is diagnosable without replaying the run.
     """
     failures = 0
+    checks = []
     fresh_names = {p.name for p in ROOT.glob("BENCH_*.smoke.json")}
     for fname in sorted(fresh_names - set(baselines)):
         print(f"REGRESSION {fname}: smoke artifact has no committed "
               f"baseline — commit it so the guard covers this bench",
               file=sys.stderr)
+        checks.append({"artifact": fname, "status": "missing_baseline"})
         failures += 1
     for fname, base in baselines.items():
         path = ROOT / fname
         if not path.exists():
             print(f"REGRESSION {fname}: artifact missing after run",
                   file=sys.stderr)
+            checks.append({"artifact": fname, "status": "missing_artifact"})
             failures += 1
             continue
         fresh = json.loads(path.read_text())
@@ -101,13 +113,22 @@ def check_regressions(baselines: dict) -> int:
             if frow is None:
                 print(f"REGRESSION {fname}: row {_row_key(brow)} vanished",
                       file=sys.stderr)
+                checks.append({"artifact": fname,
+                               "row": _key_str(_row_key(brow)),
+                               "status": "missing_row"})
                 failures += 1
                 continue
             for field, bval in _speedup_fields(brow).items():
                 fval = frow.get(field)
                 if not isinstance(fval, (int, float)):
                     continue
-                if fval < bval / REGRESSION_TOLERANCE:
+                ok = fval >= bval / REGRESSION_TOLERANCE
+                checks.append({"artifact": fname,
+                               "row": _key_str(_row_key(brow)),
+                               "field": field, "fresh": fval,
+                               "baseline": bval,
+                               "status": "ok" if ok else "regression"})
+                if not ok:
                     print(f"REGRESSION {fname}: {_row_key(brow)} {field} "
                           f"{fval:.2f} < baseline {bval:.2f} / "
                           f"{REGRESSION_TOLERANCE}", file=sys.stderr)
@@ -116,6 +137,10 @@ def check_regressions(baselines: dict) -> int:
                     print(f"# guard ok {fname} {brow.get('name')}"
                           f"{'/' + brow['dist'] if brow.get('dist') else ''} "
                           f"{field}: {fval:.2f} (baseline {bval:.2f})")
+    report = {"tolerance": REGRESSION_TOLERANCE, "failures": failures,
+              "checks": checks}
+    (ROOT / "BENCH_check_report.json").write_text(
+        json.dumps(report, indent=2) + "\n")
     return failures
 
 

@@ -30,6 +30,16 @@ Execution (operand folding + running the chosen lowering) lives in
 over it. Extending the system — a new epilogue, a new weight format, a new
 kernel — means a new table entry or registry record, never an edit to the
 dispatch ladder.
+
+Guarded execution (:func:`fallback_chain` + :func:`run_guarded`): env/auto
+dispatch never crashes on a failing lowering. The runner classifies the
+failure (``repro.core.health``), records the degradation in the health
+registry, and degrades down the chain of supporting lowerings ordered by
+cost — bottoming out at the always-supporting jnp reference lowerings
+(:data:`REFERENCE_LOWERINGS`, cost :data:`REFERENCE_COST`: finite so they
+sit at the chain's end, huge so auto never picks them outright). An
+explicit ``strategy=`` choice is a contract and NEVER silently degrades —
+it raises.
 """
 from __future__ import annotations
 
@@ -40,6 +50,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import health
 from repro.core.epilogue import EpilogueSpec, as_epilogue_spec
 from repro.core.tile_format import TileFormat
 
@@ -268,6 +279,18 @@ class Lowering:
 
 COMPARISON_COST = float("inf")
 
+# The always-supporting jnp reference lowerings' cost: finite (they join
+# the guarded fallback chain, unlike the explicit-only COMPARISON_COST
+# lowerings) but astronomically above every real contender, so auto
+# dispatch never picks them while any kernel/library lowering supports the
+# spec — the golden dispatch tables are unchanged by their registration.
+REFERENCE_COST = 1e9
+
+# kind -> name of the always-supporting reference lowering (the guaranteed
+# bottom of every fallback chain). Populated by repro.core.strategy at
+# registration time.
+REFERENCE_LOWERINGS: Dict[str, str] = {}
+
 LOWERINGS: Dict[str, Lowering] = {}
 
 
@@ -332,9 +355,14 @@ def dispatch(spec: ContractionSpec, *,
         raise ValueError(
             f"lowering {strategy!r} does not support {spec.describe()}")
     env = os.environ.get(_ENV_STRATEGY)
-    if env:
+    if env and env != "auto":
         low = LOWERINGS.get(env)
-        if low is not None and low.kind == spec.kind:
+        if low is None:
+            # Same hard error as an unknown explicit strategy=: a typo'd
+            # env override must not silently fall through to auto.
+            raise KeyError(f"unknown lowering {env!r} ({_ENV_STRATEGY}); "
+                           f"one of {sorted(LOWERINGS)}")
+        if low.kind == spec.kind:
             chosen = _upgraded(low)
             if chosen is not None:
                 return chosen
@@ -342,6 +370,73 @@ def dispatch(spec: ContractionSpec, *,
     if not cands:
         raise ValueError(f"no registered lowering supports {spec.describe()}")
     return min(cands, key=lambda lw: (lw.cost(spec), lw.name))
+
+
+def fallback_chain(spec: ContractionSpec,
+                   chosen: Lowering) -> Tuple[Lowering, ...]:
+    """The guarded-dispatch degradation order for ``spec``.
+
+    ``chosen`` (the dispatch winner) first, then every other supporting
+    lowering ordered by ``(cost, name)`` — the explicit-only comparison
+    lowerings (``COMPARISON_COST``) excluded — bottoming out at the kind's
+    always-supporting jnp reference lowering. The chain is what
+    :func:`run_guarded` walks when a lowering fails under env/auto
+    dispatch.
+    """
+    _ensure_registered()
+    ref_name = REFERENCE_LOWERINGS.get(spec.kind)
+    others = sorted(
+        (lw for lw in lowerings_for(spec)
+         if lw.name not in (chosen.name, ref_name)
+         and lw.cost(spec) < COMPARISON_COST),
+        key=lambda lw: (lw.cost(spec), lw.name))
+    chain = [chosen] + others
+    if ref_name is not None and ref_name != chosen.name:
+        chain.append(LOWERINGS[ref_name])
+    return tuple(chain)
+
+
+def run_guarded(spec: ContractionSpec, chain: Tuple[Lowering, ...],
+                run_one: Callable[[Lowering], jnp.ndarray]) -> jnp.ndarray:
+    """Execute ``run_one(lowering)`` down a fallback chain (env/auto only).
+
+    A failing lowering is classified (``health.classify_failure``), the
+    degradation recorded in the health registry, and the next chain entry
+    tried; with the opt-in numerics guard armed, a NaN/Inf output degrades
+    the same way (eager execution only — tracer outputs are not checked).
+    The LAST chain entry is never degraded past: its failure propagates, so
+    genuine contract violations (operand mismatches) still surface.
+    """
+    last = len(chain) - 1
+    for i, low in enumerate(chain):
+        try:
+            out = run_one(low)
+        except Exception as exc:  # noqa: BLE001 — classify, then degrade
+            if i == last:
+                raise
+            health.record_degradation(
+                spec.describe(), low.name, health.classify_failure(exc),
+                chain[i + 1].name, detail=f"{type(exc).__name__}: {exc}")
+            continue
+        if i < last and health.numerics_guard_enabled() \
+                and health.has_nonfinite(out):
+            health.record_degradation(
+                spec.describe(), low.name, "numerics", chain[i + 1].name,
+                detail="non-finite values in output")
+            continue
+        return out
+    raise AssertionError("unreachable: empty fallback chain")
+
+
+def check_explicit_numerics(spec: ContractionSpec, low: Lowering,
+                            out) -> None:
+    """The explicit-strategy side of the numerics guard: an explicit choice
+    never degrades, so a non-finite output RAISES under the guard."""
+    if health.numerics_guard_enabled() and health.has_nonfinite(out):
+        raise health.NumericsError(
+            f"non-finite values in output of explicit lowering "
+            f"{low.name!r} for {spec.describe()} "
+            f"({health.ENV_NUMERICS_GUARD})")
 
 
 def dispatch_table(specs) -> Dict[str, str]:

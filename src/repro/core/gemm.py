@@ -114,26 +114,43 @@ def contract(spec: ContractionSpec, a: jnp.ndarray, w, *, w2=None, c=None,
     ``bias``/``counts`` the operands the spec's epilogue/ragged flags
     declare. ``strategy`` forces an explicit lowering (explicit > env >
     auto — see :func:`repro.core.contraction.dispatch`).
+
+    Env/auto dispatch is GUARDED: a failing lowering is classified and
+    recorded in the dispatch-health registry (``repro.core.health``) and
+    the runner degrades down the fallback chain to the jnp reference path.
+    An explicit ``strategy=`` never degrades — its failures raise.
     """
     _check_operands(spec, w, w2, bias, counts)
     _check_gemm_extras(spec, c, alpha, beta)
-    low = dispatch(spec, strategy=strategy)
-    if spec.kind == "dense":
-        if low.folds and a.ndim != 2:
-            lead = a.shape[:-1]
-            out = low.run(spec, a.reshape(-1, a.shape[-1]), w, w2=w2, c=c,
-                          bias=bias, counts=counts, alpha=alpha, beta=beta,
-                          plan=plan, backend=backend)
-            return out.reshape(*lead, out.shape[-1])
+
+    def run_one(low):
+        # Fold/restore is per-lowering (low.folds differs down a fallback
+        # chain), so the whole body is the guarded runner's unit of retry.
+        if spec.kind == "dense":
+            if low.folds and a.ndim != 2:
+                lead = a.shape[:-1]
+                out = low.run(spec, a.reshape(-1, a.shape[-1]), w, w2=w2,
+                              c=c, bias=bias, counts=counts, alpha=alpha,
+                              beta=beta, plan=plan, backend=backend)
+                return out.reshape(*lead, out.shape[-1])
+            return low.run(spec, a, w, w2=w2, c=c, bias=bias, counts=counts,
+                           alpha=alpha, beta=beta, plan=plan, backend=backend)
+        if low.folds:
+            x3, fc, restore = fold_grouped(a, counts)
+            return restore(low.run(spec, x3, w, w2=w2, c=c, bias=bias,
+                                   counts=fc, alpha=alpha, beta=beta,
+                                   plan=plan, backend=backend))
         return low.run(spec, a, w, w2=w2, c=c, bias=bias, counts=counts,
                        alpha=alpha, beta=beta, plan=plan, backend=backend)
-    if low.folds:
-        x3, fc, restore = fold_grouped(a, counts)
-        return restore(low.run(spec, x3, w, w2=w2, c=c, bias=bias, counts=fc,
-                               alpha=alpha, beta=beta, plan=plan,
-                               backend=backend))
-    return low.run(spec, a, w, w2=w2, c=c, bias=bias, counts=counts,
-                   alpha=alpha, beta=beta, plan=plan, backend=backend)
+
+    low = dispatch(spec, strategy=strategy)
+    if strategy is not None and strategy != "auto":
+        # An explicit choice is a contract: no degradation, and under the
+        # opt-in numerics guard a non-finite output raises.
+        out = run_one(low)
+        ctr.check_explicit_numerics(spec, low, out)
+        return out
+    return ctr.run_guarded(spec, ctr.fallback_chain(spec, low), run_one)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,157 @@
+"""Dispatch-health registry: every guarded-dispatch degradation, recorded.
+
+The guarded execution layer (``repro.core.contraction.run_guarded``) never
+hides a fallback: when an env/auto-dispatched lowering fails and the runner
+degrades to the next-cheapest supporting lowering, the event lands here —
+per ``(spec, lowering)``: how often it failed, the classified cause, the
+fallback that took over, and the last failure's detail string. Serving
+surfaces the registry through ``Engine.health_report()`` so a degraded
+deployment tells you it is degraded instead of silently running the slow
+reference path.
+
+Failure classes (:data:`FAILURE_CLASSES`):
+
+  * ``compile``      Pallas/Mosaic lowering or compilation errors
+  * ``resource``     VMEM/HBM budget overflows (``plan_gemm`` budget
+                     validation, RESOURCE_EXHAUSTED, out-of-memory)
+  * ``unsupported``  backend/feature not supported by the lowering
+  * ``numerics``     NaN/Inf in the output (opt-in: ``REPRO_NUMERICS_GUARD``)
+  * ``runtime``      everything else (kernel execution failures)
+
+:func:`classify_failure` maps an exception to a class: an exception that
+declares ``failure_class`` (injected faults, :class:`NumericsError`) wins;
+otherwise the type/message is matched. The numerics guard is opt-in because
+it synchronizes on the output value — it only applies to eagerly-executed
+contractions (under a ``jit`` trace the output is a tracer and the check is
+skipped; degradation decisions are baked in at trace time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FAILURE_CLASSES = ("compile", "resource", "unsupported", "numerics",
+                   "runtime")
+
+ENV_NUMERICS_GUARD = "REPRO_NUMERICS_GUARD"
+
+
+class NumericsError(FloatingPointError):
+    """Non-finite values in a contraction output under the numerics guard.
+    Raised (never degraded) for explicit ``strategy=`` choices."""
+
+    failure_class = "numerics"
+
+
+def numerics_guard_enabled() -> bool:
+    """Opt-in NaN/Inf output guard (``REPRO_NUMERICS_GUARD=1``)."""
+    return os.environ.get(ENV_NUMERICS_GUARD, "").lower() in (
+        "1", "true", "on", "yes")
+
+
+def has_nonfinite(out) -> bool:
+    """True when ``out`` contains NaN/Inf. Tracers (jit) return False: the
+    value is unknown at trace time, so the numerics guard is eager-only."""
+    if isinstance(out, jax.core.Tracer):
+        return False
+    return not bool(jnp.all(jnp.isfinite(jnp.asarray(out).astype(
+        jnp.float32))))
+
+
+def classify_failure(exc: BaseException) -> str:
+    """Map an exception from a lowering's run to a failure class."""
+    declared = getattr(exc, "failure_class", None)
+    if declared in FAILURE_CLASSES:
+        return declared
+    msg = str(exc).lower()
+    if isinstance(exc, MemoryError) or "resource_exhausted" in msg \
+            or "vmem" in msg or "out of memory" in msg:
+        return "resource"
+    if isinstance(exc, NotImplementedError) or "unsupported" in msg \
+            or "not supported" in msg or "not implemented" in msg:
+        return "unsupported"
+    if "mosaic" in msg or "compil" in msg or "lowering" in msg:
+        return "compile"
+    return "runtime"
+
+
+@dataclasses.dataclass
+class DegradationRecord:
+    """One (spec, lowering) row of the health registry."""
+
+    spec: str        # ContractionSpec.describe() of the degraded contraction
+    lowering: str    # the lowering that failed
+    cause: str       # classified failure class of the LAST failure
+    fallback: str    # the lowering the runner degraded to (last)
+    detail: str = ""  # last failure's "ExcType: message" (or guard note)
+    count: int = 1   # how many times this (spec, lowering) degraded
+
+
+class HealthRegistry:
+    """Thread-safe per-(spec, lowering) degradation counters."""
+
+    def __init__(self):
+        self._records: Dict[Tuple[str, str], DegradationRecord] = {}
+        self._lock = threading.Lock()
+
+    def record(self, spec: str, lowering: str, cause: str, fallback: str,
+               detail: str = "") -> None:
+        with self._lock:
+            rec = self._records.get((spec, lowering))
+            if rec is None:
+                self._records[(spec, lowering)] = DegradationRecord(
+                    spec=spec, lowering=lowering, cause=cause,
+                    fallback=fallback, detail=detail)
+            else:
+                rec.count += 1
+                rec.cause = cause
+                rec.fallback = fallback
+                rec.detail = detail
+
+    def records(self) -> Tuple[DegradationRecord, ...]:
+        with self._lock:
+            return tuple(dataclasses.replace(r)
+                         for r in self._records.values())
+
+    def report(self) -> Dict[str, dict]:
+        """``{"<spec> -> <lowering>": {count, cause, fallback, detail}}`` —
+        plain dicts, JSON-serializable (monitoring export)."""
+        with self._lock:
+            return {f"{r.spec} -> {r.lowering}": {
+                "count": r.count, "cause": r.cause,
+                "fallback": r.fallback, "detail": r.detail,
+            } for r in self._records.values()}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._records.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._records)
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+
+# The process-global registry the guarded runner records into and
+# Engine.health_report() reads from.
+HEALTH = HealthRegistry()
+
+
+def record_degradation(spec: str, lowering: str, cause: str, fallback: str,
+                       detail: str = "") -> None:
+    HEALTH.record(spec, lowering, cause, fallback, detail)
+
+
+def health_report() -> Dict[str, dict]:
+    return HEALTH.report()
+
+
+def clear_health() -> None:
+    HEALTH.clear()

@@ -51,6 +51,7 @@ from repro.kernels import ref
 from repro.kernels.gemm_grouped import (gemm_grouped_packed,
                                         gemm_grouped_packed_ragged)
 from repro.kernels.gemm_packed import gemm_packed_fused_a
+from repro.testing import faults
 
 
 @dataclasses.dataclass
@@ -210,21 +211,27 @@ class PackedWeight(_PackedCommon):
         per-tile dequant ahead of them when the weight is quantized.
         """
         self._check_k(a.shape[1])
+        faults.maybe_fail("kernel_compile")
         be = backend or default_backend()
         bm = self._clamp_bm(a.shape[0], a.dtype)
+        scales = faults.corrupt("scale_grid", self.scales)
         if be == "pallas":
-            return gemm_packed_fused_a(a, self.packed, self.n, bm=bm,
-                                       layout_b=self.plan.layout_b,
-                                       b_scales=self.scales, bias=bias,
-                                       epilogue=epilogue,
-                                       out_dtype=out_dtype or a.dtype)
+            out = gemm_packed_fused_a(a, self.packed, self.n, bm=bm,
+                                      layout_b=self.plan.layout_b,
+                                      b_scales=scales, bias=bias,
+                                      epilogue=epilogue,
+                                      out_dtype=out_dtype or a.dtype)
+            faults.maybe_fail("kernel_run")
+            return out
         acc = ref.fused_packed_acc_ref(a, self.packed, self.n,
                                        layout_b=self.plan.layout_b,
-                                       bm=bm, b_scales=self.scales)
+                                       bm=bm, b_scales=scales)
         if bias is not None:
             acc = acc + bias.astype(acc.dtype)
         out = apply_epilogue(epilogue, acc)
-        return out.astype(out_dtype or a.dtype)
+        out = out.astype(out_dtype or a.dtype)
+        faults.maybe_fail("kernel_run")
+        return out
 
 
 def _packed_weight_flatten(pw: PackedWeight):
@@ -348,29 +355,35 @@ class GroupedPackedWeight(_PackedCommon):
         if (epilogue == "silu_gate") != (b2 is not None):
             raise ValueError("epilogue='silu_gate' requires the partner "
                              "stack (use silu_gate(), not matmul())")
+        faults.maybe_fail("kernel_compile")
         e, s, c, k = a.shape
         be = backend or default_backend()
         bm = self._clamp_bm(c, a.dtype)
+        scales = faults.corrupt("scale_grid", self.scales)
         sub, _ = mdt.alignment(a.dtype)
         if be == "pallas" and c > sub:
-            return gemm_grouped_packed_ragged(
+            out = gemm_grouped_packed_ragged(
                 a, self.packed, self.n, counts,
                 b2_packed=b2.packed if b2 is not None else None,
-                bm=bm, layout_b=self.plan.layout_b, b_scales=self.scales,
+                bm=bm, layout_b=self.plan.layout_b, b_scales=scales,
                 b2_scales=b2.scales if b2 is not None else None, bias=bias,
                 epilogue=epilogue, out_dtype=out_dtype or a.dtype)
+            faults.maybe_fail("kernel_run")
+            return out
         b_full = ref.unpack_b_grouped_ref(self.packed, self.k, self.n,
                                           self.plan.layout_b,
-                                          scales=self.scales)
+                                          scales=scales)
         b2_full = (ref.unpack_b_grouped_ref(b2.packed, self.k, self.n,
                                             self.plan.layout_b,
                                             scales=b2.scales)
                    if b2 is not None else None)
         epi = (None if epilogue in ("none", "silu_gate")
                else lambda x: apply_epilogue(epilogue, x))
-        return ref.grouped_ragged_ref(a, b_full, counts, b2=b2_full,
-                                      bias=bias, epilogue_fn=epi,
-                                      out_dtype=out_dtype or a.dtype)
+        out = ref.grouped_ragged_ref(a, b_full, counts, b2=b2_full,
+                                     bias=bias, epilogue_fn=epi,
+                                     out_dtype=out_dtype or a.dtype)
+        faults.maybe_fail("kernel_run")
+        return out
 
     def _spec(self, a3, *, epilogue, bias, counts, out_dtype):
         return ContractionSpec.grouped(
@@ -385,12 +398,20 @@ class GroupedPackedWeight(_PackedCommon):
 
         A spec facade over the one dispatch point (the operands arrive
         already expert-major, so this calls ``dispatch`` directly on the
-        folded form). With ``counts`` ([E, S] int32) the call is RAGGED:
-        ``a`` must be [E, S, C, K] (S capacity segments of C rows per
-        expert) and rows at/past ``counts[e, s]`` are padding — skipped by
-        the kernel grid and zero in the [E, S, C, N] output.
+        folded form), with the guarded-degradation runner around the chosen
+        lowering (env/auto choices degrade down the fallback chain on
+        failure; see ``repro.core.contraction.run_guarded``). With
+        ``counts`` ([E, S] int32) the call is RAGGED: ``a`` must be
+        [E, S, C, K] (S capacity segments of C rows per expert) and rows
+        at/past ``counts[e, s]`` are padding — skipped by the kernel grid
+        and zero in the [E, S, C, N] output.
         """
         epi = as_epilogue_spec(epilogue)
+        if epi.gate_mul:
+            # Contract violation, not a lowering failure: reject before
+            # dispatch so the guarded chain never swallows it.
+            raise ValueError("epilogue='silu_gate' requires the partner "
+                             "stack (use silu_gate(), not matmul())")
         if counts is not None:
             self._check_ragged(a, counts)
             a3 = a.reshape(self.e, -1, self.k)
@@ -399,8 +420,10 @@ class GroupedPackedWeight(_PackedCommon):
             a3 = a
         spec = self._spec(a3, epilogue=epi, bias=bias,
                           counts=counts is not None, out_dtype=out_dtype)
-        out = ctr.dispatch(spec).run(spec, a3, self, bias=bias,
-                                     counts=counts, backend=backend)
+        out = ctr.run_guarded(
+            spec, ctr.fallback_chain(spec, ctr.dispatch(spec)),
+            lambda lw: lw.run(spec, a3, self, bias=bias, counts=counts,
+                              backend=backend))
         return out.reshape(a.shape[:-1] + (self.n,))
 
     def silu_gate(self, up: "GroupedPackedWeight", a: jnp.ndarray, *,
@@ -425,8 +448,10 @@ class GroupedPackedWeight(_PackedCommon):
         spec = self._spec(a3, epilogue=as_epilogue_spec("silu_gate"),
                           bias=None, counts=counts is not None,
                           out_dtype=out_dtype)
-        out = ctr.dispatch(spec).run(spec, a3, self, w2=up, counts=counts,
-                                     backend=backend)
+        out = ctr.run_guarded(
+            spec, ctr.fallback_chain(spec, ctr.dispatch(spec)),
+            lambda lw: lw.run(spec, a3, self, w2=up, counts=counts,
+                              backend=backend))
         return out.reshape(a.shape[:-1] + (self.n,))
 
     def _matmul_impl(self, a, *, bias, epilogue: str, out_dtype,
@@ -435,38 +460,50 @@ class GroupedPackedWeight(_PackedCommon):
         contiguously from the load-time-packed stack; A is consumed from
         its natural [E, M, K] layout. Decode-shaped per-expert M keeps the
         jnp reference contraction (see :meth:`_use_kernel`)."""
+        faults.maybe_fail("kernel_compile")
         bm = self._clamp_bm(a.shape[1], a.dtype)
+        scales = faults.corrupt("scale_grid", self.scales)
         if self._use_kernel(a, backend):
-            return gemm_grouped_packed(a, self.packed, self.n, bm=bm,
-                                       layout_b=self.plan.layout_b,
-                                       b_scales=self.scales, bias=bias,
-                                       epilogue=epilogue,
-                                       out_dtype=out_dtype or a.dtype)
+            out = gemm_grouped_packed(a, self.packed, self.n, bm=bm,
+                                      layout_b=self.plan.layout_b,
+                                      b_scales=scales, bias=bias,
+                                      epilogue=epilogue,
+                                      out_dtype=out_dtype or a.dtype)
+            faults.maybe_fail("kernel_run")
+            return out
         acc = ref.grouped_fused_acc_ref(a, self.packed, self.n,
                                         layout_b=self.plan.layout_b,
-                                        bm=bm, b_scales=self.scales)
-        return strat.grouped_epilogue(acc, None, bias, epilogue,
-                                      out_dtype or a.dtype)
+                                        bm=bm, b_scales=scales)
+        out = strat.grouped_epilogue(acc, None, bias, epilogue,
+                                     out_dtype or a.dtype)
+        faults.maybe_fail("kernel_run")
+        return out
 
     def _silu_gate_impl(self, up: "GroupedPackedWeight", a, *, out_dtype,
                         backend) -> jnp.ndarray:
+        faults.maybe_fail("kernel_compile")
         bm = self._clamp_bm(a.shape[1], a.dtype)
+        scales = faults.corrupt("scale_grid", self.scales)
         if self._use_kernel(a, backend):
-            return gemm_grouped_packed(a, self.packed, self.n,
-                                       b2_packed=up.packed, bm=bm,
-                                       layout_b=self.plan.layout_b,
-                                       b_scales=self.scales,
-                                       b2_scales=up.scales,
-                                       epilogue="silu_gate",
-                                       out_dtype=out_dtype or a.dtype)
+            out = gemm_grouped_packed(a, self.packed, self.n,
+                                      b2_packed=up.packed, bm=bm,
+                                      layout_b=self.plan.layout_b,
+                                      b_scales=scales,
+                                      b2_scales=up.scales,
+                                      epilogue="silu_gate",
+                                      out_dtype=out_dtype or a.dtype)
+            faults.maybe_fail("kernel_run")
+            return out
         gate = ref.grouped_fused_acc_ref(a, self.packed, self.n,
                                          layout_b=self.plan.layout_b,
-                                         bm=bm, b_scales=self.scales)
+                                         bm=bm, b_scales=scales)
         up_acc = ref.grouped_fused_acc_ref(a, up.packed, up.n,
                                            layout_b=up.plan.layout_b,
                                            bm=bm, b_scales=up.scales)
-        return strat.grouped_epilogue(gate, up_acc, None, "silu_gate",
-                                      out_dtype or a.dtype)
+        out = strat.grouped_epilogue(gate, up_acc, None, "silu_gate",
+                                     out_dtype or a.dtype)
+        faults.maybe_fail("kernel_run")
+        return out
 
 
 def _grouped_weight_flatten(gw: GroupedPackedWeight):

@@ -54,6 +54,7 @@ from repro.kernels.gemm_packed import gemm_packed, gemm_packed_fused_a
 from repro.kernels.gemm_tiled import gemm_tiled
 from repro.kernels.gemm_vsx_like import matmul_vsx_like
 from repro.kernels.pack import pack_a, pack_b, pack_b_grouped
+from repro.testing import faults
 
 STRATEGIES = ("naive", "pluto", "intrinsic", "tiling", "tiling_packing",
               "tiling_packing_fused", "vsx", "xla")
@@ -199,12 +200,14 @@ def _pack_b_plan(plan: GemmPlan, b, *, backend: str, interpret=None):
     expression of the load-time path PackedWeight amortizes; a float plan
     packs B's own dtype.
     """
+    faults.maybe_fail("pack")
     fmt = _plan_pack_format(plan, b)
     if backend == "pallas":
         out = pack_b(b, fmt, interpret=interpret)
     else:
         out = ref.pack_b_ref(b, fmt)
-    return normalize_packed(out, fmt)
+    packed, scales = normalize_packed(out, fmt)
+    return packed, faults.corrupt("scale_grid", scales)
 
 
 def _pack_b_grouped_plan(plan: GemmPlan, b, *, backend: str, interpret=None):
@@ -213,12 +216,14 @@ def _pack_b_grouped_plan(plan: GemmPlan, b, *, backend: str, interpret=None):
     (``b_dtype="int8"``) quantizes per expert here."""
     if b is None:
         return None, None
+    faults.maybe_fail("pack")
     fmt = _plan_pack_format(plan, b)
     if backend == "pallas":
         out = pack_b_grouped(b, fmt, interpret=interpret)
     else:
         out = ref.pack_b_grouped_ref(b, fmt)
-    return normalize_packed(out, fmt)
+    packed, scales = normalize_packed(out, fmt)
+    return packed, faults.corrupt("scale_grid", scales)
 
 
 def _packing_fused_jnp(a, b, c, alpha, beta, plan, out_dtype, *, bias=None,
@@ -504,10 +509,13 @@ def _dense_run(name: str):
     def _run(spec, a, w, *, w2=None, c=None, bias=None, counts=None,
              alpha=1.0, beta=0.0, plan=None, backend=None, interpret=None):
         assert w2 is None and counts is None, (name, spec)
-        return run(name, a, w, c, alpha=alpha, beta=beta, plan=plan,
-                   backend=backend or ctr.default_backend(),
-                   out_dtype=spec.resolved_out_dtype(a, c), bias=bias,
-                   epilogue=spec.epilogue.kernel_name, interpret=interpret)
+        faults.maybe_fail("kernel_compile")
+        out = run(name, a, w, c, alpha=alpha, beta=beta, plan=plan,
+                  backend=backend or ctr.default_backend(),
+                  out_dtype=spec.resolved_out_dtype(a, c), bias=bias,
+                  epilogue=spec.epilogue.kernel_name, interpret=interpret)
+        faults.maybe_fail("kernel_run")
+        return out
     return _run
 
 
@@ -523,6 +531,7 @@ def _xla_facade_run(spec, a, w, *, w2=None, c=None, bias=None, counts=None,
     contractions all-reduce narrow, with the epilogue in the output dtype.
     """
     assert w2 is None and counts is None, spec
+    faults.maybe_fail("kernel_compile")
     out_dtype = spec.resolved_out_dtype(a, c)
     pet = jnp.float32 if spec.accum == "f32" else None
     acc = jnp.einsum("...k,kn->...n", a, w, preferred_element_type=pet)
@@ -531,10 +540,14 @@ def _xla_facade_run(spec, a, w, *, w2=None, c=None, bias=None, counts=None,
         out = alpha * acc
         if c is not None and beta != 0:
             out = out + beta * c.astype(acc.dtype)
-        return epi.apply(out, bias=bias).astype(out_dtype)
+        out = epi.apply(out, bias=bias).astype(out_dtype)
+        faults.maybe_fail("kernel_run")
+        return out
     if c is not None or alpha != 1.0 or beta != 0.0:
         raise ValueError("c/alpha/beta need accum='f32' (matmul semantics)")
-    return epi.apply(acc.astype(out_dtype), bias=bias)
+    out = epi.apply(acc.astype(out_dtype), bias=bias)
+    faults.maybe_fail("kernel_run")
+    return out
 
 
 def _grouped_auto(spec: ctr.ContractionSpec) -> str:
@@ -559,23 +572,89 @@ def _grouped_einsum_run(spec, a, w, *, w2=None, c=None, bias=None,
     contract lowers to the output mask — XLA:CPU's monolithic batched GEMM
     beats runtime skipping at serving shapes (measured; see
     benchmarks/bench_moe_grouped.py)."""
+    faults.maybe_fail("kernel_compile")
     acc = jnp.einsum("...emk,ekn->...emn", a, w)
     acc2 = jnp.einsum("...emk,ekn->...emn", a, w2) if w2 is not None else None
     out = grouped_epilogue(acc, acc2, bias, spec.epilogue.kernel_name,
                            spec.resolved_out_dtype(a))
-    return mask_ragged_rows(out, counts) if counts is not None else out
+    out = mask_ragged_rows(out, counts) if counts is not None else out
+    faults.maybe_fail("kernel_run")
+    return out
 
 
 def _grouped_kernel_run(name: str):
     def _run(spec, a, w, *, w2=None, c=None, bias=None, counts=None,
              alpha=1.0, beta=0.0, plan=None, backend=None, interpret=None):
-        return run_grouped(name, a, w, b2=w2, counts=counts,
-                           backend=backend or ctr.default_backend(),
-                           plan=plan, bias=bias,
-                           epilogue=spec.epilogue.kernel_name,
-                           out_dtype=spec.resolved_out_dtype(a),
-                           interpret=interpret)
+        faults.maybe_fail("kernel_compile")
+        out = run_grouped(name, a, w, b2=w2, counts=counts,
+                          backend=backend or ctr.default_backend(),
+                          plan=plan, bias=bias,
+                          epilogue=spec.epilogue.kernel_name,
+                          out_dtype=spec.resolved_out_dtype(a),
+                          interpret=interpret)
+        faults.maybe_fail("kernel_run")
+        return out
     return _run
+
+
+# ---------------------------------------------------------------------------
+# Reference lowerings: the guaranteed bottom of every guarded fallback chain
+# ---------------------------------------------------------------------------
+
+def _dense_ref_run(spec, a, w, *, w2=None, c=None, bias=None, counts=None,
+                   alpha=1.0, beta=0.0, plan=None, backend=None,
+                   interpret=None):
+    """Always-supporting dense reference: plain jnp matmul in f32.
+
+    The last resort of the guarded runner — no kernels, no packing, no
+    fault-injection sites inside. Packed weights are unpacked (and
+    dequantized) to their natural [K, N] form first; accumulation is f32
+    regardless of ``spec.accum`` (a degraded contraction trades the native
+    accumulation contract for completing at all).
+    """
+    assert w2 is None and counts is None, spec
+    if ctr.weight_kind(w) == "packed":
+        b = (ref.unpack_b_dequant_ref(w.packed, w.scales, w.k, w.n,
+                                      w.plan.layout_b)
+             if w.scales is not None
+             else ref.unpack_b_ref(w.packed, w.k, w.n, w.plan.layout_b))
+    else:
+        b = w
+    acc = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    return _epilogue(acc, c, alpha, beta, spec.resolved_out_dtype(a, c),
+                     bias, spec.epilogue.kernel_name)
+
+
+def _grouped_ref_run(spec, a, w, *, w2=None, c=None, bias=None, counts=None,
+                     alpha=1.0, beta=0.0, plan=None, backend=None,
+                     interpret=None):
+    """Always-supporting grouped reference: batched f32 einsum (ragged
+    contract via the masked oracle) on unpacked natural-layout weights."""
+    if spec.epilogue.gate_mul and w2 is None:
+        raise ValueError("epilogue='silu_gate' requires the partner stack")
+
+    def _natural(wx):
+        if ctr.weight_kind(wx) != "packed":
+            return wx
+        return ref.unpack_b_grouped_ref(wx.packed, wx.k, wx.n,
+                                        wx.plan.layout_b, scales=wx.scales)
+
+    b, b2 = _natural(w), (_natural(w2) if w2 is not None else None)
+    e, m, k = a.shape
+    out_dtype = spec.resolved_out_dtype(a)
+    epi = spec.epilogue.kernel_name
+    if counts is not None:
+        s = counts.shape[1]
+        epi_fn = (None if epi in ("none", "silu_gate")
+                  else lambda x: apply_epilogue(epi, x))
+        return ref.grouped_ragged_ref(
+            a.reshape(e, s, m // s, k), b, counts, b2=b2, bias=bias,
+            epilogue_fn=epi_fn, out_dtype=out_dtype).reshape(e, m, -1)
+    a32 = a.astype(jnp.float32)
+    acc = jnp.einsum("emk,ekn->emn", a32, b.astype(jnp.float32))
+    acc2 = (jnp.einsum("emk,ekn->emn", a32, b2.astype(jnp.float32))
+            if b2 is not None else None)
+    return grouped_epilogue(acc, acc2, bias, epi, out_dtype)
 
 
 for _name in STRATEGIES:
@@ -605,3 +684,15 @@ ctr.register_lowering(
     supports=lambda spec: spec.weight == "raw" and spec.counts,
     cost=_grouped_cost("grouped_packed_ragged"),
     run=_grouped_kernel_run("grouped_packed_ragged"))
+
+# The reference lowerings support EVERYTHING of their kind at an
+# astronomical-but-finite cost: never the auto pick while any real lowering
+# supports the spec, always the last entry of a guarded fallback chain.
+ctr.register_lowering(
+    "jnp_ref", "dense", supports=lambda spec: True,
+    cost=lambda spec: ctr.REFERENCE_COST, run=_dense_ref_run)
+ctr.register_lowering(
+    "grouped_jnp_ref", "grouped", supports=lambda spec: True,
+    cost=lambda spec: ctr.REFERENCE_COST, run=_grouped_ref_run)
+ctr.REFERENCE_LOWERINGS.update({"dense": "jnp_ref",
+                                "grouped": "grouped_jnp_ref"})

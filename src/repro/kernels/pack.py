@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 from repro.core.tile_format import (TileFormat, as_tile_format,
                                     quantize_tiles)
 from repro.kernels.common import cdiv, default_interpret, pad2d, pallas_kwargs
+from repro.testing import faults
 
 
 def _pack_kernel(x_ref, o_ref, *, transpose: bool):
@@ -92,6 +93,7 @@ def _quantize_natural(b: jnp.ndarray, fmt: TileFormat):
 def pack_a(a: jnp.ndarray, bm: int, bk: int, layout: str = "row",
            interpret: bool | None = None) -> jnp.ndarray:
     """A[M,K] -> [Mb, Kb, bm, bk] ("row") or [Mb, Kb, bk, bm] ("col")."""
+    faults.maybe_fail("pack")
     return _pack(a, bm, bk, grid_order="row", layout=layout, interpret=interpret)
 
 
@@ -102,6 +104,7 @@ def pack_b(b: jnp.ndarray, bk, bn: int | None = None, layout: str = "row",
     ``bk`` may be a :class:`TileFormat` (then ``bn``/``layout`` are unused);
     a quantized format returns ``(packed, scales)``.
     """
+    faults.maybe_fail("pack")
     fmt = as_tile_format(bk, bn, layout=layout, dtype=b.dtype)
     scales = None
     if fmt.is_quantized:
@@ -122,6 +125,7 @@ def pack_b_grouped(b: jnp.ndarray, bk, bn: int | None = None,
     ``bk`` may be a :class:`TileFormat`; quantized formats return
     ``(packed, scales)`` with per-expert scale grids [E, Nb, Kb].
     """
+    faults.maybe_fail("pack")
     fmt = as_tile_format(bk, bn, layout=layout, dtype=b.dtype)
     if interpret is None:
         interpret = default_interpret()

@@ -24,6 +24,11 @@ Production posture:
     early-out the K-loop, and the partial block is clamped with an iota
     mask. A skewed decode/prefill router therefore pays for the tokens it
     actually routed, not for ``capacity_factor`` times that;
+  * serving contractions are GUARDED: env/auto dispatch degrades a failing
+    lowering to the next-cheapest supporting one (bottoming out at the jnp
+    reference path), recording every degradation in the dispatch-health
+    registry — a degraded deployment keeps serving AND says so through
+    ``Engine.health_report()`` instead of crashing or silently slowing.
   * ``ServeConfig.quantize="int8"`` (requires ``pack_weights=True``)
     quantizes every packed weight at load — dense projections, the LM head,
     and all three MoE expert stacks — to int8 tiles with per-(Kb,Nb)-tile
@@ -46,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ContractionSpec, EPILOGUE_SPECS, dispatch, is_packed
+from repro.core import health
 from repro.models import Model
 from repro.models.layers import pack_model_params
 
@@ -134,6 +140,22 @@ class Engine:
                 p, batch, max_len=cfg.max_len,
                 cache_dtype=jnp.dtype(cfg.cache_dtype)))
         self._decode = jax.jit(model.decode)
+
+    def health_report(self) -> Dict[str, dict]:
+        """The dispatch-health registry's degradation report.
+
+        Empty dict == healthy: every contraction ran on its dispatch
+        winner. A non-empty report means the guarded runner degraded at
+        least one ``(spec, lowering)`` — each entry records the failure
+        count, classified cause (compile / resource / unsupported /
+        numerics / runtime), the fallback lowering that took over, and the
+        last failure's detail string. Degradations are decided when a
+        contraction traces/executes, so check AFTER traffic (the first
+        ``generate`` call bakes prefill/decode decisions in at jit trace
+        time). The registry is process-global (``repro.core.health``):
+        engines sharing a process share the report.
+        """
+        return health.health_report()
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         if self.cfg.temperature <= 0.0:

@@ -1,0 +1,3 @@
+"""Test-support utilities that ship with the library (not the test suite):
+deterministic fault injection (``repro.testing.faults``) used by the guarded
+dispatch layer's tests and by CI's fault-injection matrix."""

@@ -1,0 +1,158 @@
+"""Deterministic fault injection for the guarded contraction stack.
+
+Production code is instrumented with *named sites* — cheap probes that do
+nothing until the ``REPRO_FAULT`` env var arms exactly one of them:
+
+    REPRO_FAULT=<site>          every hit of <site> fails
+    REPRO_FAULT=<site>:<nth>    only the <nth> hit (1-based) fails
+
+Two probe flavors:
+
+  * :func:`maybe_fail` — control-flow faults: raises :class:`InjectedFault`
+    (or the OSError-compatible :class:`InjectedIOError` for the checkpoint
+    I/O sites) carrying the site's declared failure class, so the guarded
+    runner (``repro.core.contraction.run_guarded``) classifies it exactly
+    like the real failure it stands in for.
+  * :func:`corrupt` — data faults: returns the operand poisoned with NaN
+    (the scale-grid corruption the opt-in numerics guard must catch).
+
+Sites and their failure classes are declared in :data:`FAULT_SITES`; an
+unknown site name in ``REPRO_FAULT`` is a hard error (a typo must not
+silently disarm a CI fault matrix).
+
+Determinism: hit counters are process-global and monotonically increasing
+per site; :func:`reset` (or the :class:`inject` context manager tests use)
+zeroes them so every test sees hit #1 first. Faults fire at Python trace
+time, so under ``jax.jit`` an armed site fails (or poisons) during tracing —
+deterministically, once per compilation.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+ENV_FAULT = "REPRO_FAULT"
+
+# site name -> the failure class the guarded runner should classify it as
+# (see repro.core.health.FAILURE_CLASSES; "io" is checkpoint-only and never
+# reaches the dispatch-health registry).
+FAULT_SITES = {
+    "pack": "resource",            # tile-major pack buffer materialization
+    "kernel_compile": "compile",   # Pallas lowering/compile stage
+    "kernel_run": "runtime",       # kernel execution stage
+    "scale_grid": "numerics",      # quantized-weight scale grid (corruption)
+    "checkpoint_save": "io",       # mid-save crash (train/checkpoint.py)
+    "checkpoint_read": "io",       # transient restore read failure
+}
+
+_IO_SITES = frozenset({"checkpoint_save", "checkpoint_read"})
+
+_hits: dict = {}
+
+
+class InjectedFault(Exception):
+    """A deterministic injected failure; carries the site's failure class so
+    ``repro.core.health.classify_failure`` needs no message parsing."""
+
+    def __init__(self, site: str, hit: int, failure_class: str):
+        self.site = site
+        self.hit = hit
+        self.failure_class = failure_class
+        super().__init__(f"injected fault at site {site!r} "
+                         f"(hit #{hit}, class {failure_class!r})")
+
+
+class InjectedIOError(InjectedFault, OSError):
+    """Injected fault for the I/O sites — an OSError, so retry loops built
+    for real transient I/O failures (checkpoint restore) exercise their
+    actual except clause."""
+
+
+def _check_site(site: str) -> None:
+    if site not in FAULT_SITES:
+        raise ValueError(f"unknown fault site {site!r}; "
+                         f"one of {sorted(FAULT_SITES)}")
+
+
+def active() -> Tuple[Optional[str], Optional[int]]:
+    """The armed ``(site, nth)`` from ``REPRO_FAULT`` (None, None if unset).
+    ``nth`` is None for the fail-every-hit form."""
+    env = os.environ.get(ENV_FAULT)
+    if not env:
+        return None, None
+    site, _, nth = env.partition(":")
+    _check_site(site)
+    return site, (int(nth) if nth else None)
+
+
+def hits(site: str) -> int:
+    """How many times the armed site has been reached (0 when disarmed —
+    counters only advance while their site is armed)."""
+    _check_site(site)
+    return _hits.get(site, 0)
+
+
+def reset() -> None:
+    """Zero all hit counters (per-test isolation)."""
+    _hits.clear()
+
+
+def _armed_hit(site: str) -> Optional[bool]:
+    """None if this site is not armed; else whether this hit should fire."""
+    armed, nth = active()
+    if armed != site:
+        return None
+    _hits[site] = hit = _hits.get(site, 0) + 1
+    return nth is None or hit == nth
+
+
+def maybe_fail(site: str) -> None:
+    """Raise the site's injected fault if armed for this hit; else no-op."""
+    _check_site(site)
+    fire = _armed_hit(site)
+    if fire:
+        cls = InjectedIOError if site in _IO_SITES else InjectedFault
+        raise cls(site, _hits[site], FAULT_SITES[site])
+
+
+def corrupt(site: str, x):
+    """Data-fault probe: return ``x`` NaN-poisoned if the site is armed for
+    this hit, else ``x`` unchanged. ``None`` passes through uncounted (an
+    absent optional operand cannot be corrupted)."""
+    _check_site(site)
+    if x is None:
+        return None
+    if _armed_hit(site):
+        import jax.numpy as jnp  # late: keep module importable sans jax
+        return jnp.full_like(x, jnp.nan)
+    return x
+
+
+class inject:
+    """Context manager arming one site for the enclosed block (test sugar):
+
+        with faults.inject("kernel_run", nth=1):
+            out = contract(spec, a, w)   # first kernel-run hit fails
+
+    Sets/restores ``REPRO_FAULT`` and resets the hit counters on both entry
+    and exit, so consecutive uses are independent.
+    """
+
+    def __init__(self, site: str, nth: Optional[int] = None):
+        _check_site(site)
+        self._value = site if nth is None else f"{site}:{nth}"
+        self._saved: Optional[str] = None
+
+    def __enter__(self):
+        self._saved = os.environ.get(ENV_FAULT)
+        os.environ[ENV_FAULT] = self._value
+        reset()
+        return self
+
+    def __exit__(self, *exc):
+        if self._saved is None:
+            os.environ.pop(ENV_FAULT, None)
+        else:
+            os.environ[ENV_FAULT] = self._saved
+        reset()
+        return False

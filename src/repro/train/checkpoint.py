@@ -1,15 +1,23 @@
 """Fault-tolerant checkpointing: atomic writes, manifest integrity hashes,
-latest-valid discovery, mesh-agnostic restore (resharding at load).
+latest-valid discovery, retrying restore, mesh-agnostic restore (resharding
+at load).
 
 Layout per step:
   <dir>/step_<N>.npz          flat path-keyed arrays (params + opt state + extra)
   <dir>/step_<N>.json         manifest: step, leaf index, sha256 of the npz
 
-Writes go to ``*.tmp`` then ``os.replace`` — a crash mid-save can never
-corrupt the latest checkpoint. ``restore`` verifies the hash and falls back to
-the previous step if verification fails (torn-write tolerance). Restores
-accept target shardings, so a run may resume on a different mesh (elastic
-rescale) — arrays are re-placed with ``jax.device_put``.
+Writes are STAGED in a private temp directory and published with two
+``os.replace`` renames — npz first, manifest last. The manifest rename is
+the commit point: a crash at ANY earlier moment (mid-stage, between the two
+publishes) leaves either no trace or an unreferenced npz, and
+``latest_valid_step`` keeps returning the previous step (the kill-mid-save
+regression tests drive both windows via the ``checkpoint_save`` fault
+site). ``restore`` verifies the hash, falls back to the previous step if
+verification fails (torn-write tolerance), and retries transient read
+failures with capped exponential backoff (``RESTORE_RETRIES`` /
+``RESTORE_BACKOFF_S``). Restores accept target shardings, so a run may
+resume on a different mesh (elastic rescale) — arrays are re-placed with
+``jax.device_put``.
 """
 from __future__ import annotations
 
@@ -17,13 +25,24 @@ import hashlib
 import json
 import os
 import re
+import shutil
+import time
 from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
 from jax.tree_util import DictKey, SequenceKey, tree_flatten_with_path
 
+from repro.testing import faults
+
 _STEP_RE = re.compile(r"step_(\d+)\.json$")
+
+# Transient-read retry policy: attempts and the base backoff (doubled per
+# retry, capped). Small constants — a real storage blip is either gone in
+# milliseconds or not transient at all.
+RESTORE_RETRIES = 3
+RESTORE_BACKOFF_S = 0.05
+RESTORE_BACKOFF_CAP_S = 0.5
 
 
 def _leaf_name(path) -> str:
@@ -53,21 +72,37 @@ def _sha256(path: str) -> str:
 
 
 def save(ckpt_dir: str, step: int, state: Any) -> str:
-    """Atomically persist a pytree ``state`` for ``step``."""
+    """Atomically persist a pytree ``state`` for ``step``.
+
+    Both files are staged in a private temp directory first, then published
+    npz-before-manifest with ``os.replace``; the manifest rename commits.
+    The temp dir is removed on every exit path, so an aborted save leaves
+    no ``*.tmp`` litter for step discovery to trip over.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten(state)
     npz_path = os.path.join(ckpt_dir, f"step_{step}.npz")
     man_path = os.path.join(ckpt_dir, f"step_{step}.json")
-    tmp = npz_path + ".tmp"
-    with open(tmp, "wb") as f:
-        np.savez(f, **flat)
-    os.replace(tmp, npz_path)
-    manifest = {"step": step, "leaves": sorted(flat),
-                "sha256": _sha256(npz_path)}
-    tmp = man_path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(manifest, f)
-    os.replace(tmp, man_path)
+    stage = os.path.join(ckpt_dir, f".tmp_step_{step}_{os.getpid()}")
+    os.makedirs(stage, exist_ok=True)
+    try:
+        stage_npz = os.path.join(stage, "ckpt.npz")
+        with open(stage_npz, "wb") as f:
+            np.savez(f, **flat)
+        manifest = {"step": step, "leaves": sorted(flat),
+                    "sha256": _sha256(stage_npz)}
+        stage_man = os.path.join(stage, "ckpt.json")
+        with open(stage_man, "w") as f:
+            json.dump(manifest, f)
+        # Crash window 1: everything staged, nothing published.
+        faults.maybe_fail("checkpoint_save")
+        os.replace(stage_npz, npz_path)
+        # Crash window 2: npz published, manifest not — the step stays
+        # invisible to latest_valid_step (manifest is the commit point).
+        faults.maybe_fail("checkpoint_save")
+        os.replace(stage_man, man_path)
+    finally:
+        shutil.rmtree(stage, ignore_errors=True)
     return npz_path
 
 
@@ -100,12 +135,31 @@ def latest_valid_step(ckpt_dir: str) -> Optional[int]:
     return None
 
 
+def _load_npz_with_retry(path: str):
+    """``np.load`` with capped-backoff retries on transient OSErrors (NFS
+    blips, object-store hiccups). The ``checkpoint_read`` fault site stands
+    in for the transient failure in tests; a fault that persists through
+    every attempt propagates as the OSError it is."""
+    delay = RESTORE_BACKOFF_S
+    for attempt in range(RESTORE_RETRIES):
+        try:
+            faults.maybe_fail("checkpoint_read")
+            return np.load(path)
+        except OSError:
+            if attempt == RESTORE_RETRIES - 1:
+                raise
+            time.sleep(delay)
+            delay = min(delay * 2, RESTORE_BACKOFF_CAP_S)
+    raise AssertionError("unreachable")
+
+
 def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
             shardings: Any = None) -> Tuple[Any, int]:
     """Restore into the structure of ``template`` (shapes/dtypes validated).
 
     ``shardings``: optional tree congruent with template — enables restoring
     onto a different mesh than the one that saved (elastic restart).
+    Transient read failures are retried (see :func:`_load_npz_with_retry`).
     """
     if step is None:
         step = latest_valid_step(ckpt_dir)
@@ -113,7 +167,7 @@ def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
             raise FileNotFoundError(f"no valid checkpoint in {ckpt_dir}")
     if not _verify(ckpt_dir, step):
         raise IOError(f"checkpoint step {step} failed integrity check")
-    data = np.load(os.path.join(ckpt_dir, f"step_{step}.npz"))
+    data = _load_npz_with_retry(os.path.join(ckpt_dir, f"step_{step}.npz"))
 
     leaves, treedef = tree_flatten_with_path(template)
     shard_leaves = (jax.tree.leaves(shardings) if shardings is not None

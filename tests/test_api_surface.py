@@ -79,9 +79,10 @@ EXPECTED_EPILOGUE_FIELDS = ("bias", "activation", "gate_mul")
 # env-override values, and the golden dispatch table all key on them.
 EXPECTED_LOWERINGS = {
     "dense": {"naive", "pluto", "intrinsic", "tiling", "tiling_packing",
-              "tiling_packing_fused", "vsx", "xla", "packed_weight"},
+              "tiling_packing_fused", "vsx", "xla", "packed_weight",
+              "jnp_ref"},
     "grouped": {"grouped_einsum", "grouped_packed", "grouped_packed_ragged",
-                "grouped_packed_weight"},
+                "grouped_packed_weight", "grouped_jnp_ref"},
 }
 
 

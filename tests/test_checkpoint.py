@@ -7,9 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import pytest
+
 from repro.configs import reduced_config
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import build
+from repro.testing import faults
 from repro.train import checkpoint as ckpt
 from repro.train import optimizer as opt
 from repro.train.loop import TrainConfig, make_train_step
@@ -105,3 +108,67 @@ def test_manifest_contains_hash(tmp_path):
     with open(os.path.join(tmp_path, "step_1.json")) as f:
         manifest = json.load(f)
     assert len(manifest["sha256"]) == 64
+
+
+# ---------------------------------------------------------------------------
+# Kill-mid-save / transient-read faults (the checkpoint_* injection sites)
+# ---------------------------------------------------------------------------
+
+def test_kill_before_publish_leaves_previous_checkpoint(tmp_path):
+    """Crash with both files staged but NOTHING published: no trace of the
+    new step, no temp litter, previous step stays the latest valid one."""
+    state = {"p": jnp.arange(6.0)}
+    ckpt.save(str(tmp_path), 1, state)
+    with faults.inject("checkpoint_save", nth=1):
+        with pytest.raises(OSError):
+            ckpt.save(str(tmp_path), 2, state)
+    assert ckpt.latest_valid_step(str(tmp_path)) == 1
+    assert not os.path.exists(os.path.join(tmp_path, "step_2.npz"))
+    assert not any(n.startswith(".tmp_") for n in os.listdir(tmp_path))
+    restored, step_no = ckpt.restore(str(tmp_path), state)
+    assert step_no == 1
+    np.testing.assert_array_equal(np.asarray(restored["p"]),
+                                  np.asarray(state["p"]))
+
+
+def test_kill_between_publishes_keeps_step_invisible(tmp_path):
+    """Crash with the npz published but the manifest (the commit point) not:
+    the new step never becomes valid, restore falls back, and a retried
+    save of the same step then commits cleanly."""
+    state = {"p": jnp.arange(6.0)}
+    ckpt.save(str(tmp_path), 1, state)
+    with faults.inject("checkpoint_save", nth=2):
+        with pytest.raises(OSError):
+            ckpt.save(str(tmp_path), 2, state)
+    assert os.path.exists(os.path.join(tmp_path, "step_2.npz"))
+    assert not os.path.exists(os.path.join(tmp_path, "step_2.json"))
+    assert ckpt.latest_valid_step(str(tmp_path)) == 1
+    _, step_no = ckpt.restore(str(tmp_path), state)
+    assert step_no == 1
+    # the retried save overwrites the orphan npz and commits
+    ckpt.save(str(tmp_path), 2, state)
+    assert ckpt.latest_valid_step(str(tmp_path)) == 2
+
+
+def test_restore_retries_transient_read(tmp_path, monkeypatch):
+    """One transient read failure: the backoff loop retries and succeeds."""
+    monkeypatch.setattr(ckpt, "RESTORE_BACKOFF_S", 0.001)
+    state = {"p": jnp.arange(4.0)}
+    ckpt.save(str(tmp_path), 3, state)
+    with faults.inject("checkpoint_read", nth=1):
+        restored, step_no = ckpt.restore(str(tmp_path), state)
+        assert faults.hits("checkpoint_read") >= 2  # first hit failed, retried
+    assert step_no == 3
+    np.testing.assert_array_equal(np.asarray(restored["p"]),
+                                  np.asarray(state["p"]))
+
+
+def test_restore_raises_after_retries_exhausted(tmp_path, monkeypatch):
+    """A persistent read failure propagates as the OSError it is."""
+    monkeypatch.setattr(ckpt, "RESTORE_BACKOFF_S", 0.001)
+    state = {"p": jnp.arange(4.0)}
+    ckpt.save(str(tmp_path), 3, state)
+    with faults.inject("checkpoint_read"):   # every attempt fails
+        with pytest.raises(OSError):
+            ckpt.restore(str(tmp_path), state)
+        assert faults.hits("checkpoint_read") == ckpt.RESTORE_RETRIES

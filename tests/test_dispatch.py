@@ -8,7 +8,12 @@ capability registry's honesty.
   both the CPU default and a faked TPU backend.
 * PRECEDENCE — explicit > env > auto, unified across dense and grouped
   (regression for the seed-era bug where ``REPRO_GEMM_STRATEGY`` beat an
-  explicit dense ``strategy=`` argument).
+  explicit dense ``strategy=`` argument); an UNKNOWN env value is the same
+  hard KeyError as an unknown explicit one (no silent fall-through).
+* GOLDEN DEGRADATION TABLE — for every committed smoke shape, a kernel-run
+  fault injected into the auto-chosen lowering degrades to the pinned
+  fallback, the output is BITWISE the fallback's explicit output, and the
+  health registry records exactly the degradation.
 * PROPERTY — every registered lowering's ``supports(spec)`` agrees with
   what its ``run`` actually accepts (hypothesis sweep over spec space).
 * EXTENSIBILITY — the ``bias_gelu`` epilogue (one named-table entry) lands
@@ -23,9 +28,11 @@ from hypo import given, settings, st
 from repro.core import (ContractionSpec, EPILOGUE_SPECS, EpilogueSpec,
                         GroupedPackedWeight, LOWERINGS, PackedWeight,
                         contract, dispatch, lowerings_for)
+from repro.core import health
 from repro.core.gemm import resolve_grouped_strategy, resolve_strategy
 from repro.kernels import ref
 from repro.kernels.common import KERNEL_EPILOGUES
+from repro.testing import faults
 
 
 @pytest.fixture
@@ -152,6 +159,25 @@ def test_env_applies_only_to_auto_and_same_kind(monkeypatch):
     monkeypatch.setenv("REPRO_GEMM_STRATEGY", "grouped_packed_ragged")
     assert resolve_grouped_strategy(4, 64, 64, 64, "float32") \
         == "grouped_einsum"
+
+
+def test_env_unknown_strategy_raises_like_explicit(monkeypatch):
+    """A typo'd REPRO_GEMM_STRATEGY is the SAME hard KeyError (with the
+    known-lowerings list) as an unknown explicit strategy= — it must not
+    silently fall through to auto."""
+    spec = ContractionSpec.dense(8, 16, 16, "float32")
+    with pytest.raises(KeyError) as explicit_err:
+        dispatch(spec, strategy="not_a_lowering")
+    monkeypatch.setenv("REPRO_GEMM_STRATEGY", "not_a_lowering")
+    with pytest.raises(KeyError) as env_err:
+        dispatch(spec)
+    for err in (explicit_err, env_err):
+        msg = str(err.value)
+        assert "not_a_lowering" in msg
+        assert "xla" in msg and "grouped_einsum" in msg  # the known list
+    # env "auto" and unset are never errors
+    monkeypatch.setenv("REPRO_GEMM_STRATEGY", "auto")
+    assert dispatch(spec).name == "xla"
 
 
 def test_explicit_unsupported_lowering_raises(no_env, rng):
@@ -401,6 +427,91 @@ def test_bias_gelu_grouped_all_lowerings(no_env, rng, backend):
         got = contract(pspec, x, gw, bias=bias, counts=cnt, backend=backend)
         np.testing.assert_allclose(np.asarray(got), ref_out, rtol=2e-4,
                                    atol=2e-4, err_msg=f"packed/{backend}")
+
+
+# ---------------------------------------------------------------------------
+# Golden degradation table: injected kernel-run fault in the auto winner ->
+# pinned fallback, bitwise parity with the fallback run explicitly, and
+# exactly one health-registry record
+# ---------------------------------------------------------------------------
+
+# (spec, CPU auto winner, pinned first fallback) for every committed
+# BENCH_*.smoke.json shape (fused_gemm sizes, quant dense prefill/decode,
+# the mixtral/llama4 grouped geometries incl. their ragged counts forms).
+GOLDEN_DEGRADED_CPU = [
+    (_dense(64, 64, 64), "xla", "tiling"),
+    (_dense(256, 256, 256), "xla", "tiling"),
+    (_dense(256, 512, 1024, "bfloat16"), "xla", "tiling"),
+    (_dense(8, 512, 1024, "bfloat16"), "xla", "tiling"),
+    (_grouped(8, 64, 96, 256), "grouped_einsum", "grouped_packed"),
+    (_grouped(8, 64, 256, 96, counts=True), "grouped_einsum",
+     "grouped_packed_ragged"),
+    (_grouped(16, 64, 80, 128), "grouped_einsum", "grouped_packed"),
+    (_grouped(16, 64, 128, 80, counts=True), "grouped_einsum",
+     "grouped_packed_ragged"),
+]
+
+
+def _facade_operands(spec, seed):
+    """Operands in the contract() facade convention ([E] counts, lead=())."""
+    r = np.random.default_rng(seed)
+    dt = jnp.dtype(spec.dtype)
+    if spec.kind == "dense":
+        a = jnp.asarray(r.normal(size=(spec.m, spec.k)), dt)
+        w = jnp.asarray(r.normal(size=(spec.k, spec.n)), dt)
+        return a, w, None
+    a = jnp.asarray(r.normal(size=(spec.e, spec.m, spec.k)), dt)
+    w = jnp.asarray(r.normal(size=(spec.e, spec.k, spec.n)), dt)
+    counts = (jnp.asarray(r.integers(0, spec.m + 1, size=(spec.e,)),
+                          jnp.int32) if spec.counts else None)
+    return a, w, counts
+
+
+@pytest.mark.parametrize(
+    "spec,winner,fallback", GOLDEN_DEGRADED_CPU,
+    ids=[s.describe() for s, _, _ in GOLDEN_DEGRADED_CPU])
+def test_golden_degradation_parity(no_env, spec, winner, fallback):
+    """Kernel-run fault in the auto winner: the guarded runner completes on
+    the pinned fallback, the output is BITWISE what the fallback produces
+    when named explicitly, and the registry records the degradation."""
+    assert dispatch(spec).name == winner
+    a, w, counts = _facade_operands(spec, seed=hash(spec.describe()) % 2**31)
+    health.clear_health()
+    with faults.inject("kernel_run", nth=1):
+        degraded = contract(spec, a, w, counts=counts)
+    want = contract(spec, a, w, counts=counts, strategy=fallback)
+    np.testing.assert_array_equal(np.asarray(degraded), np.asarray(want))
+    recs = health.HEALTH.records()
+    assert len(recs) == 1
+    rec = recs[0]
+    assert (rec.spec, rec.lowering, rec.cause, rec.fallback, rec.count) \
+        == (spec.describe(), winner, "runtime", fallback, 1)
+    assert "InjectedFault" in rec.detail
+    health.clear_health()
+
+
+def test_explicit_strategy_never_degrades_under_fault(no_env):
+    """The same fault that degrades auto dispatch RAISES for an explicit
+    strategy= — an explicit choice is a contract."""
+    spec, winner, _ = GOLDEN_DEGRADED_CPU[0]
+    a, w, _ = _facade_operands(spec, seed=0)
+    health.clear_health()
+    with faults.inject("kernel_run"):
+        with pytest.raises(faults.InjectedFault):
+            contract(spec, a, w, strategy=winner)
+    assert not health.HEALTH  # explicit failures are never "degradations"
+
+
+def test_zero_fault_run_leaves_health_empty(no_env):
+    """No faults -> no degradations: every golden shape runs clean on its
+    winner and the registry stays empty."""
+    health.clear_health()
+    for spec, _, _ in GOLDEN_DEGRADED_CPU:
+        a, w, counts = _facade_operands(spec, seed=1)
+        out = contract(spec, a, w, counts=counts)
+        assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+    assert not health.HEALTH
+    assert health.health_report() == {}
 
 
 def test_grep_clean_contract():

@@ -1,0 +1,121 @@
+"""CI fault-injection matrix over the committed BENCH smoke shapes.
+
+Run plain (no ``REPRO_FAULT``) this file asserts the zero-fault invariants:
+golden dispatch winners, bitwise auto/explicit parity, empty health
+registry. The CI matrix job re-runs it with ``REPRO_FAULT`` set to each of
+``pack`` / ``kernel_compile`` / ``kernel_run`` and the same tests then
+assert the degradation contract instead: env/auto dispatch completes, the
+output is bitwise what the surviving lowering produces when named
+explicitly, and every degradation is on the health registry.
+
+The ``pack`` site lives only in the per-call packing lowerings, which CPU
+auto dispatch never picks — for that site the test routes dispatch through
+``REPRO_GEMM_STRATEGY`` (tiling_packing_fused / grouped_packed) so the
+armed site is actually on the executed path.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ContractionSpec, contract, dispatch
+from repro.core import contraction as ctr
+from repro.core import health
+from repro.testing import faults
+
+# The committed BENCH smoke shapes (benchmarks/BENCH_gemm.md,
+# BENCH_grouped.md) — same set the golden dispatch tables pin.
+SMOKE_SPECS = [
+    ContractionSpec.dense(64, 64, 64, "float32"),
+    ContractionSpec.dense(256, 256, 256, "float32"),
+    ContractionSpec.dense(256, 512, 1024, "bfloat16"),
+    ContractionSpec.dense(8, 512, 1024, "bfloat16"),
+    ContractionSpec.grouped(8, 64, 96, 256, "bfloat16"),
+    ContractionSpec.grouped(8, 64, 256, 96, "bfloat16", counts=True),
+    ContractionSpec.grouped(16, 64, 80, 128, "bfloat16"),
+    ContractionSpec.grouped(16, 64, 128, 80, "bfloat16", counts=True),
+]
+
+# Env routing that puts the pack site on the executed path (the grouped
+# value upgrades to grouped_packed_ragged on counts specs).
+PACK_ROUTE = {"dense": "tiling_packing_fused", "grouped": "grouped_packed"}
+
+
+@pytest.fixture(autouse=True)
+def _isolate():
+    faults.reset()
+    health.clear_health()
+    yield
+    faults.reset()
+    health.clear_health()
+
+
+def _operands(spec, seed):
+    r = np.random.default_rng(seed)
+    dt = jnp.dtype(spec.dtype)
+    if spec.kind == "dense":
+        a = jnp.asarray(r.normal(size=(spec.m, spec.k)), dt)
+        w = jnp.asarray(r.normal(size=(spec.k, spec.n)), dt)
+        return a, w, None
+    a = jnp.asarray(r.normal(size=(spec.e, spec.m, spec.k)), dt)
+    w = jnp.asarray(r.normal(size=(spec.e, spec.k, spec.n)), dt)
+    counts = (jnp.asarray(r.integers(0, spec.m + 1, size=(spec.e,)),
+                          jnp.int32) if spec.counts else None)
+    return a, w, counts
+
+
+@pytest.mark.parametrize("spec", SMOKE_SPECS,
+                         ids=[s.describe() for s in SMOKE_SPECS])
+def test_fault_matrix_degradation_parity(spec, monkeypatch):
+    site, _ = faults.active()   # hard error on a typo'd REPRO_FAULT
+    monkeypatch.delenv("REPRO_GEMM_STRATEGY", raising=False)
+    if site == "pack":
+        monkeypatch.setenv("REPRO_GEMM_STRATEGY", PACK_ROUTE[spec.kind])
+    winner = dispatch(spec).name
+    a, w, counts = _operands(spec, seed=hash(spec.describe()) % 2**31)
+
+    faults.reset()
+    health.clear_health()
+    out = contract(spec, a, w, counts=counts)
+
+    # Walk the recorded degradations from the winner to the lowering that
+    # actually produced the output (fail-every-hit may degrade repeatedly).
+    degr = {r.lowering: r.fallback for r in health.HEALTH.records()
+            if r.spec == spec.describe()}
+    executed = winner
+    while executed in degr:
+        executed = degr[executed]
+
+    if site in ("kernel_compile", "kernel_run"):
+        # every kernel lowering fails: only the jnp reference survives
+        assert degr, f"{site} fault never degraded {winner}"
+        assert executed == ctr.REFERENCE_LOWERINGS[spec.kind]
+    elif site == "pack":
+        # the env-routed packing lowering fails; a non-packing one survives
+        assert degr, f"pack fault never degraded {winner}"
+        assert executed not in degr and executed != winner
+    elif site is None:
+        assert degr == {} and not health.HEALTH
+        assert executed == winner
+
+    # Parity: with every fault disarmed, naming the surviving lowering
+    # explicitly must reproduce the guarded output bitwise.
+    with monkeypatch.context() as mp:
+        mp.delenv(faults.ENV_FAULT, raising=False)
+        mp.delenv("REPRO_GEMM_STRATEGY", raising=False)
+        faults.reset()
+        want = contract(spec, a, w, counts=counts, strategy=executed)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_zero_fault_golden_dispatch_unchanged(monkeypatch):
+    """Without an armed fault the golden CPU dispatch table is untouched —
+    the guarded layer changes failure behavior, not choices."""
+    if faults.active()[0] is not None:
+        pytest.skip("a fault site is armed for this process")
+    monkeypatch.delenv("REPRO_GEMM_STRATEGY", raising=False)
+    want = {"dense": "xla", "grouped": "grouped_einsum"}
+    for spec in SMOKE_SPECS:
+        assert dispatch(spec).name == want[spec.kind], spec.describe()
+    assert health.health_report() == {}

@@ -1,0 +1,286 @@
+"""The fault-injection framework and the guarded dispatch layer it drives:
+deterministic site arming, failure classification, fallback chains, the
+opt-in numerics guard (scale-grid corruption), and the serving engine's
+health report."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ContractionSpec, GroupedPackedWeight, LOWERINGS,
+                        PackedWeight, contract, dispatch)
+from repro.core import contraction as ctr
+from repro.core import health
+from repro.testing import faults
+
+
+@pytest.fixture
+def no_env(monkeypatch):
+    monkeypatch.delenv("REPRO_GEMM_STRATEGY", raising=False)
+    monkeypatch.delenv("REPRO_GEMM_BACKEND", raising=False)
+    monkeypatch.delenv(faults.ENV_FAULT, raising=False)
+    monkeypatch.delenv(health.ENV_NUMERICS_GUARD, raising=False)
+    faults.reset()
+    health.clear_health()
+    yield
+    health.clear_health()
+
+
+# ---------------------------------------------------------------------------
+# Framework units
+# ---------------------------------------------------------------------------
+
+def test_sites_declare_known_failure_classes():
+    for site, cls in faults.FAULT_SITES.items():
+        assert cls in health.FAILURE_CLASSES + ("io",), site
+
+
+def test_disarmed_sites_are_free(no_env):
+    faults.maybe_fail("kernel_run")     # no-op
+    x = jnp.ones((2, 2))
+    assert faults.corrupt("scale_grid", x) is x
+    assert faults.hits("kernel_run") == 0
+
+
+def test_unknown_site_is_hard_error(no_env, monkeypatch):
+    with pytest.raises(ValueError, match="unknown fault site"):
+        faults.maybe_fail("not_a_site")
+    # a typo in REPRO_FAULT must not silently disarm a CI matrix
+    monkeypatch.setenv(faults.ENV_FAULT, "not_a_site")
+    with pytest.raises(ValueError, match="unknown fault site"):
+        faults.maybe_fail("kernel_run")
+
+
+def test_nth_hit_arming(no_env, monkeypatch):
+    monkeypatch.setenv(faults.ENV_FAULT, "kernel_run:2")
+    faults.reset()
+    faults.maybe_fail("kernel_run")                  # hit 1: no fire
+    with pytest.raises(faults.InjectedFault) as err:
+        faults.maybe_fail("kernel_run")              # hit 2: fires
+    assert err.value.site == "kernel_run" and err.value.hit == 2
+    assert err.value.failure_class == "runtime"
+    faults.maybe_fail("kernel_run")                  # hit 3: no fire
+    assert faults.hits("kernel_run") == 3
+    faults.maybe_fail("pack")                        # other sites disarmed
+    assert faults.hits("pack") == 0
+
+
+def test_io_faults_are_oserrors(no_env):
+    with faults.inject("checkpoint_save"):
+        with pytest.raises(OSError):
+            faults.maybe_fail("checkpoint_save")
+
+
+def test_corrupt_poisons_and_passes_none(no_env):
+    with faults.inject("scale_grid"):
+        assert faults.corrupt("scale_grid", None) is None   # uncounted
+        out = faults.corrupt("scale_grid", jnp.ones((2, 3)))
+        assert bool(jnp.all(jnp.isnan(out)))
+    x = jnp.ones((2, 3))
+    assert faults.corrupt("scale_grid", x) is x
+
+
+def test_inject_restores_env_and_counters(no_env, monkeypatch):
+    monkeypatch.setenv(faults.ENV_FAULT, "pack")
+    with faults.inject("kernel_run", nth=3):
+        assert faults.active() == ("kernel_run", 3)
+    assert faults.active() == ("pack", None)
+    assert faults.hits("kernel_run") == 0
+
+
+# ---------------------------------------------------------------------------
+# Failure classification
+# ---------------------------------------------------------------------------
+
+def test_classify_failure():
+    assert health.classify_failure(
+        faults.InjectedFault("pack", 1, "resource")) == "resource"
+    assert health.classify_failure(MemoryError("oom")) == "resource"
+    assert health.classify_failure(
+        RuntimeError("RESOURCE_EXHAUSTED: vmem")) == "resource"
+    assert health.classify_failure(
+        NotImplementedError("no lowering")) == "unsupported"
+    assert health.classify_failure(
+        RuntimeError("backend not supported here")) == "unsupported"
+    assert health.classify_failure(
+        RuntimeError("Mosaic lowering failed")) == "compile"
+    assert health.classify_failure(health.NumericsError("nan")) == "numerics"
+    assert health.classify_failure(RuntimeError("boom")) == "runtime"
+
+
+# ---------------------------------------------------------------------------
+# Fallback chains
+# ---------------------------------------------------------------------------
+
+def test_dense_chain_bottoms_out_at_reference(no_env):
+    spec = ContractionSpec.dense(32, 32, 32, "float32")
+    chain = ctr.fallback_chain(spec, dispatch(spec))
+    names = [lw.name for lw in chain]
+    assert names[0] == "xla"                      # the CPU auto winner
+    assert names[-1] == "jnp_ref"                 # always last
+    assert "naive" not in names                   # comparison-only excluded
+    assert names == ["xla", "tiling", "tiling_packing_fused", "jnp_ref"]
+
+
+def test_grouped_chains(no_env):
+    plain = ContractionSpec.grouped(2, 16, 32, 32, "float32")
+    ragged = ContractionSpec.grouped(2, 16, 32, 32, "float32", counts=True)
+    assert [lw.name for lw in ctr.fallback_chain(plain, dispatch(plain))] \
+        == ["grouped_einsum", "grouped_packed", "grouped_jnp_ref"]
+    assert [lw.name for lw in ctr.fallback_chain(ragged, dispatch(ragged))] \
+        == ["grouped_einsum", "grouped_packed_ragged", "grouped_jnp_ref"]
+
+
+def test_packed_chains_are_weight_kind_scoped(no_env, rng):
+    pw = PackedWeight.pack(jnp.asarray(rng.normal(size=(64, 48)),
+                                       jnp.float32))
+    spec = ContractionSpec.dense(8, 64, 48, "float32", w=pw)
+    assert [lw.name for lw in ctr.fallback_chain(spec, dispatch(spec))] \
+        == ["packed_weight", "jnp_ref"]
+    gw = GroupedPackedWeight.pack(
+        jnp.asarray(rng.normal(size=(4, 64, 48)), jnp.float32))
+    gspec = ContractionSpec.grouped(4, 16, 64, 48, "float32", w=gw)
+    assert [lw.name for lw in ctr.fallback_chain(gspec, dispatch(gspec))] \
+        == ["grouped_packed_weight", "grouped_jnp_ref"]
+
+
+def test_auto_never_picks_reference(no_env):
+    dense = ContractionSpec.dense(32, 32, 32, "float32")
+    grouped = ContractionSpec.grouped(2, 16, 32, 32, "float32")
+    assert not dispatch(dense).name.endswith("jnp_ref")
+    assert not dispatch(grouped).name.endswith("jnp_ref")
+    assert ctr.REFERENCE_LOWERINGS == {"dense": "jnp_ref",
+                                       "grouped": "grouped_jnp_ref"}
+    assert LOWERINGS["jnp_ref"].cost(dense) == ctr.REFERENCE_COST
+
+
+def test_all_lowerings_failing_bottoms_out_at_reference(no_env, rng):
+    """Every fault-sited lowering fails (fail-every-hit): the chain walks
+    all the way down to jnp_ref (no sites inside) and still completes."""
+    spec = ContractionSpec.dense(16, 32, 24, "float32")
+    a = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 24)), jnp.float32)
+    health.clear_health()
+    with faults.inject("kernel_run"):
+        out = contract(spec, a, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ w),
+                               rtol=1e-5, atol=1e-5)
+    degraded = {r.lowering: r.fallback for r in health.HEALTH.records()}
+    assert degraded == {"xla": "tiling", "tiling": "tiling_packing_fused",
+                        "tiling_packing_fused": "jnp_ref"}
+    health.clear_health()
+
+
+def test_last_chain_entry_failure_propagates(no_env):
+    """The LAST chain entry is never degraded past: its failure raises, and
+    every earlier entry's failure is on record."""
+    spec = ContractionSpec.dense(16, 32, 24, "float32")
+    chain = ctr.fallback_chain(spec, dispatch(spec))
+
+    def run_one(low):
+        raise RuntimeError(f"boom in {low.name}")
+
+    health.clear_health()
+    with pytest.raises(RuntimeError, match="jnp_ref"):
+        ctr.run_guarded(spec, chain, run_one)
+    assert len(health.HEALTH) == len(chain) - 1  # all but the last recorded
+    health.clear_health()
+
+
+# ---------------------------------------------------------------------------
+# Numerics guard (opt-in): scale-grid corruption degrades auto, raises
+# explicit
+# ---------------------------------------------------------------------------
+
+def _quantized_weight(rng):
+    w = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+    return w, PackedWeight.pack(w, quantize="int8")
+
+
+def test_numerics_guard_degrades_auto(no_env, monkeypatch, rng):
+    monkeypatch.setenv(health.ENV_NUMERICS_GUARD, "1")
+    w, pw = _quantized_weight(rng)
+    a = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    spec = ContractionSpec.dense(8, 64, 48, "float32", w=pw)
+    health.clear_health()
+    with faults.inject("scale_grid"):
+        out = contract(spec, a, pw)
+    # degraded to jnp_ref, which dequantizes with the REAL (uncorrupted)
+    # scale grid -> finite, close to the float matmul
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ w),
+                               rtol=0.1, atol=0.5)
+    recs = health.HEALTH.records()
+    assert len(recs) == 1
+    assert recs[0].cause == "numerics"
+    assert recs[0].lowering == "packed_weight"
+    assert recs[0].fallback == "jnp_ref"
+    health.clear_health()
+
+
+def test_numerics_guard_raises_for_explicit(no_env, monkeypatch, rng):
+    monkeypatch.setenv(health.ENV_NUMERICS_GUARD, "1")
+    _, pw = _quantized_weight(rng)
+    a = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    spec = ContractionSpec.dense(8, 64, 48, "float32", w=pw)
+    with faults.inject("scale_grid"):
+        with pytest.raises(health.NumericsError):
+            contract(spec, a, pw, strategy="packed_weight")
+    assert not health.HEALTH
+
+
+def test_numerics_guard_off_by_default(no_env, rng):
+    """Without REPRO_NUMERICS_GUARD the NaN output passes through (the
+    guard synchronizes on values, so it is strictly opt-in)."""
+    _, pw = _quantized_weight(rng)
+    a = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    spec = ContractionSpec.dense(8, 64, 48, "float32", w=pw)
+    with faults.inject("scale_grid"):
+        out = contract(spec, a, pw)
+    assert bool(jnp.all(jnp.isnan(out)))
+    assert not health.HEALTH
+
+
+# ---------------------------------------------------------------------------
+# Health registry mechanics
+# ---------------------------------------------------------------------------
+
+def test_health_registry_counts_and_report(no_env):
+    reg = health.HealthRegistry()
+    reg.record("spec_a", "xla", "runtime", "tiling", detail="boom")
+    reg.record("spec_a", "xla", "compile", "tiling", detail="again")
+    reg.record("spec_b", "grouped_einsum", "resource", "grouped_packed")
+    assert len(reg) == 2 and bool(reg)
+    rep = reg.report()
+    assert rep["spec_a -> xla"] == {"count": 2, "cause": "compile",
+                                    "fallback": "tiling", "detail": "again"}
+    assert rep["spec_b -> grouped_einsum"]["count"] == 1
+    reg.clear()
+    assert not reg and reg.report() == {}
+
+
+def test_engine_health_report_surfaces_degradations(no_env, monkeypatch):
+    """A kernel-run fault during serving: the engine keeps generating
+    (guarded degradation at jit trace time) and health_report() says so."""
+    import dataclasses as dc
+
+    from repro.configs import reduced_config
+    from repro.models import build
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = dc.replace(reduced_config("olmo-1b"), compute_dtype="float32",
+                     vocab_size=64)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, ServeConfig(max_len=32))
+    assert engine.health_report() == {}   # healthy before any fault
+    tokens = jnp.zeros((2, 8), jnp.int32)
+    health.clear_health()
+    with faults.inject("kernel_run"):
+        out = engine.generate({"tokens": tokens}, max_new_tokens=2)
+    assert out.shape == (2, 2)
+    report = engine.health_report()
+    assert report, "degradations must surface through the engine"
+    for entry in report.values():
+        assert entry["cause"] == "runtime" and entry["count"] >= 1
+    health.clear_health()
