@@ -1,0 +1,224 @@
+"""Request-stream serving bench: Poisson arrivals x Zipf lengths through the
+resilient front-end (serve/frontend.py), with and without injected faults.
+
+Two sections, mirroring the bench-guard discipline (deterministic guarded
+field, timing observations unguarded — see bench_quant_gemm):
+
+Goodput section — a VirtualClock discrete-event run (admission order,
+shedding, deadlines, and evictions are machine-independent): the same
+offered stream is served fault-free, with one injected ``engine_step``
+runtime fault (retries disabled, so the faulted request is EVICTED), and
+with one injected ``sample`` NaN corruption under ``REPRO_NUMERICS_GUARD``.
+Goodput = completed requests / offered requests. The guarded field
+``speedup_goodput_under_fault`` (faulted / fault-free goodput) is exactly
+(completed-1)/completed-shaped and deterministic — a regression means a
+single step fault now takes out MORE than the one faulted request, i.e.
+the isolation contract broke.
+
+Latency section — a real-clock run of the same workload shape reporting
+tokens/sec and p50/p99 request latency, fault-free vs a transient
+``engine_step`` fault absorbed by retry-with-backoff. CPU wall times on a
+tiny model: reported as observations, never guarded.
+
+Emits ``BENCH_serve_stream.json`` (``REPRO_BENCH_SMOKE=1``: shrunken
+stream, ``BENCH_serve_stream.smoke.json``) at the repo root.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import reduced_config
+from repro.core import health
+from repro.models import build
+from repro.serve import Engine, Request, ServeConfig, StreamConfig, \
+    StreamFrontend, VirtualClock
+from repro.testing import faults
+
+LENGTH_BUCKETS = (4, 8, 12, 16)      # Zipf-weighted prompt lengths
+BUDGET_BUCKETS = (2, 4, 8)           # Zipf-weighted generation budgets
+
+
+def _artifact_path() -> pathlib.Path:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    name = ("BENCH_serve_stream.smoke.json"
+            if os.environ.get("REPRO_BENCH_SMOKE") else
+            "BENCH_serve_stream.json")
+    return root / name
+
+
+def _zipf_choice(rng, buckets, size, a=1.5):
+    probs = 1.0 / np.arange(1, len(buckets) + 1) ** a
+    probs /= probs.sum()
+    return np.asarray(buckets)[rng.choice(len(buckets), size=size, p=probs)]
+
+
+def _workload(n, seed, vocab):
+    rng = np.random.default_rng(seed)
+    lengths = _zipf_choice(rng, LENGTH_BUCKETS, n)
+    budgets = _zipf_choice(rng, BUDGET_BUCKETS, n)
+    reqs = [Request(request_id=i,
+                    tokens=rng.integers(0, vocab, lengths[i])
+                    .astype(np.int32),
+                    max_new_tokens=int(budgets[i]))
+            for i in range(n)]
+    arrivals = np.cumsum(rng.exponential(scale=0.5, size=n))
+    return list(zip(arrivals, reqs))
+
+
+def _engine():
+    cfg = dataclasses.replace(reduced_config("olmo-1b"),
+                              compute_dtype="float32", capacity_factor=16.0)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, Engine(model, params,
+                       ServeConfig(max_len=32, temperature=0.7, seed=3))
+
+
+def _stream_cfg(**kw):
+    return StreamConfig(**{"queue_capacity": 64, "max_live": 4,
+                           "backoff_base_s": 0.002,
+                           "backoff_cap_s": 0.008, **kw})
+
+
+def _virtual_run(engine, schedule, *, fault=None, nth=None, guard=False,
+                 **cfg_kw):
+    health.clear_serve()
+    clock = VirtualClock()
+    fe = StreamFrontend(engine, _stream_cfg(**cfg_kw),
+                        clock=clock, sleep=clock.sleep)
+    saved = os.environ.get(health.ENV_NUMERICS_GUARD)
+    if guard:
+        os.environ[health.ENV_NUMERICS_GUARD] = "1"
+    try:
+        if fault:
+            with faults.inject(fault, nth=nth):
+                fe.run(schedule, tick_s=1.0)
+        else:
+            fe.run(schedule, tick_s=1.0)
+    finally:
+        if guard:
+            if saved is None:
+                os.environ.pop(health.ENV_NUMERICS_GUARD, None)
+            else:
+                os.environ[health.ENV_NUMERICS_GUARD] = saved
+    return fe.stats()
+
+
+def _real_run(engine, schedule, *, fault=None, nth=None):
+    health.clear_serve()
+    fe = StreamFrontend(engine, _stream_cfg(max_retries=2))
+    t0 = time.perf_counter()
+    if fault:
+        with faults.inject(fault, nth=nth):
+            results = fe.run(schedule)
+    else:
+        results = fe.run(schedule)
+    elapsed = time.perf_counter() - t0
+    lats = sorted(r.latency_s for r in results.values()
+                  if r.status == "completed")
+    toks = sum(len(r.tokens) for r in results.values()
+               if r.status == "completed")
+    stats = fe.stats()
+    return {
+        "completed": stats["completed"],
+        "p50_ms": float(np.percentile(lats, 50) * 1e3) if lats else None,
+        "p99_ms": float(np.percentile(lats, 99) * 1e3) if lats else None,
+        "tokens_per_s": toks / elapsed if elapsed else None,
+        "retries": stats["retries"],
+        "evicted": stats["evicted"],
+    }
+
+
+def main() -> None:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    n = 24 if smoke else 80
+    cfg, engine = _engine()
+    rows = []
+
+    # Warm the per-length prefill compiles + the decode program so the
+    # real-clock latency section measures serving, not XLA compilation.
+    warm = [(0.0, Request(request_id=10_000 + i,
+                          tokens=np.arange(1, ln + 1, dtype=np.int32),
+                          max_new_tokens=1))
+            for i, ln in enumerate(LENGTH_BUCKETS)]
+    _virtual_run(engine, warm)
+
+    # --- goodput section (deterministic discrete-event run) ---------------
+    schedule = _workload(n, seed=11, vocab=cfg.vocab_size)
+    free = _virtual_run(engine, schedule, max_retries=0)
+    faulted = _virtual_run(engine, schedule, fault="engine_step",
+                           nth=3 * len(LENGTH_BUCKETS) + 5, max_retries=0)
+    numerics = _virtual_run(engine, schedule, fault="sample",
+                            nth=3 * len(LENGTH_BUCKETS) + 5, guard=True,
+                            max_retries=0)
+    goodput_free = free["completed"] / free["offered"]
+    goodput_fault = faulted["completed"] / faulted["offered"]
+    goodput_numerics = numerics["completed"] / numerics["offered"]
+    assert faulted["evicted"] >= 1 and numerics["evicted"] >= 1
+    emit("serve_stream_goodput", 0.0,
+         f"goodput_free={goodput_free:.3f};"
+         f"goodput_fault={goodput_fault:.3f};"
+         f"speedup_goodput_under_fault="
+         f"{goodput_fault / goodput_free:.4f}x")
+    rows.append({
+        "name": "stream_goodput",
+        "n_requests": n,
+        "arrival": "poisson", "lengths": "zipf",
+        "offered": free["offered"],
+        "completed_free": free["completed"],
+        "shed_free": free["shed"],
+        "goodput_free": goodput_free,
+        "completed_fault": faulted["completed"],
+        "evicted_fault": faulted["evicted"],
+        "goodput_fault": goodput_fault,
+        "evicted_numerics": numerics["evicted"],
+        "goodput_numerics": goodput_numerics,
+        # deterministic guarded field: one injected step fault must cost at
+        # most the one faulted request (isolation contract)
+        "speedup_goodput_under_fault": goodput_fault / goodput_free,
+    })
+
+    # --- latency section (real clock, CPU observation) ---------------------
+    sched = [(t * 1e-3, r) for t, r in
+             _workload(n, seed=13, vocab=cfg.vocab_size)]
+    base = _real_run(engine, sched)
+    retried = _real_run(engine, sched, fault="engine_step",
+                        nth=3 * len(LENGTH_BUCKETS) + 5)
+    emit("serve_stream_latency",
+         (base["p50_ms"] or 0.0) * 1e3,
+         f"p99_free={base['p99_ms']:.1f}ms;"
+         f"p99_fault={retried['p99_ms']:.1f}ms;"
+         f"tokens_per_s={base['tokens_per_s']:.0f}")
+    rows.append({
+        "name": "stream_latency",
+        "n_requests": n,
+        "arrival": "poisson", "lengths": "zipf",
+        "p50_ms_free": base["p50_ms"],
+        "p99_ms_free": base["p99_ms"],
+        "tokens_per_s_free": base["tokens_per_s"],
+        "p50_ms_fault": retried["p50_ms"],
+        "p99_ms_fault": retried["p99_ms"],
+        "tokens_per_s_fault": retried["tokens_per_s"],
+        "retries_fault": retried["retries"],
+        "completed_free": base["completed"],
+        "completed_fault": retried["completed"],
+    })
+
+    artifact = _artifact_path()
+    artifact.write_text(json.dumps(
+        {"bench": "serve_stream", "unit_time": "us_per_call",
+         "results": rows}, indent=2) + "\n")
+    print(f"# wrote {artifact}")
+    health.clear_serve()
+
+
+if __name__ == "__main__":
+    main()

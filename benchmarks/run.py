@@ -14,6 +14,11 @@
                             dense prefill/decode + grouped MoE serving
                             shapes, B-bytes moved columns (writes
                             BENCH_quant_gemm.json)
+  bench_serve_stream      — Poisson-arrival/Zipf-length request stream
+                            through the resilient serving front-end:
+                            goodput under injected faults (deterministic,
+                            guarded) + p50/p99 latency and tokens/sec
+                            (writes BENCH_serve_stream.json)
   bench_syr2k             — §5.1 SYR2K extension of the layered strategy
   bench_models            — end-to-end model step times (CPU observation)
   bench_roofline          — TPU-target roofline rows from the dry-run
@@ -162,17 +167,19 @@ def main() -> None:
     from benchmarks import (bench_dtypes, bench_gemm_strategies,
                             bench_micro_lowering, bench_models,
                             bench_moe_grouped, bench_packing_overhead,
-                            bench_quant_gemm, bench_roofline, bench_syr2k)
+                            bench_quant_gemm, bench_roofline,
+                            bench_serve_stream, bench_syr2k)
     from benchmarks.common import header
 
     header()
     if smoke:
         modules = [bench_packing_overhead, bench_moe_grouped,
-                   bench_quant_gemm]
+                   bench_quant_gemm, bench_serve_stream]
     else:
         modules = [bench_micro_lowering, bench_dtypes, bench_packing_overhead,
-                   bench_moe_grouped, bench_quant_gemm, bench_syr2k,
-                   bench_gemm_strategies, bench_models, bench_roofline]
+                   bench_moe_grouped, bench_quant_gemm, bench_serve_stream,
+                   bench_syr2k, bench_gemm_strategies, bench_models,
+                   bench_roofline]
     failures = 0
     for mod in modules:
         try:

@@ -1,9 +1,14 @@
-"""Batched serving example: prefill + decode through the jit'd engine.
+"""Serving example: the jit'd engine, batched or as a request stream.
 
   PYTHONPATH=src python examples/serve_lm.py --arch olmo-1b --batch 4 --new 24
+  PYTHONPATH=src python examples/serve_lm.py --stream --batch 12
 
-Trains nothing — serves random-init weights greedily to demonstrate the
-serving path (per-request isolation, KV/SSM caches, batched decode).
+Trains nothing — serves random-init weights to demonstrate the serving
+paths: static batched decode (default), or ``--stream``, which offers the
+same requests as a Poisson arrival stream to the resilient front-end
+(bounded admission queue with typed ``Overloaded`` shedding, per-request
+deadlines, retry-with-backoff, per-request fault isolation) and prints the
+lifecycle report every production deployment would scrape.
 """
 import argparse
 import time
@@ -14,7 +19,8 @@ import numpy as np
 
 from repro.configs import reduced_config
 from repro.models import build
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve import (Engine, Request, ServeConfig, StreamConfig,
+                         StreamFrontend)
 
 
 def main() -> None:
@@ -31,6 +37,9 @@ def main() -> None:
                     help="quantize the packed weights at load (int8 tiles + "
                          "per-tile scales, dequant fused in-kernel; implies "
                          "--pack-weights)")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve a Poisson request stream through the "
+                         "resilient front-end instead of one static batch")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
@@ -54,6 +63,35 @@ def main() -> None:
         batch["frames"] = jnp.asarray(
             rng.normal(size=(args.batch, cfg.encoder_seq, cfg.d_model)),
             jnp.float32)
+
+    if args.stream:
+        if cfg.family in ("vlm", "audio"):
+            raise SystemExit("--stream demo serves token-LM requests only")
+        rng_s = np.random.default_rng(1)
+        reqs = [Request(request_id=i,
+                        tokens=rng_s.integers(
+                            0, cfg.vocab_size,
+                            int(rng_s.choice((4, args.prompt_len))))
+                        .astype(np.int32),
+                        max_new_tokens=args.new,
+                        deadline_s=30.0)
+                for i in range(args.batch)]
+        schedule = [(float(t), r) for t, r in
+                    zip(np.cumsum(rng_s.exponential(0.05, len(reqs))), reqs)]
+        frontend = StreamFrontend(engine, StreamConfig(
+            queue_capacity=max(2, args.batch // 2), max_live=4))
+        t0 = time.time()
+        results = frontend.run(schedule)
+        dt = time.time() - t0
+        toks = sum(len(r.tokens) for r in results.values() if r.ok)
+        print(f"arch={cfg.name} stream={len(reqs)} reqs "
+              f"new<={args.new}: {toks} tokens in {dt:.2f}s")
+        for rid in sorted(results):
+            r = results[rid]
+            print(f"  req{rid}: {r.status:13s} lat={r.latency_s:6.2f}s "
+                  f"{r.tokens.tolist() if len(r.tokens) else r.detail}")
+        print("lifecycle counters:", frontend.stats())
+        return
 
     t0 = time.time()
     out = engine.generate(batch, max_new_tokens=args.new)

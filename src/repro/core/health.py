@@ -1,4 +1,6 @@
-"""Dispatch-health registry: every guarded-dispatch degradation, recorded.
+"""Health registries: every guarded-dispatch degradation AND every serving
+request's lifecycle, recorded in bounded thread-safe process-global
+registries (``HEALTH`` for dispatch, ``SERVE`` for requests).
 
 The guarded execution layer (``repro.core.contraction.run_guarded``) never
 hides a fallback: when an env/auto-dispatched lowering fails and the runner
@@ -93,17 +95,30 @@ class DegradationRecord:
 
 
 class HealthRegistry:
-    """Thread-safe per-(spec, lowering) degradation counters."""
+    """Thread-safe, BOUNDED per-(spec, lowering) degradation counters.
 
-    def __init__(self):
+    A long-lived serving process degrades and recovers for the whole life of
+    the deployment; the registry therefore keeps at most ``max_records``
+    distinct (spec, lowering) rows as a ring — when a new row would exceed
+    the bound the OLDEST row is dropped and counted in :attr:`dropped`, so
+    monitoring can tell "empty because healthy" from "empty because
+    evicted". Counters on surviving rows are unaffected by the bound.
+    """
+
+    def __init__(self, max_records: int = 1024):
         self._records: Dict[Tuple[str, str], DegradationRecord] = {}
         self._lock = threading.Lock()
+        self._max_records = max(1, int(max_records))
+        self._dropped = 0
 
     def record(self, spec: str, lowering: str, cause: str, fallback: str,
                detail: str = "") -> None:
         with self._lock:
             rec = self._records.get((spec, lowering))
             if rec is None:
+                while len(self._records) >= self._max_records:
+                    self._records.pop(next(iter(self._records)))
+                    self._dropped += 1
                 self._records[(spec, lowering)] = DegradationRecord(
                     spec=spec, lowering=lowering, cause=cause,
                     fallback=fallback, detail=detail)
@@ -112,6 +127,12 @@ class HealthRegistry:
                 rec.cause = cause
                 rec.fallback = fallback
                 rec.detail = detail
+
+    @property
+    def dropped(self) -> int:
+        """Rows evicted by the ring bound (0 == nothing ever dropped)."""
+        with self._lock:
+            return self._dropped
 
     def records(self) -> Tuple[DegradationRecord, ...]:
         with self._lock:
@@ -130,6 +151,7 @@ class HealthRegistry:
     def clear(self) -> None:
         with self._lock:
             self._records.clear()
+            self._dropped = 0
 
     def __len__(self) -> int:
         with self._lock:
@@ -155,3 +177,185 @@ def health_report() -> Dict[str, dict]:
 
 def clear_health() -> None:
     HEALTH.clear()
+
+
+# ---------------------------------------------------------------------------
+# Request-lifecycle records (the serving front-end's side of the registry)
+# ---------------------------------------------------------------------------
+
+# Lifecycle states a request can be in. Terminal states are exactly the four
+# ways an offered request may END — the request-conservation invariant the
+# serving front-end maintains is
+#     offered == admitted + shed
+#     admitted == completed + evicted + deadline_miss + (still queued/live)
+# with every admitted request reaching exactly ONE terminal state.
+REQUEST_STATES = ("queued", "live", "completed", "evicted", "deadline_miss",
+                  "shed")
+TERMINAL_STATES = frozenset({"completed", "evicted", "deadline_miss", "shed"})
+
+# Lifecycle events the front-end records (shed covers both queue overflow
+# and admission-path failures; retry is per failed step attempt).
+REQUEST_EVENTS = ("admitted", "shed", "retry", "evicted", "deadline_miss",
+                  "completed")
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One request's lifecycle row: state + every recorded event."""
+
+    request_id: int
+    status: str                       # one of REQUEST_STATES
+    events: list = dataclasses.field(default_factory=list)
+    retries: int = 0                  # step attempts that failed retryably
+    tokens_emitted: int = 0
+    latency_s: float = 0.0            # admission -> terminal (terminal only)
+
+    def as_dict(self) -> dict:
+        return {"status": self.status, "retries": self.retries,
+                "tokens_emitted": self.tokens_emitted,
+                "latency_s": self.latency_s,
+                "events": [dict(e) for e in self.events]}
+
+
+class ServeRegistry:
+    """Thread-safe, BOUNDED per-request lifecycle records + monotonic
+    conservation counters.
+
+    Records are a ring: at most ``max_records`` requests are retained
+    (oldest TERMINAL rows evicted first — an in-flight request's row is
+    never dropped while any finished row remains), with the evictions
+    counted in :attr:`dropped`. The counters are monotonic and unaffected
+    by the ring, so the conservation invariant (see REQUEST_STATES) is
+    checkable over an arbitrarily long serving life.
+    """
+
+    def __init__(self, max_records: int = 1024):
+        self._records: Dict[int, RequestRecord] = {}
+        self._lock = threading.Lock()
+        self._max_records = max(1, int(max_records))
+        self._dropped = 0
+        self._counters = {"offered": 0, "admitted": 0, "shed": 0,
+                          "completed": 0, "evicted": 0, "deadline_miss": 0,
+                          "retries": 0}
+
+    def _insert(self, request_id: int) -> RequestRecord:
+        # under self._lock
+        rec = self._records.get(request_id)
+        if rec is not None:
+            return rec
+        while len(self._records) >= self._max_records:
+            victim = next(
+                (k for k, r in self._records.items()
+                 if r.status in TERMINAL_STATES),
+                next(iter(self._records)))
+            self._records.pop(victim)
+            self._dropped += 1
+        rec = self._records[request_id] = RequestRecord(
+            request_id=request_id, status="queued")
+        return rec
+
+    def admitted(self, request_id: int, step: int = 0,
+                 detail: str = "") -> None:
+        with self._lock:
+            self._counters["offered"] += 1
+            self._counters["admitted"] += 1
+            rec = self._insert(request_id)
+            rec.status = "queued"
+            rec.events.append({"event": "admitted", "step": step,
+                               "detail": detail})
+
+    def shed(self, request_id: int, detail: str = "") -> None:
+        """An offered request REJECTED at admission (typed Overloaded) —
+        terminal immediately, never silently dropped."""
+        with self._lock:
+            self._counters["offered"] += 1
+            self._counters["shed"] += 1
+            rec = self._insert(request_id)
+            rec.status = "shed"
+            rec.events.append({"event": "shed", "step": 0, "detail": detail})
+
+    def live(self, request_id: int) -> None:
+        with self._lock:
+            rec = self._records.get(request_id)
+            if rec is not None:
+                rec.status = "live"
+
+    def retry(self, request_id: int, step: int, cause: str,
+              backoff_s: float) -> None:
+        with self._lock:
+            self._counters["retries"] += 1
+            rec = self._records.get(request_id)
+            if rec is not None:
+                rec.retries += 1
+                rec.events.append({"event": "retry", "step": step,
+                                   "detail": cause,
+                                   "backoff_s": backoff_s})
+
+    def finalize(self, request_id: int, status: str, step: int,
+                 tokens_emitted: int, latency_s: float,
+                 detail: str = "") -> None:
+        """Move an ADMITTED request to its one terminal state
+        (completed / evicted / deadline_miss)."""
+        assert status in TERMINAL_STATES and status != "shed", status
+        with self._lock:
+            self._counters[status] += 1
+            rec = self._records.get(request_id)
+            if rec is not None:
+                rec.status = status
+                rec.tokens_emitted = tokens_emitted
+                rec.latency_s = latency_s
+                rec.events.append({"event": status, "step": step,
+                                   "detail": detail})
+
+    def counters(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._counters)
+
+    def open_requests(self) -> int:
+        """Retained records not yet terminal (queued or live)."""
+        with self._lock:
+            return sum(1 for r in self._records.values()
+                       if r.status not in TERMINAL_STATES)
+
+    @property
+    def dropped(self) -> int:
+        with self._lock:
+            return self._dropped
+
+    def report(self) -> Dict[str, dict]:
+        """JSON-serializable lifecycle report (monitoring export)."""
+        with self._lock:
+            return {
+                "counters": dict(self._counters),
+                "dropped_records": self._dropped,
+                "requests": {str(r.request_id): r.as_dict()
+                             for r in self._records.values()},
+            }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._records.clear()
+            self._dropped = 0
+            for k in self._counters:
+                self._counters[k] = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._records)
+
+
+# The process-global request registry the serving front-end records into and
+# Engine.serve_report() reads from (same pattern as HEALTH above).
+SERVE = ServeRegistry()
+
+
+def serve_report() -> Dict[str, dict]:
+    """Request-lifecycle report + the dispatch registry's bound stats."""
+    report = SERVE.report()
+    report["dispatch_health"] = {"records": len(HEALTH),
+                                 "dropped_records": HEALTH.dropped}
+    return report
+
+
+def clear_serve() -> None:
+    SERVE.clear()

@@ -1,1 +1,10 @@
-"""repro.serve subpackage."""
+"""repro.serve subpackage: the Engine (jit'd prefill/decode programs) and
+the resilient request-stream front-end layered on top of it
+(``serve.frontend`` — admission control, deadlines, retry/shedding, and
+per-request fault isolation; see its module docstring for the
+request-lifecycle contract)."""
+from repro.serve.engine import Engine, ServeConfig  # noqa: F401
+from repro.serve.frontend import (StreamConfig, StreamFrontend,  # noqa: F401
+                                  VirtualClock)
+from repro.serve.requests import (Overloaded, Request,  # noqa: F401
+                                  RequestResult)

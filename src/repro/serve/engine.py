@@ -3,9 +3,18 @@
 Production posture:
   * prefill and decode are separate jit'd programs (the two dry-run shapes);
   * KV caches live on device across steps; the host loop only moves tokens;
-  * requests are served in fixed-size batches with left-padded prompts
-    (continuous batching's static-batch ancestor — slot recycling is a
-    documented extension point);
+  * two serving surfaces share the jit'd programs: ``Engine.generate`` runs
+    a fixed-size static batch (offline/eval traffic), while
+    ``serve.frontend.StreamFrontend`` serves a REQUEST STREAM through the
+    per-request step API (``prefill_request`` / ``decode_request`` /
+    ``sample_tokens``) with admission control, deadlines, retry/shedding,
+    and per-request fault isolation — the robustness substrate the
+    slot-recycling continuous-batching scheduler plugs into (ROADMAP);
+  * sampling is PER-REQUEST deterministic: each request's sampling key is
+    ``fold_in(fold_in(PRNGKey(seed), request_id), step)``, so a request's
+    token stream depends only on (params, prompt, request_id) — retries,
+    evictions, or shedding of batch neighbors never change another
+    request's tokens (the front-end's bitwise fault-isolation property);
   * with ``ServeConfig.pack_weights=True`` every dense weight (attention,
     MLP, SSM projections AND the LM head) is tile-major packed ONCE at
     engine construction (``models.layers.pack_model_params``), and MoE
@@ -157,28 +166,80 @@ class Engine:
         """
         return health.health_report()
 
-    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+    def serve_report(self) -> Dict[str, dict]:
+        """The request-lifecycle report of the stream front-end.
+
+        ``counters`` are the monotonic conservation counters (offered =
+        admitted + shed; every admitted request ends exactly once as
+        completed / evicted / deadline_miss), ``requests`` the retained
+        per-request lifecycle records (bounded ring; ``dropped_records``
+        counts evictions from the ring, never from the counters), and
+        ``dispatch_health`` the dispatch registry's bound stats. Like
+        ``health_report`` the registry is process-global
+        (``repro.core.health.SERVE``): engines sharing a process share it.
+        """
+        return health.serve_report()
+
+    def sample_tokens(self, logits: jnp.ndarray, request_ids,
+                      step: int) -> jnp.ndarray:
+        """Sample one token per row with PER-REQUEST keys.
+
+        ``logits``: [B, V]; ``request_ids``: [B] int; ``step``: the
+        request-local sampling index (0 == the token sampled from prefill
+        logits). Key derivation is
+        ``fold_in(fold_in(PRNGKey(seed), request_id), step)`` — no state is
+        threaded between steps or across rows, so retrying a step resamples
+        the SAME token and neighbors' lifecycles can't perturb a request's
+        stream. Greedy (temperature<=0) ignores the keys.
+        """
         if self.cfg.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
+        base = jax.random.PRNGKey(self.cfg.seed)
+        temp = self.cfg.temperature
+
+        def one(rid, row):
+            key = jax.random.fold_in(jax.random.fold_in(base, rid), step)
+            return jax.random.categorical(key, row / temp, axis=-1)
+
+        rids = jnp.asarray(request_ids, jnp.int32)
+        return jax.vmap(one)(rids, logits).astype(jnp.int32)
+
+    # ----- per-request step API (the stream front-end's substrate) --------
+
+    def prefill_request(self, tokens) -> tuple:
+        """Prefill ONE request's prompt ([S] int32) in its own batch-1 slot.
+        Returns (last-position logits [1, V], decode caches for the slot)."""
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
+        return self._prefill(self.params, batch)
+
+    def decode_request(self, caches, token, pos: int) -> tuple:
+        """One decode step for one request's slot: ``token`` [1,1] int32 at
+        absolute position ``pos``. Pure in (caches, token, pos) — a failed
+        step can be retried with identical inputs and identical result."""
+        pos_v = jnp.full((1,), pos, jnp.int32)
+        return self._decode(self.params, caches, token, pos_v)
 
     def generate(self, batch: dict, max_new_tokens: int,
-                 prompt_len: Optional[int] = None) -> np.ndarray:
-        """batch: model-format prompt batch; returns [B, max_new_tokens]."""
+                 prompt_len: Optional[int] = None,
+                 request_ids=None) -> np.ndarray:
+        """batch: model-format prompt batch; returns [B, max_new_tokens].
+
+        ``request_ids`` ([B] ints, default ``arange(B)``) seed each row's
+        sampling key stream (see ``sample_tokens``).
+        """
         tokens = batch["tokens"]
         b, t = tokens.shape
         prompt_len = prompt_len or t
         prefix = (self.model.cfg.num_patches
                   if self.model.cfg.family == "vlm" else 0)
+        rids = (jnp.arange(b, dtype=jnp.int32) if request_ids is None
+                else jnp.asarray(request_ids, jnp.int32))
         last_logits, caches = self._prefill(self.params, batch)
-        key = jax.random.PRNGKey(self.cfg.seed)
         out = []
-        tok = self._sample(last_logits, key)[:, None]
+        tok = self.sample_tokens(last_logits, rids, step=0)[:, None]
         for i in range(max_new_tokens):
             out.append(np.asarray(tok))
             pos = jnp.full((b,), prefix + prompt_len + i, jnp.int32)
             logits, caches = self._decode(self.params, caches, tok, pos)
-            key, sub = jax.random.split(key)
-            tok = self._sample(logits[:, 0], sub)[:, None]
+            tok = self.sample_tokens(logits[:, 0], rids, step=i + 1)[:, None]
         return np.concatenate(out, axis=1)

@@ -43,6 +43,11 @@ FAULT_SITES = {
     "scale_grid": "numerics",      # quantized-weight scale grid (corruption)
     "checkpoint_save": "io",       # mid-save crash (train/checkpoint.py)
     "checkpoint_read": "io",       # transient restore read failure
+    # Serving front-end sites (serve/frontend.py). These fire at host level
+    # (outside jit), once per request step / admission attempt:
+    "engine_step": "runtime",      # one prefill/decode step of one request
+    "sample": "numerics",          # logits corruption before sampling (NaN)
+    "admission": "resource",       # admission-path failure (shed, not drop)
 }
 
 _IO_SITES = frozenset({"checkpoint_save", "checkpoint_read"})
