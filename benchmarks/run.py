@@ -19,6 +19,12 @@
                             goodput under injected faults (deterministic,
                             guarded) + p50/p99 latency and tokens/sec
                             (writes BENCH_serve_stream.json)
+  bench_serve_continuous  — the same stream through the slot-recycling
+                            continuous-batching scheduler vs the batch-1
+                            front-end: tokens/sec speedup, goodput under a
+                            bisected batch fault, preempt/resume goodput
+                            under KV exhaustion (guarded; writes
+                            BENCH_serve_continuous.json)
   bench_syr2k             — §5.1 SYR2K extension of the layered strategy
   bench_models            — end-to-end model step times (CPU observation)
   bench_roofline          — TPU-target roofline rows from the dry-run
@@ -168,18 +174,20 @@ def main() -> None:
                             bench_micro_lowering, bench_models,
                             bench_moe_grouped, bench_packing_overhead,
                             bench_quant_gemm, bench_roofline,
-                            bench_serve_stream, bench_syr2k)
+                            bench_serve_continuous, bench_serve_stream,
+                            bench_syr2k)
     from benchmarks.common import header
 
     header()
     if smoke:
         modules = [bench_packing_overhead, bench_moe_grouped,
-                   bench_quant_gemm, bench_serve_stream]
+                   bench_quant_gemm, bench_serve_stream,
+                   bench_serve_continuous]
     else:
         modules = [bench_micro_lowering, bench_dtypes, bench_packing_overhead,
                    bench_moe_grouped, bench_quant_gemm, bench_serve_stream,
-                   bench_syr2k, bench_gemm_strategies, bench_models,
-                   bench_roofline]
+                   bench_serve_continuous, bench_syr2k,
+                   bench_gemm_strategies, bench_models, bench_roofline]
     failures = 0
     for mod in modules:
         try:

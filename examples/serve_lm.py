@@ -2,15 +2,22 @@
 
   PYTHONPATH=src python examples/serve_lm.py --arch olmo-1b --batch 4 --new 24
   PYTHONPATH=src python examples/serve_lm.py --stream --batch 12
+  PYTHONPATH=src python examples/serve_lm.py --stream --continuous --batch 12
 
 Trains nothing — serves random-init weights to demonstrate the serving
 paths: static batched decode (default), or ``--stream``, which offers the
 same requests as a Poisson arrival stream to the resilient front-end
 (bounded admission queue with typed ``Overloaded`` shedding, per-request
-deadlines, retry-with-backoff, per-request fault isolation) and prints the
-lifecycle report every production deployment would scrape.
+deadlines, retry-with-backoff, per-request fault isolation); add
+``--continuous`` to serve the stream through the slot-recycling
+continuous-batching scheduler instead (one shared batched decode program
+over a paged KV pool, preempt/resume under block exhaustion). Both stream
+modes end by printing ``Engine.serve_report()`` and
+``Engine.health_report()`` — the lifecycle/health registries every
+production deployment would scrape.
 """
 import argparse
+import json
 import time
 
 import jax
@@ -19,8 +26,8 @@ import numpy as np
 
 from repro.configs import reduced_config
 from repro.models import build
-from repro.serve import (Engine, Request, ServeConfig, StreamConfig,
-                         StreamFrontend)
+from repro.serve import (ContinuousConfig, ContinuousScheduler, Engine,
+                         Request, ServeConfig, StreamConfig, StreamFrontend)
 
 
 def main() -> None:
@@ -40,6 +47,11 @@ def main() -> None:
     ap.add_argument("--stream", action="store_true",
                     help="serve a Poisson request stream through the "
                          "resilient front-end instead of one static batch")
+    ap.add_argument("--continuous", action="store_true",
+                    help="with --stream: serve through the slot-recycling "
+                         "continuous-batching scheduler (shared batched "
+                         "decode over a paged KV pool) instead of the "
+                         "batch-1 front-end")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
@@ -78,19 +90,36 @@ def main() -> None:
                 for i in range(args.batch)]
         schedule = [(float(t), r) for t, r in
                     zip(np.cumsum(rng_s.exponential(0.05, len(reqs))), reqs)]
-        frontend = StreamFrontend(engine, StreamConfig(
-            queue_capacity=max(2, args.batch // 2), max_live=4))
+        if args.continuous:
+            block = next(b for b in (16, 8, 4, 2, 1)
+                         if engine.cfg.max_len % b == 0)
+            server = ContinuousScheduler(engine, ContinuousConfig(
+                queue_capacity=max(2, args.batch // 2), max_live=4,
+                block_size=block))
+        else:
+            server = StreamFrontend(engine, StreamConfig(
+                queue_capacity=max(2, args.batch // 2), max_live=4))
         t0 = time.time()
-        results = frontend.run(schedule)
+        results = server.run(schedule)
         dt = time.time() - t0
         toks = sum(len(r.tokens) for r in results.values() if r.ok)
-        print(f"arch={cfg.name} stream={len(reqs)} reqs "
+        mode = "continuous" if args.continuous else "batch-1"
+        print(f"arch={cfg.name} stream={len(reqs)} reqs ({mode}) "
               f"new<={args.new}: {toks} tokens in {dt:.2f}s")
         for rid in sorted(results):
             r = results[rid]
             print(f"  req{rid}: {r.status:13s} lat={r.latency_s:6.2f}s "
                   f"{r.tokens.tolist() if len(r.tokens) else r.detail}")
-        print("lifecycle counters:", frontend.stats())
+        print("lifecycle counters:", server.stats())
+        # The registries a production deployment would scrape: the
+        # request-lifecycle report (conservation counters + per-request
+        # records) and the dispatch-health degradation report.
+        print("serve_report:",
+              json.dumps(engine.serve_report(), indent=2, default=str))
+        health = engine.health_report()
+        print("health_report:",
+              json.dumps(health, indent=2, default=str) if health
+              else "{} (healthy: no degraded lowerings)")
         return
 
     t0 = time.time()

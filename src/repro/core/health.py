@@ -187,16 +187,25 @@ def clear_health() -> None:
 # ways an offered request may END — the request-conservation invariant the
 # serving front-end maintains is
 #     offered == admitted + shed
-#     admitted == completed + evicted + deadline_miss + (still queued/live)
-# with every admitted request reaching exactly ONE terminal state.
-REQUEST_STATES = ("queued", "live", "completed", "evicted", "deadline_miss",
-                  "shed")
+#     admitted == completed + evicted + deadline_miss
+#                 + open + preempted_open
+# with every admitted request reaching exactly ONE terminal state. ``open``
+# is the in-flight population (queued or live, never preempted so far);
+# ``preempted_open`` the TRANSIENT preempted population — requests the
+# continuous-batching scheduler pushed back to the queue under KV-block
+# backpressure and has not yet resumed. Both drain to zero at quiescence,
+# closing the invariant to the original four-terminal form.
+REQUEST_STATES = ("queued", "live", "preempted", "completed", "evicted",
+                  "deadline_miss", "shed")
 TERMINAL_STATES = frozenset({"completed", "evicted", "deadline_miss", "shed"})
 
-# Lifecycle events the front-end records (shed covers both queue overflow
-# and admission-path failures; retry is per failed step attempt).
-REQUEST_EVENTS = ("admitted", "shed", "retry", "evicted", "deadline_miss",
-                  "completed")
+# Lifecycle events the serving layers record (shed covers both queue
+# overflow and admission-path failures; retry is per failed step attempt;
+# preempted/resumed bracket a KV-backpressure preemption; bisect is one
+# per-slot batch-1 re-run verdict of the continuous scheduler's
+# blast-radius containment).
+REQUEST_EVENTS = ("admitted", "shed", "retry", "preempted", "resumed",
+                  "bisect", "evicted", "deadline_miss", "completed")
 
 
 @dataclasses.dataclass
@@ -236,7 +245,7 @@ class ServeRegistry:
         self._dropped = 0
         self._counters = {"offered": 0, "admitted": 0, "shed": 0,
                           "completed": 0, "evicted": 0, "deadline_miss": 0,
-                          "retries": 0}
+                          "retries": 0, "preempted": 0, "resumed": 0}
 
     def _insert(self, request_id: int) -> RequestRecord:
         # under self._lock
@@ -290,6 +299,39 @@ class ServeRegistry:
                 rec.events.append({"event": "retry", "step": step,
                                    "detail": cause,
                                    "backoff_s": backoff_s})
+
+    def preempted(self, request_id: int, step: int, detail: str = "") -> None:
+        """A LIVE request pushed back to the queue under KV-block
+        backpressure (transient ``preempted`` state, never terminal)."""
+        with self._lock:
+            self._counters["preempted"] += 1
+            rec = self._records.get(request_id)
+            if rec is not None:
+                rec.status = "preempted"
+                rec.events.append({"event": "preempted", "step": step,
+                                   "detail": detail})
+
+    def resumed(self, request_id: int, step: int, detail: str = "") -> None:
+        """A preempted request re-admitted to a decode slot (its prompt +
+        generated prefix re-prefilled; the stream continues bitwise)."""
+        with self._lock:
+            self._counters["resumed"] += 1
+            rec = self._records.get(request_id)
+            if rec is not None:
+                rec.status = "live"
+                rec.events.append({"event": "resumed", "step": step,
+                                   "detail": detail})
+
+    def bisect(self, request_id: int, step: int, verdict: str,
+               detail: str = "") -> None:
+        """One per-slot batch-1 re-run verdict during blast-radius bisection
+        of a failed batched step (``verdict``: exonerated / guilty)."""
+        with self._lock:
+            rec = self._records.get(request_id)
+            if rec is not None:
+                rec.events.append({"event": "bisect", "step": step,
+                                   "detail": f"{verdict}: {detail}"
+                                             if detail else verdict})
 
     def finalize(self, request_id: int, status: str, step: int,
                  tokens_emitted: int, latency_s: float,

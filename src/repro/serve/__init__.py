@@ -1,10 +1,16 @@
-"""repro.serve subpackage: the Engine (jit'd prefill/decode programs) and
-the resilient request-stream front-end layered on top of it
-(``serve.frontend`` — admission control, deadlines, retry/shedding, and
-per-request fault isolation; see its module docstring for the
-request-lifecycle contract)."""
+"""repro.serve subpackage: the Engine (jit'd prefill/decode programs), the
+resilient request-stream front-end layered on top of it (``serve.frontend``
+— admission control, deadlines, retry/shedding, and per-request fault
+isolation), and the slot-recycling continuous-batching scheduler
+(``serve.scheduler`` + the paged KV cache in ``serve.kv_cache`` — one shared
+jit'd batched decode program with KV-block backpressure, preempt-and-resume,
+and per-slot blast-radius bisection; see each module docstring for its
+contract)."""
 from repro.serve.engine import Engine, ServeConfig  # noqa: F401
 from repro.serve.frontend import (StreamConfig, StreamFrontend,  # noqa: F401
                                   VirtualClock)
+from repro.serve.kv_cache import BlockAllocator, PagedKVCache  # noqa: F401
 from repro.serve.requests import (Overloaded, Request,  # noqa: F401
                                   RequestResult)
+from repro.serve.scheduler import (ContinuousConfig,  # noqa: F401
+                                   ContinuousScheduler)

@@ -9,7 +9,11 @@ Production posture:
     per-request step API (``prefill_request`` / ``decode_request`` /
     ``sample_tokens``) with admission control, deadlines, retry/shedding,
     and per-request fault isolation — the robustness substrate the
-    slot-recycling continuous-batching scheduler plugs into (ROADMAP);
+    slot-recycling continuous-batching scheduler
+    (``serve.scheduler.ContinuousScheduler``) plugs into: it moves all
+    live requests into ONE batched decode program over a paged KV pool
+    (``serve.kv_cache``) while the same step API serves its resume-replay
+    and bisection re-run paths;
   * sampling is PER-REQUEST deterministic: each request's sampling key is
     ``fold_in(fold_in(PRNGKey(seed), request_id), step)``, so a request's
     token stream depends only on (params, prompt, request_id) — retries,
@@ -149,6 +153,20 @@ class Engine:
                 p, batch, max_len=cfg.max_len,
                 cache_dtype=jnp.dtype(cfg.cache_dtype)))
         self._decode = jax.jit(model.decode)
+        # Jitted samplers (one compile per logits batch width, cached for
+        # the process): the eager vmap re-traces every call, which dominates
+        # the serving step at small batch sizes.
+        base, temp = jax.random.PRNGKey(cfg.seed), cfg.temperature
+
+        def _sampled(logits, rids, steps):
+            def one(rid, s, row):
+                key = jax.random.fold_in(jax.random.fold_in(base, rid), s)
+                return jax.random.categorical(key, row / temp, axis=-1)
+            return jax.vmap(one)(rids, steps, logits).astype(jnp.int32)
+
+        self._sampled = jax.jit(_sampled)
+        self._argmax = jax.jit(
+            lambda logits: jnp.argmax(logits, axis=-1).astype(jnp.int32))
 
     def health_report(self) -> Dict[str, dict]:
         """The dispatch-health registry's degradation report.
@@ -181,28 +199,25 @@ class Engine:
         return health.serve_report()
 
     def sample_tokens(self, logits: jnp.ndarray, request_ids,
-                      step: int) -> jnp.ndarray:
+                      step) -> jnp.ndarray:
         """Sample one token per row with PER-REQUEST keys.
 
         ``logits``: [B, V]; ``request_ids``: [B] int; ``step``: the
         request-local sampling index (0 == the token sampled from prefill
-        logits). Key derivation is
-        ``fold_in(fold_in(PRNGKey(seed), request_id), step)`` — no state is
-        threaded between steps or across rows, so retrying a step resamples
-        the SAME token and neighbors' lifecycles can't perturb a request's
-        stream. Greedy (temperature<=0) ignores the keys.
+        logits) — a scalar, or a [B] vector when rows sit at DIFFERENT
+        steps (the continuous-batching scheduler's shared batch mixes
+        requests at unrelated stream offsets). Key derivation is
+        ``fold_in(fold_in(PRNGKey(seed), request_id), step)`` per row — no
+        state is threaded between steps or across rows, so retrying a step
+        resamples the SAME token and neighbors' lifecycles (or batch
+        composition) can't perturb a request's stream. Greedy
+        (temperature<=0) ignores the keys.
         """
         if self.cfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        base = jax.random.PRNGKey(self.cfg.seed)
-        temp = self.cfg.temperature
-
-        def one(rid, row):
-            key = jax.random.fold_in(jax.random.fold_in(base, rid), step)
-            return jax.random.categorical(key, row / temp, axis=-1)
-
+            return self._argmax(logits)
         rids = jnp.asarray(request_ids, jnp.int32)
-        return jax.vmap(one)(rids, logits).astype(jnp.int32)
+        steps = jnp.broadcast_to(jnp.asarray(step, jnp.int32), rids.shape)
+        return self._sampled(logits, rids, steps)
 
     # ----- per-request step API (the stream front-end's substrate) --------
 

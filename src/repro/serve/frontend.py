@@ -1,7 +1,10 @@
 """Resilient request-stream front-end over the Engine's per-request step API.
 
 This is the request-lifecycle robustness layer the continuous-batching
-scheduler will sit on (ROADMAP "million-user path"): it turns the static
+scheduler sits on (``serve/scheduler.py`` — same contract, one shared
+batched decode program over a paged KV pool instead of batch-1 slots; this
+front-end remains the batch-1 reference implementation and the oracle the
+scheduler's bitwise tests compare against): it turns the static
 ``Engine.generate`` batch into a streaming service hardened the same way the
 dispatch layer was hardened by the guarded-dispatch contract — fault
 injected, classified, degraded, and measured.

@@ -1,0 +1,274 @@
+"""Paged/block KV cache for the continuous-batching scheduler.
+
+The paper's packing discipline applied to the KV stream one level up: instead
+of reserving a dense ``max_len`` cache per slot (the batch-1 front-end's
+layout), K/V live in a global pool of fixed-size BLOCKS and each slot maps its
+positions onto blocks through a per-slot block table — sequence LENGTH is
+decoupled from ALLOCATION, so a batch of mostly-short requests no longer pays
+for the longest request's worst case.
+
+Block-accounting contract
+=========================
+
+* The pool holds ``num_blocks + 1`` blocks per layer; **block 0 is the NULL
+  block** — it backs every unallocated table entry, absorbs the batched
+  step's padding-row writes, and is NEVER validly read: any gathered position
+  it backs lies beyond the owning slot's current length, which the decode
+  attention mask excludes exactly (``-1e30`` masking → probability exactly
+  zero → the value contraction contributes exactly zero; proven in
+  ``tests/test_serve_continuous.py``). Block 0 is never allocated and never
+  freed.
+* :class:`BlockAllocator` hands out blocks lowest-id-first (deterministic
+  layouts for bitwise replay tests) and detects double-free. **Exhaustion is
+  a typed backpressure signal**: :meth:`BlockAllocator.try_alloc` returns
+  ``None`` when the pool is short — it never raises for load. The armed
+  ``kv_alloc`` fault site (class ``resource``) fires inside ``try_alloc`` to
+  stand in for allocator failure.
+* **No leaks**: every block allocated to a slot is returned by
+  :meth:`PagedKVCache.release` (completion, eviction, deadline miss, or
+  preemption), and released blocks are SCRUBBED to zero before reuse — a NaN
+  parked in a recycled block would otherwise leak through the masked value
+  contraction (0 · NaN = NaN). After a full drain
+  ``allocator.free_count == allocator.capacity`` (property-swept in tests).
+* ``max_len % block_size == 0`` is required so a fully-tabled slot gathers to
+  EXACTLY the dense ``max_len`` cache the batch-1 programs use — the gathered
+  view and the dense cache are then the same ring arithmetic, which is what
+  makes the batched step bitwise-equal to the batch-1 path (the bisection and
+  preempt-resume contracts ride on this).
+
+Supported families: decoder-only token LMs with full attention (dense / moe /
+parallel-block). Sliding-window rings, SSM state, and encoder-decoder caches
+are not paged here (the ring wrap and non-KV state break the block mapping);
+constructing a :class:`PagedKVCache` for one raises ``ValueError``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.testing import faults
+
+# The two paged leaves of a decoder-only attention cache.
+_KV_LEAVES = ("k", "v")
+
+
+# Module-level jit'd pool helpers: the compile cache is keyed on the function
+# object, so hoisting them out of the instance shares compiles across every
+# PagedKVCache of the same pool shape (per-instance jits re-compiled the full
+# helper set for every new scheduler — pure overhead on the serving path).
+
+@jax.jit
+def _scatter_blocks(pool, row, blocks):
+    return pool.at[:, row].set(blocks)
+
+
+@jax.jit
+def _scrub_row(pool, row):
+    zeros = jnp.zeros((pool.shape[0], row.shape[0], *pool.shape[2:]),
+                      pool.dtype)
+    return pool.at[:, row].set(zeros)
+
+
+@jax.jit
+def _gather_row(pool, row):
+    g = pool[:, row]                     # [L, MB, bs, h, d]
+    return g.reshape(g.shape[0], 1, row.shape[0] * pool.shape[2],
+                     *g.shape[3:])
+
+
+@jax.jit
+def _write_pos(pool, dest, written):
+    flat = pool.reshape(pool.shape[0], -1, *pool.shape[3:])
+    return flat.at[:, dest].set(written).reshape(pool.shape)
+
+
+class BlockAllocator:
+    """Deterministic fixed-size block allocator (ids ``1..capacity``).
+
+    Lowest-id-first allocation order, double-free detection, and typed
+    backpressure: ``try_alloc`` returns ``None`` on real exhaustion (the
+    caller preempts or waits — it never crashes), and raises
+    :class:`~repro.testing.faults.InjectedFault` only when the ``kv_alloc``
+    fault site is armed for the hit.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"need at least one KV block, got {capacity}")
+        self.capacity = int(capacity)
+        self._free: List[int] = list(range(1, capacity + 1))  # sorted asc
+        self._used: set = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return len(self._used)
+
+    def try_alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` blocks (lowest ids first) or return ``None`` if the
+        pool cannot satisfy the request — exhaustion is backpressure, not an
+        exception. Fault site ``kv_alloc`` fires here when armed."""
+        faults.maybe_fail("kv_alloc")
+        if n < 0:
+            raise ValueError(f"negative allocation {n}")
+        if n > len(self._free):
+            return None
+        blocks, self._free = self._free[:n], self._free[n:]
+        self._used.update(blocks)
+        return blocks
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b not in self._used:
+                raise ValueError(f"double free / foreign block {b}")
+            self._used.discard(b)
+        self._free = sorted(self._free + list(blocks))
+
+
+class PagedKVCache:
+    """The block-pooled KV store behind the continuous scheduler's slots.
+
+    Device state is two pooled leaves per layer stack —
+    ``pool[name]: [L, num_blocks + 1, block_size, Hkv, D]`` for ``name`` in
+    ``("k", "v")`` — plus a HOST block table ``tables: [max_live,
+    blocks_per_slot] int32`` mapping each slot's position range onto pool
+    blocks (0 = null block). The batched decode step gathers
+    ``pool[:, tables]`` into the dense ``[L, B, max_len, Hkv, D]`` view the
+    unchanged model ``decode`` consumes, and scatters back only the one
+    position each row wrote.
+    """
+
+    def __init__(self, model_cfg, *, max_live: int, max_len: int,
+                 block_size: int, num_blocks: int, cache_dtype="float32"):
+        if model_cfg.is_encoder_decoder or model_cfg.has_ssm \
+                or model_cfg.family == "vlm" or not model_cfg.has_attention \
+                or model_cfg.attention_type == "sliding_window":
+            raise ValueError(
+                "paged KV supports decoder-only full-attention token LMs "
+                f"(family {model_cfg.family!r}, attention "
+                f"{model_cfg.attention_type!r} not pageable)")
+        if max_len % block_size != 0:
+            raise ValueError(f"max_len={max_len} must be a multiple of "
+                             f"block_size={block_size} (gathered view must "
+                             "equal the dense batch-1 cache exactly)")
+        self.max_live = int(max_live)
+        self.max_len = int(max_len)
+        self.block_size = int(block_size)
+        self.blocks_per_slot = max_len // block_size
+        self.alloc = BlockAllocator(num_blocks)
+        dtype = jnp.dtype(cache_dtype)
+        L = model_cfg.num_layers
+        pool_shape = (L, num_blocks + 1, block_size,
+                      model_cfg.num_kv_heads, model_cfg.head_dim)
+        self.pool: Dict[str, jnp.ndarray] = {
+            name: jnp.zeros(pool_shape, dtype) for name in _KV_LEAVES}
+        # Host-side: per-slot block lists (allocation order == position
+        # order) and the dense table the jit'd step consumes.
+        self._slot_blocks: List[List[int]] = [[] for _ in range(max_live)]
+        self.tables = np.zeros((max_live, self.blocks_per_slot), np.int32)
+        self._tables_dev = None  # device mirror, invalidated on table edits
+
+    # ----- accounting -----------------------------------------------------
+
+    def blocks_for(self, length: int) -> int:
+        """Blocks needed to back positions ``0 .. length - 1``."""
+        return max(0, -(-length // self.block_size))
+
+    def slot_block_count(self, slot: int) -> int:
+        return len(self._slot_blocks[slot])
+
+    def accounting_consistent(self) -> bool:
+        """Every table entry's block is either null or owned by exactly one
+        slot, and used/free counts close against capacity."""
+        owned = [b for blocks in self._slot_blocks for b in blocks]
+        return (len(owned) == len(set(owned))
+                and set(owned) == self.alloc._used
+                and self.alloc.free_count + self.alloc.used_count
+                == self.alloc.capacity)
+
+    # ----- allocation / release -------------------------------------------
+
+    def grow(self, slot: int, length: int) -> bool:
+        """Ensure ``slot`` has blocks backing positions ``0 .. length - 1``.
+        True on success; False on real pool exhaustion (typed backpressure —
+        caller preempts or waits). Raises ``InjectedFault`` only when the
+        ``kv_alloc`` site is armed."""
+        have = len(self._slot_blocks[slot])
+        need = self.blocks_for(length) - have
+        if need <= 0:
+            return True
+        got = self.alloc.try_alloc(need)
+        if got is None:
+            return False
+        for i, b in enumerate(got):
+            self.tables[slot, have + i] = b
+        self._slot_blocks[slot].extend(got)
+        self._tables_dev = None
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return the slot's blocks to the pool, scrubbing them to zero first
+        (a NaN left in a recycled block would leak through the masked value
+        contraction: 0 · NaN = NaN), and reset its table row to null."""
+        blocks = self._slot_blocks[slot]
+        if blocks:
+            # Scrub the FULL fixed-shape table row (null entries re-zero the
+            # already-zero null block): one compiled shape regardless of how
+            # many blocks the slot held.
+            row = jnp.asarray(self.tables[slot])
+            for name in _KV_LEAVES:
+                self.pool[name] = _scrub_row(self.pool[name], row)
+            self.alloc.free(blocks)
+        self._slot_blocks[slot] = []
+        self.tables[slot, :] = 0
+        self._tables_dev = None
+
+    # ----- data movement --------------------------------------------------
+
+    def insert_dense(self, slot: int, caches) -> None:
+        """Scatter a batch-1 dense cache (``caches["kv"]`` leaves
+        ``[L, 1, max_len, Hkv, D]`` from ``Engine.prefill_request`` /
+        ``decode_request``) into the slot's blocks. Table entries still null
+        receive the dense cache's zero padding, so the null block stays
+        zero — one compiled scatter regardless of how many blocks are live."""
+        row = jnp.asarray(self.tables[slot])
+        for name in _KV_LEAVES:
+            leaf = caches["kv"][name]
+            blocks = leaf.reshape(leaf.shape[0], self.blocks_per_slot,
+                                  self.block_size, *leaf.shape[3:])
+            self.pool[name] = _scatter_blocks(self.pool[name], row, blocks)
+
+    def write_position(self, slot: int, pos: int, caches) -> None:
+        """Commit ONE written position from a batch-1 decode's new caches
+        into the slot's block (the bisection path's per-row commit)."""
+        block = self.tables[slot, pos // self.block_size]
+        if block == 0:
+            raise ValueError(f"slot {slot} position {pos} not backed by an "
+                             "allocated block")
+        dest = int(block) * self.block_size + pos % self.block_size
+        for name in _KV_LEAVES:
+            written = caches["kv"][name][:, 0, pos]     # [L, Hkv, D]
+            self.pool[name] = _write_pos(self.pool[name], jnp.int32(dest),
+                                         written)
+
+    def gather_slot(self, slot: int) -> dict:
+        """The slot's dense batch-1 cache view ``{"kv": {"k", "v"}}`` —
+        bitwise the cache the batch-1 programs would hold (bisection re-runs
+        and tests read through this)."""
+        row = jnp.asarray(self.tables[slot])
+        return {"kv": {name: _gather_row(self.pool[name], row)
+                       for name in _KV_LEAVES}}
+
+    def device_tables(self) -> jnp.ndarray:
+        """The block table as a device operand for the jit'd batched step
+        (cached on device; table edits invalidate the mirror, so steady-state
+        ticks skip the host->device transfer)."""
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self.tables)
+        return self._tables_dev

@@ -18,6 +18,13 @@ from ADMISSION. Every offered request ends in exactly one
   * ``deadline_miss`` the deadline elapsed mid-stream; partial tokens are
                       returned.
 
+Under the continuous-batching scheduler (``serve.scheduler``) a live
+request may additionally pass through the TRANSIENT ``preempted`` state —
+bumped back to the queue under KV-block backpressure and later resumed
+with a bitwise-identical token stream; ``RequestResult.preemptions``
+counts how many times that happened. Preemption is never terminal and
+never loses tokens.
+
 The conservation invariant over these states — every offered request
 reaches exactly one of them, no losses, no duplicates — is tracked by the
 process-global ``repro.core.health.SERVE`` registry and surfaced through
@@ -65,6 +72,7 @@ class RequestResult:
     detail: str = ""              # cause for evicted/shed/deadline_miss
     retries: int = 0              # failed step attempts that were retried
     latency_s: float = 0.0        # admission -> terminal
+    preemptions: int = 0          # KV-backpressure preempt/resume cycles
 
     def __post_init__(self):
         if self.status not in TERMINAL_STATES:

@@ -3,8 +3,15 @@
 Production code is instrumented with *named sites* — cheap probes that do
 nothing until the ``REPRO_FAULT`` env var arms exactly one of them:
 
-    REPRO_FAULT=<site>          every hit of <site> fails
-    REPRO_FAULT=<site>:<nth>    only the <nth> hit (1-based) fails
+    REPRO_FAULT=<site>            every hit of <site> fails
+    REPRO_FAULT=<site>:<nth>      only the <nth> hit (1-based) fails
+    REPRO_FAULT=<site>:<n1>,<n2>  exactly the listed hits fail
+
+The multi-hit form exists for the continuous-batching scheduler's bisection
+contract: one armed ``batch_step`` site must be able to fail the SHARED
+batched step (hit #1) and then exactly one per-slot bisection re-run (a
+later hit), so a single ``REPRO_FAULT`` value can stage "batched step
+poisoned by one request" deterministically.
 
 Two probe flavors:
 
@@ -48,6 +55,14 @@ FAULT_SITES = {
     "engine_step": "runtime",      # one prefill/decode step of one request
     "sample": "numerics",          # logits corruption before sampling (NaN)
     "admission": "resource",       # admission-path failure (shed, not drop)
+    # Continuous-batching sites (serve/scheduler.py + serve/kv_cache.py).
+    # kv_alloc fires inside BlockAllocator.try_alloc (one hit per allocation
+    # attempt) and stands in for KV-pool exhaustion/allocator failure;
+    # batch_step fires once per SHARED batched decode attempt AND once per
+    # per-slot bisection re-run, so the multi-hit arming form can poison
+    # the batch and then exactly one suspect slot:
+    "kv_alloc": "resource",        # paged-KV block allocation (backpressure)
+    "batch_step": "runtime",       # one shared batched decode step / re-run
 }
 
 _IO_SITES = frozenset({"checkpoint_save", "checkpoint_read"})
@@ -79,15 +94,19 @@ def _check_site(site: str) -> None:
                          f"one of {sorted(FAULT_SITES)}")
 
 
-def active() -> Tuple[Optional[str], Optional[int]]:
+def active() -> Tuple[Optional[str], Optional[object]]:
     """The armed ``(site, nth)`` from ``REPRO_FAULT`` (None, None if unset).
-    ``nth`` is None for the fail-every-hit form."""
+    ``nth`` is None for the fail-every-hit form, an int for a single hit,
+    or a tuple of ints for the multi-hit form (``site:n1,n2``)."""
     env = os.environ.get(ENV_FAULT)
     if not env:
         return None, None
     site, _, nth = env.partition(":")
     _check_site(site)
-    return site, (int(nth) if nth else None)
+    if not nth:
+        return site, None
+    hits_ = tuple(int(p) for p in nth.split(","))
+    return site, (hits_[0] if len(hits_) == 1 else hits_)
 
 
 def hits(site: str) -> int:
@@ -108,7 +127,9 @@ def _armed_hit(site: str) -> Optional[bool]:
     if armed != site:
         return None
     _hits[site] = hit = _hits.get(site, 0) + 1
-    return nth is None or hit == nth
+    if nth is None:
+        return True
+    return hit in nth if isinstance(nth, tuple) else hit == nth
 
 
 def maybe_fail(site: str) -> None:
@@ -143,9 +164,14 @@ class inject:
     and exit, so consecutive uses are independent.
     """
 
-    def __init__(self, site: str, nth: Optional[int] = None):
+    def __init__(self, site: str, nth=None):
         _check_site(site)
-        self._value = site if nth is None else f"{site}:{nth}"
+        if nth is None:
+            self._value = site
+        elif isinstance(nth, (tuple, list)):
+            self._value = f"{site}:{','.join(str(n) for n in nth)}"
+        else:
+            self._value = f"{site}:{nth}"
         self._saved: Optional[str] = None
 
     def __enter__(self):

@@ -65,6 +65,34 @@ def test_nth_hit_arming(no_env, monkeypatch):
     assert faults.hits("pack") == 0
 
 
+def test_multi_nth_hit_arming(no_env, monkeypatch):
+    """The bisection-staging form: one armed value fires on exactly the
+    listed hits (batched attempt AND one chosen re-run)."""
+    monkeypatch.setenv(faults.ENV_FAULT, "batch_step:1,3")
+    faults.reset()
+    assert faults.active() == ("batch_step", (1, 3))
+    with pytest.raises(faults.InjectedFault) as err:
+        faults.maybe_fail("batch_step")              # hit 1: fires
+    assert err.value.hit == 1
+    faults.maybe_fail("batch_step")                  # hit 2: no fire
+    with pytest.raises(faults.InjectedFault) as err:
+        faults.maybe_fail("batch_step")              # hit 3: fires
+    assert err.value.hit == 3
+    assert err.value.failure_class == "runtime"
+    faults.maybe_fail("batch_step")                  # hit 4: no fire
+    assert faults.hits("batch_step") == 4
+
+
+def test_inject_accepts_multi_nth(no_env):
+    with faults.inject("kv_alloc", nth=(2, 3)):
+        assert faults.active() == ("kv_alloc", (2, 3))
+        faults.maybe_fail("kv_alloc")                # hit 1: no fire
+        with pytest.raises(faults.InjectedFault) as err:
+            faults.maybe_fail("kv_alloc")            # hit 2: fires
+        assert err.value.failure_class == "resource"
+    assert faults.active() == (None, None)
+
+
 def test_io_faults_are_oserrors(no_env):
     with faults.inject("checkpoint_save"):
         with pytest.raises(OSError):

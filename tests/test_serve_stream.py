@@ -414,7 +414,8 @@ def test_serve_report_schema(engine, no_fault):
                            "dispatch_health"}
     assert set(report["counters"]) == {"offered", "admitted", "shed",
                                        "completed", "evicted",
-                                       "deadline_miss", "retries"}
+                                       "deadline_miss", "retries",
+                                       "preempted", "resumed"}
     rec = next(iter(report["requests"].values()))
     assert set(rec) == {"status", "retries", "tokens_emitted", "latency_s",
                         "events"}
