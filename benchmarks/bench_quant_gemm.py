@@ -1,12 +1,15 @@
-"""int8 (dequant-in-epilogue) vs bf16 packed GEMM: the narrow-HBM serving
-trade measured through the SAME load-time-packed pipeline.
+"""int8/int4 (dequant-in-epilogue) vs bf16 packed GEMM: the narrow-HBM
+serving trade measured through the SAME load-time-packed pipeline.
 
 Dense section — PackedWeight.matmul at prefill (many rows amortize the
 per-call dequant) and decode (few rows; the dequant bill is per-call) shapes.
 Grouped section — the serving MoE step (fused silu-gate pair + down
 projection) over GroupedPackedWeight stacks at mixtral / llama4-scout expert
 geometry, padded and ragged (zipf-skewed counts through the ragged counts
-path), bf16 stacks vs int8+per-tile-scale stacks.
+path), bf16 stacks vs int8+per-tile-scale stacks vs int4 nibble-packed
+stacks with per-column (``:col``) scales — the store-only-dequant format
+whose B stream is half the int8 one (the per-tile f32 scale no longer
+amortizes at int4; the column scale does).
 
 Times are CPU observations (jnp backend, the serving fallback): XLA:CPU has
 no int8 matrix engine, so the int8 path pays a real dequantized-copy cost
@@ -95,19 +98,30 @@ def main() -> None:
                                     backend="jnp")
         pw_int8 = PackedWeight.pack(w.astype(COMPUTE), m_hint=m,
                                     backend="jnp", quantize="int8")
+        pw_int4 = PackedWeight.pack(w.astype(COMPUTE), m_hint=m,
+                                    backend="jnp", quantize="int4:col")
 
         bf16_step = jax.jit(lambda x, pw=pw_bf16: pw.matmul(x))
         int8_step = jax.jit(lambda x, pw=pw_int8: pw.matmul(x))
-        t_bf16, t_int8 = time_interleaved(
-            [(bf16_step, (a,)), (int8_step, (a,))])
+        int4_step = jax.jit(lambda x, pw=pw_int4: pw.matmul(x))
+        t_bf16, t_int8, t_int4 = time_interleaved(
+            [(bf16_step, (a,)), (int8_step, (a,)), (int4_step, (a,))])
 
         fmt = pw_int8.fmt
+        fmt4 = pw_int4.fmt
         full_bytes_bf16 = full_k * full_n * 2
         full_grid = (-(-full_n // fmt.bn)) * (-(-full_k // fmt.bk))
         full_bytes_int8 = full_k * full_n * 1 + full_grid * 4
+        # int4: half a byte per element + one f32 scale per COLUMN of tiles
+        full_bytes_int4 = full_k * full_n // 2 + (-(-full_n // fmt4.bn)) * 4
+        assert full_bytes_int4 <= 0.5 * full_bytes_int8, (
+            "sub-byte B stream must be at most half the int8 stream")
         emit(f"quant_dense_{name}", t_int8,
              f"time_ratio_int8={t_bf16 / t_int8:.2f}x;"
-             f"speedup_b_bytes={full_bytes_bf16 / full_bytes_int8:.2f}x")
+             f"time_ratio_int4={t_bf16 / t_int4:.2f}x;"
+             f"speedup_b_bytes={full_bytes_bf16 / full_bytes_int8:.2f}x;"
+             f"speedup_b_bytes_int4_vs_int8="
+             f"{full_bytes_int8 / full_bytes_int4:.2f}x")
         rows.append({
             "name": f"dense_{name}",
             "backend": "jnp",
@@ -115,12 +129,19 @@ def main() -> None:
             "m": m, "k": k, "n": n,
             "t_bf16_us": t_bf16,
             "t_int8_us": t_int8,
+            "t_int4_us": t_int4,
             "time_ratio_int8": t_bf16 / t_int8,
+            "time_ratio_int4": t_bf16 / t_int4,
             "speedup_b_bytes": full_bytes_bf16 / full_bytes_int8,
+            # guarded: the nibble-packed col-scale stream stays <= 0.5x int8
+            "speedup_b_bytes_int4_vs_int8": full_bytes_int8 / full_bytes_int4,
+            "speedup_b_bytes_int4": full_bytes_bf16 / full_bytes_int4,
             "b_bytes_measured_bf16": _b_bytes(pw_bf16),
             "b_bytes_measured_int8": _b_bytes(pw_int8),
+            "b_bytes_measured_int4": _b_bytes(pw_int4),
             "full_scale_b_bytes_bf16": full_bytes_bf16,
             "full_scale_b_bytes_int8": full_bytes_int8,
+            "full_scale_b_bytes_int4": full_bytes_int4,
         })
 
     # --- grouped: serving MoE step over packed stacks ---------------------
@@ -131,7 +152,8 @@ def main() -> None:
         wo = jnp.asarray(rng.normal(size=(e, f, d)), COMPUTE)
 
         packs = {}
-        for tag, quant in (("bf16", None), ("int8", "int8")):
+        for tag, quant in (("bf16", None), ("int8", "int8"),
+                           ("int4", "int4:col")):
             packs[tag] = (
                 GroupedPackedWeight.pack(wg, m_hint=cap, n_b_streams=2,
                                          backend="jnp", quantize=quant),
@@ -153,24 +175,35 @@ def main() -> None:
         full_counts = jnp.full((1, e), cap, jnp.int32)
 
         timed = []
-        for tag in ("bf16", "int8"):
+        for tag in ("bf16", "int8", "int4"):
             pg, pu, po = packs[tag]
             fn = jax.jit(lambda xx, cc, pg=pg, pu=pu, po=po:
                          step(xx, cc, pg, pu, po))
             timed += [(fn, (x4, full_counts)), (fn, (x4, counts))]
-        t_bf16, t_bf16_r, t_int8, t_int8_r = time_interleaved(timed)
+        (t_bf16, t_bf16_r, t_int8, t_int8_r,
+         t_int4, t_int4_r) = time_interleaved(timed)
 
         w_elems = e * d * f * 2 + e * f * d
         full_w_elems = e * full_d * full_f * 2 + e * full_f * full_d
         pg8, pu8, po8 = packs["int8"]
         scale_bytes = sum(p.scales.size * 4 for p in (pg8, pu8, po8))
         full_scale_ratio = scale_bytes / (w_elems or 1)  # ~tiles/elems, tiny
+        # int4:col scales at FULL scale, analytically: one f32 per expert per
+        # column of tiles (gate/up project d->f, down projects f->d)
+        pg4, pu4, po4 = packs["int4"]
+        full_cols4 = e * (-(-full_f // pg4.fmt.bn) + -(-full_f // pu4.fmt.bn)
+                          + -(-full_d // po4.fmt.bn))
         full_bytes_bf16 = full_w_elems * 2
         full_bytes_int8 = int(full_w_elems * (1 + full_scale_ratio))
+        full_bytes_int4 = full_w_elems // 2 + full_cols4 * 4
+        assert full_bytes_int4 <= 0.5 * full_bytes_int8, (
+            "sub-byte expert stacks must be at most half the int8 stacks")
         emit(f"quant_moe_{name}", t_int8,
              f"time_ratio_int8={t_bf16 / t_int8:.2f}x;"
              f"ragged_time_ratio_int8={t_bf16_r / t_int8_r:.2f}x;"
-             f"speedup_b_bytes={full_bytes_bf16 / full_bytes_int8:.2f}x")
+             f"speedup_b_bytes={full_bytes_bf16 / full_bytes_int8:.2f}x;"
+             f"speedup_b_bytes_int4_vs_int8="
+             f"{full_bytes_int8 / full_bytes_int4:.2f}x")
         rows.append({
             "name": f"moe_{name}",
             "backend": "jnp",
@@ -179,15 +212,24 @@ def main() -> None:
             "d_model": d, "d_ff": f,
             "t_bf16_padded_us": t_bf16,
             "t_int8_padded_us": t_int8,
+            "t_int4_padded_us": t_int4,
             "t_bf16_ragged_us": t_bf16_r,
             "t_int8_ragged_us": t_int8_r,
+            "t_int4_ragged_us": t_int4_r,
             "time_ratio_int8": t_bf16 / t_int8,
             "time_ratio_int8_ragged": t_bf16_r / t_int8_r,
+            "time_ratio_int4": t_bf16 / t_int4,
+            "time_ratio_int4_ragged": t_bf16_r / t_int4_r,
             "speedup_b_bytes": full_bytes_bf16 / full_bytes_int8,
+            # guarded: the nibble-packed col-scale stacks stay <= 0.5x int8
+            "speedup_b_bytes_int4_vs_int8": full_bytes_int8 / full_bytes_int4,
+            "speedup_b_bytes_int4": full_bytes_bf16 / full_bytes_int4,
             "b_bytes_measured_bf16": sum(_b_bytes(p) for p in packs["bf16"]),
             "b_bytes_measured_int8": sum(_b_bytes(p) for p in packs["int8"]),
+            "b_bytes_measured_int4": sum(_b_bytes(p) for p in packs["int4"]),
             "full_scale_b_bytes_bf16": full_bytes_bf16,
             "full_scale_b_bytes_int8": full_bytes_int8,
+            "full_scale_b_bytes_int4": full_bytes_int4,
         })
 
     artifact = _artifact_path()

@@ -30,6 +30,17 @@ pressured/unpressured completion ratio — deterministically 1.0 while the
 no-crash-under-exhaustion contract holds (zero evictions, zero drops, the
 allocator leak-free); any eviction or drop under pressure regresses it.
 
+Quantized-KV section — the same pressured stream over an int8-quantized
+paged pool (``ContinuousConfig.kv_quantize="int8"``: int8 values + one f32
+scale per position, quantize-on-write / dequantize-on-read). Reports the
+pool's KV bytes per block and the concurrent users a fixed byte budget
+affords. Guarded fields: ``speedup_users_per_kv_budget`` — users the f32
+pool's byte budget supports on the quantized pool vs the f32 pool
+(deterministic, from ``PagedKVCache.bytes_per_block``; the PR's >=2x
+concurrent-users claim) — and ``speedup_goodput_kv_quantized``, the
+quantized/f32 completion ratio under identical pressure (1.0 while the
+preempt/resume contract holds on the quantized pool).
+
 Emits ``BENCH_serve_continuous.json`` (``REPRO_BENCH_SMOKE=1``: shrunken
 stream, ``BENCH_serve_continuous.smoke.json``) at the repo root.
 """
@@ -111,6 +122,8 @@ def _virtual_cont(engine, schedule, *, fault=None, nth=None, **cfg_kw):
         cs.run(schedule, tick_s=1.0)
     stats = cs.stats()
     assert cs.kv.alloc.free_count == cs.kv.alloc.capacity  # leak-free
+    stats["kv_pool_bytes"] = cs.kv.pool_bytes()
+    stats["kv_bytes_per_block"] = cs.kv.bytes_per_block()
     return stats
 
 
@@ -235,6 +248,54 @@ def main() -> None:
         # guarded: exhaustion is absorbed by preempt/resume — every request
         # a pressure-free pool completes still completes (ratio 1.0)
         "speedup_goodput_kv_pressure": ratio,
+    })
+
+    # --- quantized KV: users per byte budget + goodput parity --------------
+    pressured_q = _virtual_cont(engine, schedule, num_kv_blocks=6,
+                                kv_quantize="int8")
+    assert pressured_q["preempted"] > 0, pressured_q
+    assert pressured_q["evicted"] == 0, pressured_q
+    assert pressured_q["resumed"] == pressured_q["preempted"]
+    bpb_f32 = pressured["kv_bytes_per_block"]
+    bpb_q = pressured_q["kv_bytes_per_block"]
+    # A request here peaks at max(LENGTH)+max(BUDGET) = 24 positions = 3
+    # blocks of 8. Users a FIXED byte budget (the f32 pool's total) affords:
+    # affordable blocks (minus the null block) // blocks-per-user.
+    blocks_per_user = -(-(max(LENGTH_BUCKETS) + max(BUDGET_BUCKETS)) // 8)
+    budget = pressured["kv_pool_bytes"]
+    users_f32 = (budget // bpb_f32 - 1) // blocks_per_user
+    users_q = (budget // bpb_q - 1) // blocks_per_user
+    ratio_users = users_q / users_f32
+    ratio_goodput_q = pressured_q["completed"] / free["completed"]
+    assert ratio_users >= 2.0, (users_f32, users_q)   # the >=2x users claim
+    emit("serve_continuous_kv_quantized", 0.0,
+         f"kv_bytes_per_block_f32={bpb_f32};"
+         f"kv_bytes_per_block_int8={bpb_q};"
+         f"users_per_budget_f32={users_f32};"
+         f"users_per_budget_int8={users_q};"
+         f"speedup_users_per_kv_budget={ratio_users:.2f}x;"
+         f"speedup_goodput_kv_quantized={ratio_goodput_q:.4f}x")
+    rows.append({
+        "name": "continuous_kv_quantized",
+        "n_requests": n, "num_kv_blocks": 6, "block_size": 8,
+        "kv_quantize": "int8",
+        "arrival": "poisson", "lengths": "zipf",
+        "offered": pressured_q["offered"],
+        "completed": pressured_q["completed"],
+        "preempted": pressured_q["preempted"],
+        "resumed": pressured_q["resumed"],
+        "evicted": pressured_q["evicted"],
+        "kv_pool_bytes_f32": pressured["kv_pool_bytes"],
+        "kv_pool_bytes_int8": pressured_q["kv_pool_bytes"],
+        "kv_bytes_per_block_f32": bpb_f32,
+        "kv_bytes_per_block_int8": bpb_q,
+        "blocks_per_user": blocks_per_user,
+        "users_per_budget_f32": users_f32,
+        "users_per_budget_int8": users_q,
+        # guarded: an int8 pool serves >=2x the concurrent users per KV byte
+        "speedup_users_per_kv_budget": ratio_users,
+        # guarded: quantization costs no completions under identical pressure
+        "speedup_goodput_kv_quantized": ratio_goodput_q,
     })
 
     artifact = _artifact_path()

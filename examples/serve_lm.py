@@ -40,9 +40,11 @@ def main() -> None:
     ap.add_argument("--pack-weights", action="store_true",
                     help="tile-major pack all dense weights at load time "
                          "(fused pack-free-A GEMM on every step)")
-    ap.add_argument("--quantize", default=None, choices=("int8",),
-                    help="quantize the packed weights at load (int8 tiles + "
-                         "per-tile scales, dequant fused in-kernel; implies "
+    ap.add_argument("--quantize", default=None,
+                    choices=("int8", "int8:col", "int4", "int4:col"),
+                    help="quantize the packed weights at load (int8 or "
+                         "nibble-packed int4 tiles; ':col' hoists dequant to "
+                         "a per-column store epilogue; implies "
                          "--pack-weights)")
     ap.add_argument("--stream", action="store_true",
                     help="serve a Poisson request stream through the "

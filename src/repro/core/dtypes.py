@@ -19,7 +19,8 @@ from repro.roofline.hw import V5E, TpuTarget
 @dataclasses.dataclass(frozen=True)
 class MatrixDtype:
     name: str
-    itemsize: int
+    itemsize: float         # bytes per element; sub-byte formats are
+                            # fractional (int4 nibble-packs two per byte)
     acc_dtype: str          # accumulator dtype (paper: 32-bit grid in the ACC)
     rank: int               # paper's rank-k analogue: elements per 32-bit lane
     native: bool            # MXU-native input (else emulated/promoted)
@@ -32,7 +33,8 @@ TABLE: Dict[str, MatrixDtype] = {
     "bfloat16": MatrixDtype("bfloat16", 2, "float32", 2, True, 1.0),
     "float16": MatrixDtype("float16", 2, "float32", 2, False, 1.0),  # via bf16/f32
     "int8": MatrixDtype("int8", 1, "int32", 4, True, 2.0),
-    "int4": MatrixDtype("int4", 1, "int32", 8, False, 2.0),  # unpacked to i8
+    "int4": MatrixDtype("int4", 0.5, "int32", 8, False, 2.0),  # nibble-packed,
+                                                               # unpacked to i8
 }
 
 

@@ -28,7 +28,12 @@ descriptor. ``quantize="int8"`` at pack time selects the quantized format:
 weights are stored as int8 tiles + per-(Kb,Nb)-tile f32 scales (halving HBM
 traffic vs bf16 at serving time), and every matmul path — dense fused-A,
 grouped, ragged, and the jnp fallbacks — dequantizes per tile on the f32
-accumulator ahead of the fused epilogues.
+accumulator ahead of the fused epilogues. ``quantize="int4"`` stores
+nibble-packed int4 tiles (two values per byte — 0.25x bf16 B traffic,
+widened to i8 in-kernel via shift/mask); a ``":col"`` suffix on either
+("int8:col" / "int4:col") switches the scale convention from per-tile to
+per-Nb-column, hoisting the dequant multiply out of the K loop into the
+store epilogue.
 """
 from __future__ import annotations
 
@@ -85,12 +90,20 @@ class LayeredGemm:
                          epilogue=self.epilogue)
 
 
-def _quant_b_dtype(quantize: Optional[str]) -> Optional[str]:
+def _parse_quantize(quantize: Optional[str]):
+    """``quantize`` string -> (b_dtype, scale_granularity).
+
+    Accepted: None, "int8", "int4", and either with a ":col" suffix
+    selecting per-column (store-only-dequant) scales, e.g. "int4:col".
+    """
     if quantize is None:
-        return None
-    if quantize != "int8":
-        raise ValueError(f"unsupported quantize={quantize!r} (only 'int8')")
-    return "int8"
+        return None, "tile"
+    base, _, gran = quantize.partition(":")
+    if base not in ("int8", "int4") or (gran and gran != "col"):
+        raise ValueError(
+            f"unsupported quantize={quantize!r} (accepted: 'int8', 'int4', "
+            f"optionally suffixed ':col')")
+    return base, (gran or "tile")
 
 
 class _PackedCommon:
@@ -158,7 +171,7 @@ class PackedWeight(_PackedCommon):
     k: int
     n: int
     plan: GemmPlan
-    scales: Optional[jnp.ndarray] = None   # [Nb, Kb] f32 (int8 formats)
+    scales: Optional[jnp.ndarray] = None   # [Nb, Kb] f32 ([Nb] for :col)
 
     @classmethod
     def pack(cls, w: jnp.ndarray, *, m_hint: int = 1024,
@@ -167,12 +180,16 @@ class PackedWeight(_PackedCommon):
              quantize: Optional[str] = None) -> "PackedWeight":
         """w: [K, N], or [L, K, N] for scan-stacked layers (packed per layer
         under vmap so ``jax.lax.scan`` can slice the leading axis).
-        ``quantize="int8"``: store int8 tiles + per-tile f32 scales — the
-        dequant runs fused in the kernel epilogue at every matmul."""
+        ``quantize``: "int8" stores int8 tiles + per-tile f32 scales (the
+        dequant runs fused in the kernel epilogue at every matmul); "int4"
+        stores nibble-packed tiles (two values/byte); a ":col" suffix on
+        either switches to per-column [Nb] scales applied once in the store
+        epilogue instead of per K-step."""
         assert w.ndim in (2, 3), w.shape
         k, n = w.shape[-2:]
-        plan = plan or plan_gemm(m_hint, k, n, w.dtype,
-                                 b_dtype=_quant_b_dtype(quantize))
+        b_dtype, gran = _parse_quantize(quantize)
+        plan = plan or plan_gemm(m_hint, k, n, w.dtype, b_dtype=b_dtype,
+                                 scale_granularity=gran)
         cls._check_quantize_plan(plan, quantize)
         fmt = plan.b_format
         if w.ndim == 3:
@@ -220,12 +237,14 @@ class PackedWeight(_PackedCommon):
                                       layout_b=self.plan.layout_b,
                                       b_scales=scales, bias=bias,
                                       epilogue=epilogue,
+                                      b_format=self.fmt,
                                       out_dtype=out_dtype or a.dtype)
             faults.maybe_fail("kernel_run")
             return out
         acc = ref.fused_packed_acc_ref(a, self.packed, self.n,
                                        layout_b=self.plan.layout_b,
-                                       bm=bm, b_scales=scales)
+                                       bm=bm, b_scales=scales,
+                                       fmt=self.fmt)
         if bias is not None:
             acc = acc + bias.astype(acc.dtype)
         out = apply_epilogue(epilogue, acc)
@@ -272,7 +291,8 @@ class GroupedPackedWeight(_PackedCommon):
     k: int
     n: int
     plan: GemmPlan
-    scales: Optional[jnp.ndarray] = None   # [E, Nb, Kb] (+ leading stack dims)
+    scales: Optional[jnp.ndarray] = None   # [E, Nb, Kb] / [E, Nb] for :col
+                                           # (+ leading stack dims)
 
     @classmethod
     def pack(cls, w: jnp.ndarray, *, m_hint: int = 1024,
@@ -283,9 +303,11 @@ class GroupedPackedWeight(_PackedCommon):
         """w: [E, K, N], or [L, E, K, N] for scan-stacked MoE layers."""
         assert w.ndim in (3, 4), w.shape
         e, k, n = w.shape[-3:]
+        b_dtype, gran = _parse_quantize(quantize)
         plan = plan or plan_grouped_gemm(
             e, m_hint, k, n, jnp.dtype(w.dtype).name,
-            n_b_streams=n_b_streams, b_dtype=_quant_b_dtype(quantize))
+            n_b_streams=n_b_streams, b_dtype=b_dtype,
+            scale_granularity=gran)
         cls._check_quantize_plan(plan, quantize)
         fmt = plan.b_format
         be = backend or default_backend()
@@ -367,15 +389,16 @@ class GroupedPackedWeight(_PackedCommon):
                 b2_packed=b2.packed if b2 is not None else None,
                 bm=bm, layout_b=self.plan.layout_b, b_scales=scales,
                 b2_scales=b2.scales if b2 is not None else None, bias=bias,
-                epilogue=epilogue, out_dtype=out_dtype or a.dtype)
+                epilogue=epilogue, b_format=self.fmt,
+                out_dtype=out_dtype or a.dtype)
             faults.maybe_fail("kernel_run")
             return out
         b_full = ref.unpack_b_grouped_ref(self.packed, self.k, self.n,
                                           self.plan.layout_b,
-                                          scales=scales)
+                                          scales=scales, fmt=self.fmt)
         b2_full = (ref.unpack_b_grouped_ref(b2.packed, self.k, self.n,
                                             self.plan.layout_b,
-                                            scales=b2.scales)
+                                            scales=b2.scales, fmt=self.fmt)
                    if b2 is not None else None)
         epi = (None if epilogue in ("none", "silu_gate")
                else lambda x: apply_epilogue(epilogue, x))
@@ -468,12 +491,14 @@ class GroupedPackedWeight(_PackedCommon):
                                       layout_b=self.plan.layout_b,
                                       b_scales=scales, bias=bias,
                                       epilogue=epilogue,
+                                      b_format=self.fmt,
                                       out_dtype=out_dtype or a.dtype)
             faults.maybe_fail("kernel_run")
             return out
         acc = ref.grouped_fused_acc_ref(a, self.packed, self.n,
                                         layout_b=self.plan.layout_b,
-                                        bm=bm, b_scales=scales)
+                                        bm=bm, b_scales=scales,
+                                        fmt=self.fmt)
         out = strat.grouped_epilogue(acc, None, bias, epilogue,
                                      out_dtype or a.dtype)
         faults.maybe_fail("kernel_run")
@@ -491,15 +516,18 @@ class GroupedPackedWeight(_PackedCommon):
                                       b_scales=scales,
                                       b2_scales=up.scales,
                                       epilogue="silu_gate",
+                                      b_format=self.fmt,
                                       out_dtype=out_dtype or a.dtype)
             faults.maybe_fail("kernel_run")
             return out
         gate = ref.grouped_fused_acc_ref(a, self.packed, self.n,
                                          layout_b=self.plan.layout_b,
-                                         bm=bm, b_scales=scales)
+                                         bm=bm, b_scales=scales,
+                                         fmt=self.fmt)
         up_acc = ref.grouped_fused_acc_ref(a, up.packed, up.n,
                                            layout_b=up.plan.layout_b,
-                                           bm=bm, b_scales=up.scales)
+                                           bm=bm, b_scales=up.scales,
+                                           fmt=up.fmt)
         out = strat.grouped_epilogue(gate, up_acc, None, "silu_gate",
                                      out_dtype or a.dtype)
         faults.maybe_fail("kernel_run")

@@ -44,9 +44,12 @@ class GemmPlan:
     double_buffer: int = 2
     vmem_budget: int = V5E.vmem_bytes
     # B-operand element dtype when it differs from the compute dtype —
-    # int8 weight streams (dequant-in-epilogue) halve/quarter the resident
-    # B footprint, so the byte accounting below is per-operand.
+    # int8/int4 weight streams (dequant-in-epilogue) halve/quarter the
+    # resident B footprint, so the byte accounting below is per-operand.
     b_dtype: Optional[str] = None
+    # Scale granularity of a quantized B: "tile" (per-(Kb,Nb), applied per
+    # K-step) or "col" (per-Nb column, hoisted into the store epilogue).
+    b_scale: str = "tile"
 
     @property
     def vaccs(self) -> int:
@@ -64,8 +67,9 @@ class GemmPlan:
         (per-tile f32 scales, dequant fused into the kernel)."""
         bdt = self.b_dtype or self.dtype
         quant = is_dequant_pair(self.dtype, bdt)
+        scale = ScaleSpec(granularity=self.b_scale) if quant else None
         return TileFormat(bk=self.bk, bn=self.bn, layout=self.layout_b,
-                          dtype=bdt, scale=ScaleSpec() if quant else None)
+                          dtype=bdt, scale=scale)
 
     def vmem_working_set(self) -> int:
         item = mdt.info(self.dtype).itemsize
@@ -101,13 +105,17 @@ def plan_gemm(m: int, k: int, n: int, dtype="float32", *,
               vmem_budget: int | None = None,
               double_buffer: int = 2,
               layout_a: str = "row",
-              layout_b: str = "row") -> GemmPlan:
+              layout_b: str = "row",
+              scale_granularity: str = "tile") -> GemmPlan:
     """Solve the TPU-translated constraint system for a concrete problem.
 
     ``b_dtype`` is the B-operand element dtype when it differs from the
-    compute dtype (int8 dequant-in-epilogue weights): the (C1) byte terms are
-    per-operand, so a narrow B stream buys deeper bk / wider bn before the
-    budget binds — and the emitted plan's ``b_format`` is quantized.
+    compute dtype (int8/int4 dequant-in-epilogue weights): the (C1) byte
+    terms are per-operand, so a narrow B stream — 0.5 bytes/element for
+    nibble-packed int4 — buys deeper bk / wider bn before the budget binds,
+    and the emitted plan's ``b_format`` is quantized.
+    ``scale_granularity`` picks the quantized format's scale convention
+    ("tile" per-(Kb,Nb), "col" per-Nb-column store-only dequant).
     """
     d = mdt.info(jnp.dtype(dtype).name if not isinstance(dtype, str) else dtype)
     b_item = (mdt.info(jnp.dtype(b_dtype).name).itemsize if b_dtype
@@ -135,8 +143,9 @@ def plan_gemm(m: int, k: int, n: int, dtype="float32", *,
     # (C1) maximize bk first — the paper's "larger kc" insight (Eq. 1).
     def max_bk(bm_: int, bn_: int) -> int:
         avail = budget - bm_ * bn_ * acc_item - scale_bytes
+        # per_k may be fractional (sub-byte b_item): floor to int k-steps.
         per_k = double_buffer * (bm_ * d.itemsize + bn_ * b_item)
-        return max(avail // per_k, lane)
+        return max(int(avail / per_k), lane)
 
     bk = clipped(_round_down(max_bk(bm, bn), lane), k, lane)
 
@@ -173,7 +182,7 @@ def plan_gemm(m: int, k: int, n: int, dtype="float32", *,
     plan = GemmPlan(bm=bm, bk=bk, bn=bn, dtype=d.name, acc_dtype=d.acc_dtype,
                     layout_a=layout_a, layout_b=layout_b,
                     double_buffer=double_buffer, vmem_budget=budget,
-                    b_dtype=b_dtype)
+                    b_dtype=b_dtype, b_scale=scale_granularity)
     plan.validate(target)
     return plan
 
@@ -183,7 +192,8 @@ def plan_grouped_gemm(e: int, m: int, k: int, n: int, dtype="float32", *,
                       target: TpuTarget = V5E,
                       n_b_streams: int = 1,
                       double_buffer: int = 2,
-                      layout_b: str = "row") -> GemmPlan:
+                      layout_b: str = "row",
+                      scale_granularity: str = "tile") -> GemmPlan:
     """Plan for the grouped kernel: one expert's [m,k,n] problem at a time.
 
     The expert axis is the outermost grid dimension, so only one expert's
@@ -206,7 +216,8 @@ def plan_grouped_gemm(e: int, m: int, k: int, n: int, dtype="float32", *,
             + plan.bm * plan.bn * acc_item)
 
     plan = plan_gemm(m, k, n, dtype, b_dtype=b_dtype, target=target,
-                     double_buffer=double_buffer, layout_b=layout_b)
+                     double_buffer=double_buffer, layout_b=layout_b,
+                     scale_granularity=scale_granularity)
     if n_b_streams > 1 and (plan.vmem_working_set() + extra_for(plan)
                             > target.vmem_bytes):
         # Re-solve with an even budget split. Each extra stream's reservation
@@ -215,6 +226,7 @@ def plan_grouped_gemm(e: int, m: int, k: int, n: int, dtype="float32", *,
         # always fits n_b_streams-fold.
         plan = plan_gemm(m, k, n, dtype, b_dtype=b_dtype, target=target,
                          double_buffer=double_buffer, layout_b=layout_b,
+                         scale_granularity=scale_granularity,
                          vmem_budget=target.vmem_bytes // n_b_streams)
         assert plan.vmem_working_set() + extra_for(plan) <= target.vmem_bytes
     return plan

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from jax.experimental import pallas as pl  # noqa: F401  (re-exported)
 
-from repro.core.tile_format import TileFormat  # noqa: F401  (re-exported)
+from repro.core.tile_format import (TileFormat,  # noqa: F401  (re-exported)
+                                    unpack_nibbles)
 
 try:
     from jax.experimental.pallas import tpu as pltpu
@@ -117,14 +118,24 @@ def split_epilogue_refs(rest, has_bias: bool, has_scale: bool = False):
 
 def b_tile_spec(fmt: TileFormat, index_map, *, lead: int = 2):
     """BlockSpec for one packed-B tile of a ``[*lead-grid, t0, t1]`` stack
-    (``lead=2`` dense [Nb,Kb,...], ``lead=3`` grouped [E,Nb,Kb,...])."""
-    return pl.BlockSpec((1,) * lead + fmt.tile_shape, index_map)
+    (``lead=2`` dense [Nb,Kb,...], ``lead=3`` grouped [E,Nb,Kb,...]).
+    Blocks are STORAGE tiles: nibble-packed int4 streams the halved-minor
+    int8 buffer (0.25x bf16 HBM->VMEM traffic) and widens in-kernel."""
+    return pl.BlockSpec((1,) * lead + fmt.storage_tile_shape, index_map)
 
 
 def scale_tile_spec(fmt: TileFormat, b_index_map, *, lead: int = 2):
-    """BlockSpec for the per-tile scale operand ([Nb,Kb] / [E,Nb,Kb]):
-    mirrors B's index map with the trailing intra-tile (0, 0) dropped."""
-    del fmt  # geometry is fully determined by the mirrored map
+    """BlockSpec for the scale operand, mirroring B's index map.
+
+    Per-tile ([Nb,Kb] / [E,Nb,Kb]): drop B's trailing intra-tile (0, 0).
+    Per-column ([Nb] / [E,Nb]): also drop the K coordinate — the scale is
+    K-invariant, which is exactly why the kernels can hoist its multiply
+    out of the K loop into the store epilogue."""
+    if fmt.scale is not None and fmt.scale.granularity == "col":
+        def col_map(*args):
+            return b_index_map(*args)[:-3]
+
+        return pl.BlockSpec((1,) * (lead - 1), col_map)
 
     def scale_map(*args):
         return b_index_map(*args)[:-2]
@@ -142,15 +153,23 @@ def apply_tile_scale(partial, scale_ref):
 
 
 def contract_tile(a, b_tile, scale_ref, fmt: TileFormat, acc_dtype):
-    """One micro-kernel step over a packed-B tile: cast a quantized tile up to
-    the activation dtype (int8 tiles stream narrow from HBM; the MXU pass
-    runs in the compute dtype), contract per the format's intra-tile layout,
-    and dequantize the partial product with the tile's scale."""
-    if scale_ref is not None and b_tile.dtype != a.dtype:
+    """One micro-kernel step over a packed-B tile: widen a sub-byte tile to
+    i8 via shift/mask on the VMEM block (nibble-packed int4), cast a
+    quantized tile up to the activation dtype (int tiles stream narrow from
+    HBM; the MXU pass runs in the compute dtype), contract per the format's
+    intra-tile layout, and dequantize the partial product with the tile's
+    scale. Col-granularity scales are NOT applied here — they are
+    K-invariant and multiply the finished accumulator once in
+    :func:`finalize_gemm` (or the grouped kernels' inline epilogues)."""
+    if fmt.sub_byte:
+        b_tile = unpack_nibbles(b_tile)
+    if (fmt.is_quantized or scale_ref is not None) and b_tile.dtype != a.dtype:
         b_tile = b_tile.astype(a.dtype)
     partial = jax.lax.dot_general(
         a, b_tile, (((1,), (fmt.rhs_contract,)), ((), ())),
         preferred_element_type=acc_dtype)
+    if fmt.scale is not None and fmt.scale.granularity == "col":
+        return partial
     return apply_tile_scale(partial, scale_ref)
 
 
@@ -161,12 +180,19 @@ def bias_spec_and_operand(bias, n, bn):
     return spec, pad2d(bias.reshape(1, n), 1, bn)
 
 
-def finalize_gemm(acc_ref, c_ref, bias_ref, o_ref, *, alpha, beta, epilogue):
-    """Shared fused store epilogue for every GEMM kernel: alpha/beta, then
-    bias, then activation — the EpilogueSpec chain order, applied to the
-    VMEM-resident f32 accumulator, then the single cast-and-store to HBM.
+def finalize_gemm(acc_ref, c_ref, bias_ref, o_ref, *, alpha, beta, epilogue,
+                  scale_ref=None):
+    """Shared fused store epilogue for every GEMM kernel: (col-scale
+    dequant,) alpha/beta, then bias, then activation — the EpilogueSpec
+    chain order, applied to the VMEM-resident f32 accumulator, then the
+    single cast-and-store to HBM. ``scale_ref`` is the hoisted
+    col-granularity dequant scale (one scalar per Nb column), the store-only
+    dequant step that runs ahead of bias/activation for K-invariant scales.
     ``epilogue`` is an in-kernel name or an EpilogueSpec (normalized)."""
-    out = alpha * acc_ref[...]
+    out = acc_ref[...]
+    if scale_ref is not None:
+        out = out * scale_ref[...].reshape(1, 1).astype(out.dtype)
+    out = alpha * out
     if beta != 0:
         out = out + beta * c_ref[...].astype(acc_ref.dtype)
     if bias_ref is not None:

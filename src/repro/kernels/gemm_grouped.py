@@ -82,19 +82,28 @@ def _grouped_kernel(*refs, k_steps, fmt, epilogue, has_bias, has_scale,
     a = a_ref[0]       # [bm, bk] strided block of the NATURAL [E, M, K] layout
     # Quantized stacks dequantize per K-step (per-tile scale on the f32
     # accumulator path, gate and up each with their own scale grid).
+    # Col-granularity scales are K-invariant: contract_tile skips them and
+    # the epilogue below applies them once (store-only dequant).
     r.acc[...] += contract_tile(a, b_ref[0, 0, 0], r.scale, fmt, r.acc.dtype)
     if has_gate:
         r.acc2[...] += contract_tile(a, r.b2[0, 0, 0], r.scale2, fmt,
                                      r.acc2.dtype)
 
+    col_scale = fmt.scale is not None and fmt.scale.granularity == "col"
+
     @pl.when(pl.program_id(3) == k_steps - 1)
     def _epilogue():
         out = r.acc[...]
+        if col_scale:  # hoisted dequant, ahead of bias/activation/gate
+            out = out * r.scale[...].reshape(1, 1).astype(out.dtype)
         if r.bias is not None:
             out = out + r.bias[0].astype(out.dtype)     # [1,bn] broadcast
         if has_gate:
             # silu(gate) * up on the VMEM accumulators — the MoE pair fusion.
-            out = KERNEL_EPILOGUES["silu"](out) * r.acc2[...]
+            up = r.acc2[...]
+            if col_scale:
+                up = up * r.scale2[...].reshape(1, 1).astype(up.dtype)
+            out = KERNEL_EPILOGUES["silu"](out) * up
         else:
             out = KERNEL_EPILOGUES[epilogue](out)
         r.out[0] = out.astype(r.out.dtype)
@@ -112,6 +121,7 @@ def gemm_grouped_packed(a: jnp.ndarray,
                         out_dtype=None,
                         epilogue: str = "none",
                         bias: jnp.ndarray | None = None,
+                        b_format: TileFormat | None = None,
                         interpret: bool | None = None) -> jnp.ndarray:
     """Grouped pack-free-A GEMM: out[e] = epilogue(A[e] @ unpack(B[e]) + bias[e]).
 
@@ -123,10 +133,15 @@ def gemm_grouped_packed(a: jnp.ndarray,
     epilogue: a name from ``KERNEL_EPILOGUES``, or ``"silu_gate"`` — then
               ``b2_packed`` (same packed geometry) must be given and the
               kernel returns ``silu(A@B) * (A@B2)`` computed in one pass.
-    b_scales / b2_scales: per-tile [E, Nb, Kb] f32 scale grids for int8
-              quantized stacks (from a quantized ``pack_b_grouped``); the
-              dequant is fused per K-step ahead of every store epilogue,
-              so bias / activation / silu-gate work quantized unchanged.
+    b_scales / b2_scales: f32 scale grids for quantized stacks (from a
+              quantized ``pack_b_grouped``): per-tile [E, Nb, Kb] dequant
+              is fused per K-step ahead of every store epilogue; per-column
+              [E, Nb] (``granularity="col"``) dequant hoists into the store
+              epilogue itself — either way bias / activation / silu-gate
+              work quantized unchanged.
+    b_format: the authoritative :class:`TileFormat` — REQUIRED for
+              nibble-packed int4 stacks and col-granularity scales (neither
+              is inferable from the buffer); inferred when omitted.
 
     Returns [E, M, n].
     """
@@ -139,7 +154,8 @@ def gemm_grouped_packed(a: jnp.ndarray,
     has_scale = b_scales is not None
     if has_gate and has_scale != (b2_scales is not None):
         raise ValueError("quantized silu_gate needs BOTH scale grids")
-    fmt = TileFormat.from_packed(b_packed, layout_b, has_scales=has_scale)
+    fmt = b_format if b_format is not None else TileFormat.from_packed(
+        b_packed, layout_b, has_scales=has_scale)
     e, m, k = a.shape
     eb, nb, kb = b_packed.shape[:3]
     assert eb == e, (a.shape, b_packed.shape)
@@ -164,13 +180,14 @@ def gemm_grouped_packed(a: jnp.ndarray,
         in_specs.append(b_tile_spec(fmt, b_map, lead=3))
         operands.append(b2_packed)
     if has_scale:
-        assert b_scales.shape == (e, nb, kb), (b_scales.shape,
-                                               b_packed.shape)
+        col = fmt.scale is not None and fmt.scale.granularity == "col"
+        want = (e, nb) if col else (e, nb, kb)
+        assert b_scales.shape == want, (b_scales.shape, b_packed.shape, want)
         in_specs.append(scale_tile_spec(fmt, b_map, lead=3))
         operands.append(b_scales)
         if has_gate:
-            assert b2_scales.shape == (e, nb, kb), (b2_scales.shape,
-                                                    b_packed.shape)
+            assert b2_scales.shape == want, (b2_scales.shape,
+                                             b_packed.shape, want)
             in_specs.append(scale_tile_spec(fmt, b_map, lead=3))
             operands.append(b2_scales)
     has_bias = bias is not None
@@ -235,13 +252,20 @@ def _ragged_kernel(*refs, k_steps, bm, fmt, epilogue, has_bias, has_scale,
             r.acc2[...] += contract_tile(a_ref[0], r.b2[0, 0, 0], r.scale2,
                                          fmt, r.acc2.dtype)
 
+    col_scale = fmt.scale is not None and fmt.scale.granularity == "col"
+
     @pl.when(live & last_k)
     def _epilogue():
         out = r.acc[...]
+        if col_scale:  # hoisted dequant, ahead of bias/activation/gate
+            out = out * r.scale[...].reshape(1, 1).astype(out.dtype)
         if r.bias is not None:
             out = out + r.bias[0].astype(out.dtype)
         if has_gate:
-            out = KERNEL_EPILOGUES["silu"](out) * r.acc2[...]
+            up = r.acc2[...]
+            if col_scale:
+                up = up * r.scale2[...].reshape(1, 1).astype(up.dtype)
+            out = KERNEL_EPILOGUES["silu"](out) * up
         else:
             out = KERNEL_EPILOGUES[epilogue](out)
         # Masked store: rows at/past the count are written as zeros, so
@@ -270,6 +294,7 @@ def gemm_grouped_packed_ragged(a: jnp.ndarray,
                                out_dtype=None,
                                epilogue: str = "none",
                                bias: jnp.ndarray | None = None,
+                               b_format: TileFormat | None = None,
                                interpret: bool | None = None) -> jnp.ndarray:
     """Occupancy-aware grouped GEMM over a scalar-prefetched count vector.
 
@@ -280,10 +305,13 @@ def gemm_grouped_packed_ragged(a: jnp.ndarray,
               segment. Prefetched to SMEM before the grid runs, so both the
               index maps and the kernel body can branch on it.
     b_packed: [E, Nb, Kb, bk, bn] from ``pack.pack_b_grouped`` (load time).
-    b_scales / b2_scales: [E, Nb, Kb] f32 per-tile scale grids (quantized
-              int8 stacks); the scale operand's index map mirrors B's —
-              including the count-aware index pinning, so skipped steps
-              fetch no new scales either.
+    b_scales / b2_scales: f32 scale grids (quantized stacks): per-tile
+              [E, Nb, Kb] or per-column [E, Nb] (``granularity="col"``,
+              dequant hoisted into the store epilogue). The scale operand's
+              index map mirrors B's — including the count-aware index
+              pinning, so skipped steps fetch no new scales either.
+    b_format: authoritative :class:`TileFormat` (REQUIRED for int4 /
+              col-scale stacks; inferred from the buffer when omitted).
 
     Returns [E, S, C, n]; rows at/past ``counts[e, s]`` are zero. Up to the
     masked tail rows, the result is identical to ``gemm_grouped_packed`` on
@@ -302,7 +330,8 @@ def gemm_grouped_packed_ragged(a: jnp.ndarray,
     has_scale = b_scales is not None
     if has_gate and has_scale != (b2_scales is not None):
         raise ValueError("quantized silu_gate needs BOTH scale grids")
-    fmt = TileFormat.from_packed(b_packed, layout_b, has_scales=has_scale)
+    fmt = b_format if b_format is not None else TileFormat.from_packed(
+        b_packed, layout_b, has_scales=has_scale)
     e, s, c, k = a.shape
     eb, nb, kb = b_packed.shape[:3]
     assert eb == e, (a.shape, b_packed.shape)
@@ -346,13 +375,14 @@ def gemm_grouped_packed_ragged(a: jnp.ndarray,
         in_specs.append(b_tile_spec(fmt, b_map, lead=3))
         operands.append(b2_packed)
     if has_scale:
-        assert b_scales.shape == (e, nb, kb), (b_scales.shape,
-                                               b_packed.shape)
+        col = fmt.scale is not None and fmt.scale.granularity == "col"
+        want = (e, nb) if col else (e, nb, kb)
+        assert b_scales.shape == want, (b_scales.shape, b_packed.shape, want)
         in_specs.append(scale_tile_spec(fmt, b_map, lead=3))
         operands.append(b_scales)
         if has_gate:
-            assert b2_scales.shape == (e, nb, kb), (b2_scales.shape,
-                                                    b_packed.shape)
+            assert b2_scales.shape == want, (b2_scales.shape,
+                                             b_packed.shape, want)
             in_specs.append(scale_tile_spec(fmt, b_map, lead=3))
             operands.append(b2_scales)
     has_bias = bias is not None
@@ -393,14 +423,22 @@ def gemm_grouped_packed_ragged(a: jnp.ndarray,
 
 def unpack_b_grouped(b_packed: jnp.ndarray, k: int, n: int,
                      layout_b: str = "row",
-                     scales: jnp.ndarray | None = None) -> jnp.ndarray:
+                     scales: jnp.ndarray | None = None,
+                     fmt: TileFormat | None = None) -> jnp.ndarray:
     """Tile-major [E, Nb, Kb, bk, bn] -> natural [E, K, N] view (one copy).
 
-    ``scales`` ([E, Nb, Kb], quantized stacks) dequantizes each tile before
-    the reshape — the natural view is then float.
+    ``scales`` ([E, Nb, Kb] per-tile / [E, Nb] per-column, quantized
+    stacks) dequantizes each tile before the reshape — the natural view is
+    then float. ``fmt`` is required for nibble-packed int4 stacks (the
+    buffer is widened to i8 first).
     """
+    if fmt is not None and fmt.sub_byte:
+        from repro.core.tile_format import unpack_nibbles
+        b_packed = unpack_nibbles(b_packed)
     if scales is not None:
-        b_packed = b_packed.astype(scales.dtype) * scales[..., None, None]
+        extra = b_packed.ndim - scales.ndim
+        b_packed = (b_packed.astype(scales.dtype)
+                    * scales[(...,) + (None,) * extra])
     if layout_b == "col":
         b_packed = b_packed.transpose(0, 1, 2, 4, 3)
     e, nb, kb, bk, bn = b_packed.shape
@@ -420,7 +458,9 @@ def gemm_grouped_packed_ragged_jnp(a: jnp.ndarray,
                                    b2_scales: jnp.ndarray | None = None,
                                    out_dtype=None,
                                    epilogue: str = "none",
-                                   bias: jnp.ndarray | None = None) -> jnp.ndarray:
+                                   bias: jnp.ndarray | None = None,
+                                   b_format: TileFormat | None = None,
+                                   ) -> jnp.ndarray:
     """jnp lowering of :func:`gemm_grouped_packed_ragged` (CPU-native).
 
     Same contract and (segment, m-block) decomposition; the early-out is a
@@ -452,9 +492,11 @@ def gemm_grouped_packed_ragged_jnp(a: jnp.ndarray,
     mb = cdiv(c, bm)
     cp = mb * bm
     b_full = unpack_b_grouped(b_packed, k, n, layout_b,
-                              scales=b_scales).astype(jnp.float32)
+                              scales=b_scales,
+                              fmt=b_format).astype(jnp.float32)
     b2_full = (unpack_b_grouped(b2_packed, k, n, layout_b,
-                                scales=b2_scales).astype(jnp.float32)
+                                scales=b2_scales,
+                                fmt=b_format).astype(jnp.float32)
                if has_gate else None)
     a3 = a.reshape(grp, c, k).astype(jnp.float32)
     if cp != c:

@@ -75,13 +75,19 @@ def _fused_a_kernel(a_ref, b_ref, c_ref, *rest, alpha, beta, k_steps,
     a = a_ref[...]   # [bm,bk] strided block of the NATURAL [M,K] operand
     b = b_ref[0, 0]  # [bk,bn] ("row") or [bn,bk] ("col") pre-packed tile
     # Quantized B dequantizes per K-step on the f32 accumulator (the tile's
-    # scalar scale rides the mirrored BlockSpec), ahead of the store epilogue.
+    # scalar scale rides the mirrored BlockSpec), ahead of the store
+    # epilogue. A col-granularity scale is K-invariant and hoists out of
+    # the K loop entirely: contract_tile skips it and finalize_gemm applies
+    # it once to the finished accumulator (store-only dequant).
     acc_ref[...] += contract_tile(a, b, scale_ref, fmt, acc_ref.dtype)
+
+    col_scale = fmt.scale is not None and fmt.scale.granularity == "col"
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _epilogue():
         finalize_gemm(acc_ref, c_ref, bias_ref, o_ref, alpha=alpha, beta=beta,
-                      epilogue=epilogue)
+                      epilogue=epilogue,
+                      scale_ref=scale_ref if col_scale else None)
 
 
 def gemm_packed(a_packed: jnp.ndarray,
@@ -166,6 +172,7 @@ def gemm_packed_fused_a(a: jnp.ndarray,
                         out_dtype=None,
                         epilogue: str = "none",
                         bias: jnp.ndarray | None = None,
+                        b_format: TileFormat | None = None,
                         interpret: bool | None = None) -> jnp.ndarray:
     """Pack-free-A GEMM: C[:m,:n] <- epilogue(alpha*A@unpack(B) + beta*C + bias).
 
@@ -174,15 +181,21 @@ def gemm_packed_fused_a(a: jnp.ndarray,
     tile-major copy of A is ever materialized. B must be pre-packed with
     ``pack_b`` (typically once, at weight-load time).
 
-    ``b_scales`` ([Nb, Kb] f32, from a quantized ``pack_b``) marks B as int8
-    dequant-in-epilogue: the scale rides a BlockSpec mirroring B's index map
-    and each K-step's partial product is multiplied by its tile's scale on
-    the f32 accumulator, before the (bias/activation) store epilogue.
+    ``b_scales`` (f32, from a quantized ``pack_b``) marks B as
+    dequant-in-epilogue: [Nb, Kb] per-tile scales ride a BlockSpec
+    mirroring B's index map and multiply each K-step's partial product on
+    the f32 accumulator; [Nb] per-column scales (``granularity="col"``)
+    multiply the finished accumulator once in the store epilogue, ahead of
+    bias/activation. ``b_format`` is the authoritative :class:`TileFormat`
+    of the packed stack — REQUIRED for nibble-packed int4 buffers (an int4
+    stack is physically int8 with a halved trailing dim, so
+    ``from_packed`` inference cannot see it) and for col-granularity
+    scales; when omitted the format is inferred from the buffer.
     """
     if interpret is None:
         interpret = default_interpret()
-    fmt = TileFormat.from_packed(b_packed, layout_b,
-                                 has_scales=b_scales is not None)
+    fmt = b_format if b_format is not None else TileFormat.from_packed(
+        b_packed, layout_b, has_scales=b_scales is not None)
     m, k = a.shape
     nb, kb = b_packed.shape[:2]
     bk, bn = fmt.bk, fmt.bn
@@ -208,7 +221,9 @@ def gemm_packed_fused_a(a: jnp.ndarray,
     operands = [a_p, b_packed, c_p]
     has_scale = b_scales is not None
     if has_scale:
-        assert b_scales.shape == (nb, kb), (b_scales.shape, b_packed.shape)
+        col = fmt.scale is not None and fmt.scale.granularity == "col"
+        want = (nb,) if col else (nb, kb)
+        assert b_scales.shape == want, (b_scales.shape, b_packed.shape, want)
         in_specs.append(scale_tile_spec(fmt, b_map))
         operands.append(b_scales)
     has_bias = bias is not None

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.tile_format import (TileFormat, as_tile_format,
-                                    quantize_tiles)
+                                    pack_nibbles, quantize_tiles)
 from repro.kernels.common import cdiv, default_interpret, pad2d, pallas_kwargs
 from repro.testing import faults
 
@@ -73,12 +73,14 @@ def _pack(x: jnp.ndarray, b0: int, b1: int, *, grid_order: str, layout: str,
 
 
 def _quantize_natural(b: jnp.ndarray, fmt: TileFormat):
-    """Float B[K,N] -> (int8 natural-layout values, [Nb, Kb] scales).
+    """Float B[K,N] -> (int8 natural-layout values, scales).
 
-    The per-tile scales come from the shared ``quantize_b_tiles_ref``
-    contract (absmax/127, zero tiles -> 1.0); the quantized values are
+    The scales come from the shared ``quantize_b_tiles_ref`` contract
+    (absmax/qmax per tile [Nb, Kb] or per column [Nb], zero groups -> 1.0);
+    the quantized values (int4's stay UNPACKED i8 in [-7, 7] here) are
     scattered back to the natural layout so the Pallas tile-major copy
-    below stays the single packing code path.
+    below stays the single packing code path — sub-byte nibble packing is
+    the caller's final storage step after that copy.
     """
     assert jnp.issubdtype(b.dtype, jnp.floating), (
         f"quantized packing consumes float weights; got {b.dtype}")
@@ -111,6 +113,8 @@ def pack_b(b: jnp.ndarray, bk, bn: int | None = None, layout: str = "row",
         b, scales = _quantize_natural(b, fmt)
     packed = _pack(b, fmt.bk, fmt.bn, grid_order="col", layout=fmt.layout,
                    interpret=interpret)
+    if fmt.sub_byte:
+        packed = pack_nibbles(packed)  # final storage step: 2 values/byte
     return (packed, scales) if fmt.is_quantized else packed
 
 
@@ -150,6 +154,8 @@ def pack_b_grouped(b: jnp.ndarray, bk, bn: int | None = None,
                         dimension_semantics=("parallel", "parallel",
                                              "parallel")),
     )(b_p)
+    if fmt.sub_byte:
+        packed = pack_nibbles(packed)  # final storage step: 2 values/byte
     return (packed, scales) if fmt.is_quantized else packed
 
 

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tile_format import (TileFormat, as_tile_format,
-                                    quantize_tiles)
+                                    pack_nibbles, quantize_tiles,
+                                    unpack_nibbles)
 
 
 # ---------------------------------------------------------------------------
@@ -74,8 +75,11 @@ def pack_b_ref(b: jnp.ndarray, bk, bn: int | None = None,
     (Fig. 2b), which makes the micro kernel's B stream unit-stride.
 
     ``bk`` may be a :class:`TileFormat` (the ``bn``/``layout`` arguments are
-    then unused). A QUANTIZED format returns ``(packed, scales)``: per-tile
-    absmax/127 f32 scales [Nb, Kb] and the rounded-and-clipped int8 tiles.
+    then unused). A QUANTIZED format returns ``(packed, scales)``: the
+    rounded-and-clipped int tiles plus f32 scales — per-tile [Nb, Kb]
+    (absmax/127) or per-column [Nb] (``granularity="col"``). A sub-byte
+    (int4) format's stored tiles are nibble-packed along the trailing tile
+    axis as the final storage step (two values per byte, absmax/7).
     """
     fmt = as_tile_format(bk, bn, layout=layout, dtype=b.dtype)
     b = _pad_to(b, fmt.bk, fmt.bn)
@@ -88,6 +92,8 @@ def pack_b_ref(b: jnp.ndarray, bk, bn: int | None = None,
         t, scales = quantize_b_tiles_ref(t, fmt)
     if fmt.layout == "col":
         t = t.transpose(0, 1, 3, 2)
+    if fmt.sub_byte:
+        t = pack_nibbles(t)
     return (t, scales) if fmt.is_quantized else t
 
 
@@ -103,30 +109,43 @@ def unpack_a_ref(ap: jnp.ndarray, m: int, k: int, layout: str = "row"):
     return ap.transpose(0, 2, 1, 3).reshape(mb * bm, kb * bk)[:m, :k]
 
 
-def unpack_b_ref(bp: jnp.ndarray, k: int, n: int, layout: str = "row"):
+def unpack_b_ref(bp: jnp.ndarray, k: int, n: int, layout: str = "row",
+                 fmt: TileFormat | None = None):
+    """Tile-major stack -> natural [K, N]. ``fmt`` is required to recover a
+    sub-byte stack (the buffer alone can't reveal nibble packing)."""
+    if fmt is not None and fmt.sub_byte:
+        bp = unpack_nibbles(bp)
     if layout == "col":
         bp = bp.transpose(0, 1, 3, 2)
     nb, kb, bk, bn = bp.shape
     return bp.transpose(1, 2, 0, 3).reshape(kb * bk, nb * bn)[:k, :n]
 
 
-def dequant_b_tiles_ref(bp: jnp.ndarray, scales) -> jnp.ndarray:
-    """[..., Nb, Kb, t0, t1] int tiles + [..., Nb, Kb] scales -> float tiles.
+def dequant_b_tiles_ref(bp: jnp.ndarray, scales,
+                        fmt: TileFormat | None = None) -> jnp.ndarray:
+    """Quantized tiles + scales -> float tiles — the dequantization oracle.
 
-    The dequantization oracle: per-tile scalar multiply (layout-agnostic —
-    the scale grid indexes tiles, not elements). No-op when ``scales`` is
-    None, so every unpack/acc oracle can take the scales unconditionally.
+    ``bp`` [..., Nb, Kb, t0, t1] (nibble-packed when ``fmt`` is sub-byte:
+    widened first); ``scales`` [..., Nb, Kb] (per-tile) or [..., Nb]
+    (per-column — broadcast over every Kb tile of the column). Scalar
+    multiply per reduction group, layout-agnostic (the scale grid indexes
+    tiles/columns, not elements). No-op when ``scales`` is None, so every
+    unpack/acc oracle can take the scales unconditionally.
     """
+    if fmt is not None and fmt.sub_byte:
+        bp = unpack_nibbles(bp)
     if scales is None:
         return bp
-    return bp.astype(scales.dtype) * scales[..., None, None]
+    extra = bp.ndim - scales.ndim
+    return bp.astype(scales.dtype) * scales[(...,) + (None,) * extra]
 
 
 def unpack_b_dequant_ref(bp: jnp.ndarray, scales, k: int, n: int,
-                         layout: str = "row"):
+                         layout: str = "row", fmt: TileFormat | None = None):
     """Quantized tile-major stack -> natural dequantized [K, N] (the
     round-trip oracle for ``pack_b_ref`` with a quantized format)."""
-    return unpack_b_ref(dequant_b_tiles_ref(bp, scales), k, n, layout)
+    return unpack_b_ref(dequant_b_tiles_ref(bp, scales, fmt=fmt), k, n,
+                        layout)
 
 
 def packed_matmul_ref(ap, bp, m: int, n: int, layout_a="row", layout_b="row",
@@ -138,18 +157,21 @@ def packed_matmul_ref(ap, bp, m: int, n: int, layout_a="row", layout_b="row",
 
 
 def fused_packed_acc_ref(a, bp, n: int, layout_b="row", bm: int = 8,
-                         b_scales=None):
+                         b_scales=None, fmt: TileFormat | None = None):
     """Pack-free-A contraction: natural-layout A against packed B.
 
     Returns the f32 accumulator [m, n] — the jnp lowering of
     ``gemm_packed_fused_a`` before its epilogue. A is consumed as a strided
     blocked view (reshape only — no tile-major copy is materialized). With
-    ``b_scales`` ([Nb, Kb], quantized B) the tiles are dequantized first —
-    the same function the kernel fuses per K-step.
+    ``b_scales`` ([Nb, Kb] per-tile / [Nb] per-column, quantized B) the
+    tiles are dequantized first — the same function the kernel fuses per
+    K-step (per-tile) or into its store epilogue (per-column). ``fmt`` is
+    required for sub-byte stacks (nibble widen precedes dequant).
     """
     m, k = a.shape
-    bp = dequant_b_tiles_ref(bp, b_scales)
-    fmt = TileFormat.from_packed(bp, layout_b)
+    bp = dequant_b_tiles_ref(bp, b_scales, fmt=fmt)
+    if fmt is None:
+        fmt = TileFormat.from_packed(bp, layout_b)
     nb, kb = bp.shape[:2]
     bk, bn = fmt.bk, fmt.bn
     assert -(-k // bk) == kb, (a.shape, bp.shape)
@@ -199,29 +221,33 @@ def pack_b_grouped_ref(b: jnp.ndarray, bk, bn: int | None = None,
 
 
 def unpack_b_grouped_ref(bp: jnp.ndarray, k: int, n: int,
-                         layout: str = "row", scales=None):
-    """[E, Nb, Kb, bk, bn] (+optional [E, Nb, Kb] scales) -> natural [E, K, N]
-    (single implementation in ``gemm_grouped.unpack_b_grouped``; re-exported
-    here beside the other pack/unpack oracles)."""
+                         layout: str = "row", scales=None,
+                         fmt: TileFormat | None = None):
+    """[E, Nb, Kb, bk, bn] (+optional [E, Nb, Kb] / [E, Nb] scales) ->
+    natural [E, K, N] (single implementation in
+    ``gemm_grouped.unpack_b_grouped``; re-exported here beside the other
+    pack/unpack oracles)."""
     from repro.kernels.gemm_grouped import unpack_b_grouped
-    return unpack_b_grouped(bp, k, n, layout, scales=scales)
+    return unpack_b_grouped(bp, k, n, layout, scales=scales, fmt=fmt)
 
 
 def grouped_fused_acc_ref(a, bp, n: int, layout_b="row", bm: int = 8,
-                          b_scales=None):
+                          b_scales=None, fmt: TileFormat | None = None):
     """Grouped pack-free-A contraction: natural [E,M,K] A against the packed
     expert stack [E,Nb,Kb,bk,bn]. Returns the f32 accumulator [E, m, n] —
     the jnp lowering of ``gemm_grouped_packed`` before its epilogue.
-    ``b_scales`` ([E, Nb, Kb]) dequantizes int8 stacks per tile."""
+    ``b_scales`` ([E, Nb, Kb] per-tile / [E, Nb] per-column) dequantizes
+    int stacks; ``fmt`` is required for sub-byte (int4) stacks."""
     if b_scales is None:
         return jax.vmap(
             lambda ae, bpe: fused_packed_acc_ref(ae, bpe, n,
                                                  layout_b=layout_b,
-                                                 bm=bm))(a, bp)
+                                                 bm=bm, fmt=fmt))(a, bp)
     return jax.vmap(
         lambda ae, bpe, se: fused_packed_acc_ref(ae, bpe, n,
                                                  layout_b=layout_b, bm=bm,
-                                                 b_scales=se))(a, bp, b_scales)
+                                                 b_scales=se,
+                                                 fmt=fmt))(a, bp, b_scales)
 
 
 def ragged_row_mask(c: int, counts):

@@ -54,8 +54,9 @@ def _pack_dense(w: jnp.ndarray, compute, quantize=None) -> PackedWeight:
 
     Uses the jnp packer on every backend: this runs once at load time, and
     the buffer layout is identical to the Pallas packer's. Stacking and
-    ``quantize="int8"`` (int8 tiles + a per-tile scale grid that scan-slices
-    alongside the packed buffer) are handled inside ``PackedWeight.pack``.
+    ``quantize`` ("int8"/"int4", optional ":col" — quantized tiles + a
+    scale grid that scan-slices alongside the packed buffer) are handled
+    inside ``PackedWeight.pack``.
     """
     return PackedWeight.pack(w.astype(compute), backend="jnp",
                              quantize=quantize)
@@ -86,12 +87,14 @@ def pack_model_params(cfg: ModelConfig, params: dict, *, dtype=None,
     kernels (dense and grouped), with the MoE gate/up pair fused into one
     silu-gate kernel pass.
 
-    ``quantize="int8"`` quantizes every packed weight — dense projections,
-    the LM head, and all three MoE expert stacks — to int8 tiles with
+    ``quantize`` quantizes every packed weight — dense projections, the LM
+    head, and all three MoE expert stacks. ``"int8"``: int8 tiles +
     per-(Kb,Nb)-tile f32 scales (narrow-HBM serving: B traffic halves vs
-    bf16). The kernels dequantize per tile on the f32 accumulator ahead of
-    the fused epilogues, so the serving numerics match a dequantized-weight
-    run to quantization error.
+    bf16); ``"int4"``: nibble-packed tiles (two values/byte, 0.25x bf16 B
+    traffic); a ``":col"`` suffix selects per-Nb-column scales applied once
+    in the store epilogue instead of per K-step. The kernels dequantize on
+    the f32 accumulator ahead of the fused epilogues, so the serving
+    numerics match a dequantized-weight run to quantization error.
     """
     compute = jnp.dtype(dtype or cfg.compute_dtype)
 

@@ -29,7 +29,8 @@ import numpy as np
 from repro.roofline.hw import V5E, TpuTarget, peak_flops
 
 _DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "pred": 1, "s4": 0.5, "u4": 0.5,  # sub-byte: two nibbles per stored byte
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
     "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
     "c64": 8, "c128": 16,
 }
@@ -47,8 +48,8 @@ _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 
 
-def _shape_bytes(types: str) -> int:
-    total = 0
+def _shape_bytes(types: str) -> float:
+    total = 0.0
     for dtype, dims in _SHAPE_RE.findall(types):
         if dtype not in _DTYPE_BYTES:
             continue

@@ -36,9 +36,10 @@ class TpuTarget:
     lane: int = 128                      # vector lane count (last-dim tile)
     sublane_bytes: int = 32              # second-minor tile = 32 bytes / lane
 
-    def sublane(self, itemsize: int) -> int:
-        """Second-minor tiling multiple for a dtype (8 f32 / 16 bf16 / 32 i8)."""
-        return max(self.sublane_bytes // itemsize, 1)
+    def sublane(self, itemsize: float) -> int:
+        """Second-minor tiling multiple for a dtype (8 f32 / 16 bf16 / 32 i8 /
+        64 nibble-packed i4; ``itemsize`` may be a fraction of a byte)."""
+        return max(int(self.sublane_bytes / itemsize), 1)
 
 
 V5E = TpuTarget()

@@ -42,16 +42,28 @@ Production posture:
     reference path), recording every degradation in the dispatch-health
     registry — a degraded deployment keeps serving AND says so through
     ``Engine.health_report()`` instead of crashing or silently slowing.
-  * ``ServeConfig.quantize="int8"`` (requires ``pack_weights=True``)
-    quantizes every packed weight at load — dense projections, the LM head,
-    and all three MoE expert stacks — to int8 tiles with per-(Kb,Nb)-tile
-    f32 scales (narrow-HBM serving: weight traffic halves vs bf16). Scale
-    contract: the [Nb, Kb] (grouped: [E, Nb, Kb]) scale grid rides next to
-    each packed buffer in the params tree, streams through a BlockSpec
-    mirroring B's index map (including the ragged path's count-aware index
-    pinning), and dequantizes each K-step's partial product on the VMEM f32
-    accumulator BEFORE bias/activation/silu-gate — so every fused epilogue
-    and the ragged counts path run quantized unchanged.
+  * ``ServeConfig.quantize`` (requires ``pack_weights=True``) quantizes
+    every packed weight at load — dense projections, the LM head, and all
+    three MoE expert stacks. ``"int8"``: int8 tiles + per-(Kb,Nb)-tile f32
+    scales (weight traffic halves vs bf16). ``"int4"``: nibble-packed tiles
+    — two values per byte, widened to i8 in-kernel by shift/mask, so B's
+    HBM→VMEM traffic is 0.25x bf16. A ``":col"`` suffix on either
+    ("int8:col" / "int4:col") switches to ONE f32 scale per Nb column.
+    Scale contract: the [Nb, Kb] (grouped: [E, Nb, Kb]) tile-granularity
+    scale grid rides next to each packed buffer in the params tree, streams
+    through a BlockSpec mirroring B's index map (including the ragged
+    path's count-aware index pinning), and dequantizes each K-step's
+    partial product on the VMEM f32 accumulator BEFORE
+    bias/activation/silu-gate; a col-granularity [Nb] ([E, Nb]) scale is
+    K-invariant, hoists out of the K loop entirely, and multiplies the
+    finished accumulator ONCE in the store epilogue (store-only dequant) —
+    still ahead of bias/activation/gate, so every fused epilogue and the
+    ragged counts path run quantized unchanged.
+  * the continuous-batching scheduler's paged KV pool quantizes
+    independently via ``ContinuousConfig.kv_quantize="int8"`` (int8 blocks
+    + per-position f32 scales; see ``serve.kv_cache``) — roughly 2x
+    concurrent resident tokens per KV byte budget, with the preempt/resume
+    and bisection contracts intact.
 """
 from __future__ import annotations
 
@@ -77,9 +89,12 @@ class ServeConfig:
     seed: int = 0
     pack_weights: bool = False    # load-time tile-major packing of all
                                   # dense weights (serving fast path)
-    quantize: str | None = None   # "int8": quantize packed weights at load
-                                  # (dequant-in-epilogue narrow-HBM serving;
-                                  # needs pack_weights=True)
+    quantize: str | None = None   # "int8" | "int4" (+":col"): quantize
+                                  # packed weights at load (dequant-in-
+                                  # epilogue narrow-HBM serving; int4 packs
+                                  # two nibbles/byte; ":col" = store-only
+                                  # per-column scales; needs
+                                  # pack_weights=True)
 
 
 def _find_moe_subtree(tree):

@@ -40,9 +40,33 @@ Supported families: decoder-only token LMs with full attention (dense / moe /
 parallel-block). Sliding-window rings, SSM state, and encoder-decoder caches
 are not paged here (the ring wrap and non-KV state break the block mapping);
 constructing a :class:`PagedKVCache` for one raises ``ValueError``.
+
+Quantized pool (``quantize="int8"``)
+====================================
+
+The pool leaves store int8 values plus per-POSITION f32 scale leaves
+``scales[name]: [L, num_blocks + 1, block_size]`` — one absmax/127 scale per
+(layer, position) over that position's ``[Hkv, D]`` vector, the KV analogue of
+the weight pipeline's scale-operand convention. Halved KV bytes per resident
+token ≈ 2x concurrent users per block budget. The contract clauses above hold
+unchanged, plus:
+
+* **Quantize exactly once per position.** Every write path — ``insert_dense``
+  scatter, ``write_position`` commit, the batched step's scatter, and resume
+  replay — quantizes a position's vector with the same formula at write time
+  and never re-quantizes it (re-quantizing a dequantized vector is NOT
+  idempotent: absmax drifts by the rounding error, which would break the
+  bitwise preempt/resume contract). Reads dequantize ``q * scale`` into the
+  compute dtype.
+* Per-position (not per-block) scales for the same reason: appending a
+  position to a block must not touch its neighbours' already-committed bytes.
+* The null block's scales are 1.0 (dequant of its zeros is exactly zero);
+  ``release`` scrubs a slot's scale entries back to 1.0 alongside the zeroed
+  values.
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, List, Optional
 
 import jax
@@ -83,6 +107,62 @@ def _gather_row(pool, row):
 def _write_pos(pool, dest, written):
     flat = pool.reshape(pool.shape[0], -1, *pool.shape[3:])
     return flat.at[:, dest].set(written).reshape(pool.shape)
+
+
+# Quantized-pool helpers. ``quantize_kv_position`` is the ONE quantization
+# formula (shared by every write path, inside and outside jit, so replayed
+# writes are bitwise the live writes); the rest mirror the float helpers with
+# a scale leaf riding along.
+
+def quantize_kv_position(x):
+    """``x: [..., Hkv, D]`` float -> (int8 values, f32 per-position scales
+    ``[...]``). absmax/127 per position; an all-zero position gets scale 1.0
+    (its zeros stay exactly zero through the round trip)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-2, -1))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[..., None, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype):
+    """Elementwise ``q * scale`` into the compute dtype (scale broadcasts
+    over the trailing [Hkv, D] axes)."""
+    return (q.astype(jnp.float32) * scale[..., None, None]).astype(dtype)
+
+
+@jax.jit
+def _scatter_blocks_q(pool, scales, row, leaf):
+    bs = pool.shape[2]
+    q, s = quantize_kv_position(leaf[:, 0])      # [L, max_len(, h, d)]
+    qb = q.reshape(q.shape[0], row.shape[0], bs, *q.shape[2:])
+    sb = s.reshape(s.shape[0], row.shape[0], bs)
+    return pool.at[:, row].set(qb), scales.at[:, row].set(sb)
+
+
+@jax.jit
+def _scrub_row_q(pool, scales, row):
+    zeros = jnp.zeros((pool.shape[0], row.shape[0], *pool.shape[2:]),
+                      pool.dtype)
+    ones = jnp.ones((scales.shape[0], row.shape[0], scales.shape[2]),
+                    scales.dtype)
+    return pool.at[:, row].set(zeros), scales.at[:, row].set(ones)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def _gather_row_q(pool, scales, row, *, dtype):
+    g = dequantize_kv(pool[:, row], scales[:, row], dtype)  # [L,MB,bs,h,d]
+    return g.reshape(g.shape[0], 1, row.shape[0] * pool.shape[2],
+                     *g.shape[3:])
+
+
+@jax.jit
+def _write_pos_q(pool, scales, dest, written):
+    q, s = quantize_kv_position(written)         # [L, h, d] -> [L]
+    flat = pool.reshape(pool.shape[0], -1, *pool.shape[3:])
+    sflat = scales.reshape(scales.shape[0], -1)
+    return (flat.at[:, dest].set(q).reshape(pool.shape),
+            sflat.at[:, dest].set(s).reshape(scales.shape))
 
 
 class BlockAllocator:
@@ -142,10 +222,15 @@ class PagedKVCache:
     ``pool[:, tables]`` into the dense ``[L, B, max_len, Hkv, D]`` view the
     unchanged model ``decode`` consumes, and scatters back only the one
     position each row wrote.
+
+    ``quantize="int8"`` stores the pool as int8 values + per-position f32
+    scale leaves (see the module docstring's quantized-pool contract);
+    reads dequantize into ``cache_dtype``, writes quantize exactly once.
     """
 
     def __init__(self, model_cfg, *, max_live: int, max_len: int,
-                 block_size: int, num_blocks: int, cache_dtype="float32"):
+                 block_size: int, num_blocks: int, cache_dtype="float32",
+                 quantize: Optional[str] = None):
         if model_cfg.is_encoder_decoder or model_cfg.has_ssm \
                 or model_cfg.family == "vlm" or not model_cfg.has_attention \
                 or model_cfg.attention_type == "sliding_window":
@@ -157,17 +242,28 @@ class PagedKVCache:
             raise ValueError(f"max_len={max_len} must be a multiple of "
                              f"block_size={block_size} (gathered view must "
                              "equal the dense batch-1 cache exactly)")
+        if quantize not in (None, "int8"):
+            raise ValueError(
+                f"unsupported KV quantize={quantize!r} (only 'int8')")
         self.max_live = int(max_live)
         self.max_len = int(max_len)
         self.block_size = int(block_size)
         self.blocks_per_slot = max_len // block_size
         self.alloc = BlockAllocator(num_blocks)
-        dtype = jnp.dtype(cache_dtype)
+        self.quantize = quantize
+        self.compute_dtype = jnp.dtype(cache_dtype)
+        dtype = jnp.dtype(jnp.int8) if quantize else self.compute_dtype
         L = model_cfg.num_layers
         pool_shape = (L, num_blocks + 1, block_size,
                       model_cfg.num_kv_heads, model_cfg.head_dim)
         self.pool: Dict[str, jnp.ndarray] = {
             name: jnp.zeros(pool_shape, dtype) for name in _KV_LEAVES}
+        # Per-position dequant scales (quantized pools only): 1.0 everywhere
+        # at rest — the null block's zeros dequantize to exactly zero.
+        self.scales: Optional[Dict[str, jnp.ndarray]] = None
+        if quantize:
+            self.scales = {name: jnp.ones(pool_shape[:3], jnp.float32)
+                           for name in _KV_LEAVES}
         # Host-side: per-slot block lists (allocation order == position
         # order) and the dense table the jit'd step consumes.
         self._slot_blocks: List[List[int]] = [[] for _ in range(max_live)]
@@ -191,6 +287,22 @@ class PagedKVCache:
                 and set(owned) == self.alloc._used
                 and self.alloc.free_count + self.alloc.used_count
                 == self.alloc.capacity)
+
+    def pool_bytes(self) -> int:
+        """Device bytes resident in the KV pool: value leaves plus, for a
+        quantized pool, the per-position scale leaves (the honest total a
+        block budget must cover)."""
+        total = sum(leaf.size * leaf.dtype.itemsize
+                    for leaf in self.pool.values())
+        if self.scales is not None:
+            total += sum(s.size * s.dtype.itemsize
+                         for s in self.scales.values())
+        return total
+
+    def bytes_per_block(self) -> int:
+        """Pool bytes per (layer-stacked) block — the per-token KV cost is
+        this divided by ``block_size``."""
+        return self.pool_bytes() // (self.alloc.capacity + 1)
 
     # ----- allocation / release -------------------------------------------
 
@@ -220,10 +332,15 @@ class PagedKVCache:
         if blocks:
             # Scrub the FULL fixed-shape table row (null entries re-zero the
             # already-zero null block): one compiled shape regardless of how
-            # many blocks the slot held.
+            # many blocks the slot held. Quantized pools reset the scale
+            # entries to 1.0 alongside (scrubbed zeros dequantize to zero).
             row = jnp.asarray(self.tables[slot])
             for name in _KV_LEAVES:
-                self.pool[name] = _scrub_row(self.pool[name], row)
+                if self.quantize:
+                    self.pool[name], self.scales[name] = _scrub_row_q(
+                        self.pool[name], self.scales[name], row)
+                else:
+                    self.pool[name] = _scrub_row(self.pool[name], row)
             self.alloc.free(blocks)
         self._slot_blocks[slot] = []
         self.tables[slot, :] = 0
@@ -236,10 +353,16 @@ class PagedKVCache:
         ``[L, 1, max_len, Hkv, D]`` from ``Engine.prefill_request`` /
         ``decode_request``) into the slot's blocks. Table entries still null
         receive the dense cache's zero padding, so the null block stays
-        zero — one compiled scatter regardless of how many blocks are live."""
+        zero — one compiled scatter regardless of how many blocks are live.
+        A quantized pool quantizes each position here, exactly once (zero
+        padding rounds to zero values with scale 1.0)."""
         row = jnp.asarray(self.tables[slot])
         for name in _KV_LEAVES:
             leaf = caches["kv"][name]
+            if self.quantize:
+                self.pool[name], self.scales[name] = _scatter_blocks_q(
+                    self.pool[name], self.scales[name], row, leaf)
+                continue
             blocks = leaf.reshape(leaf.shape[0], self.blocks_per_slot,
                                   self.block_size, *leaf.shape[3:])
             self.pool[name] = _scatter_blocks(self.pool[name], row, blocks)
@@ -254,14 +377,27 @@ class PagedKVCache:
         dest = int(block) * self.block_size + pos % self.block_size
         for name in _KV_LEAVES:
             written = caches["kv"][name][:, 0, pos]     # [L, Hkv, D]
-            self.pool[name] = _write_pos(self.pool[name], jnp.int32(dest),
-                                         written)
+            if self.quantize:
+                self.pool[name], self.scales[name] = _write_pos_q(
+                    self.pool[name], self.scales[name], jnp.int32(dest),
+                    written)
+            else:
+                self.pool[name] = _write_pos(self.pool[name], jnp.int32(dest),
+                                             written)
 
     def gather_slot(self, slot: int) -> dict:
         """The slot's dense batch-1 cache view ``{"kv": {"k", "v"}}`` —
         bitwise the cache the batch-1 programs would hold (bisection re-runs
-        and tests read through this)."""
+        and tests read through this). Quantized pools dequantize into the
+        compute dtype — elementwise ``q * scale``, so the view is bitwise
+        the batched step's gathered operand per row."""
         row = jnp.asarray(self.tables[slot])
+        if self.quantize:
+            dt = self.compute_dtype.name
+            return {"kv": {name: _gather_row_q(self.pool[name],
+                                               self.scales[name], row,
+                                               dtype=dt)
+                           for name in _KV_LEAVES}}
         return {"kv": {name: _gather_row(self.pool[name], row)
                        for name in _KV_LEAVES}}
 

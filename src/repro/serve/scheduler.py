@@ -77,6 +77,9 @@ class ContinuousConfig:
     block_size: int = 16           # KV block granularity (positions)
     num_kv_blocks: Optional[int] = None  # pool size; None = worst case
     #   (max_live * max_len / block_size — no backpressure, only recycling)
+    kv_quantize: Optional[str] = None    # "int8": int8 pool + per-position
+    #   f32 scales — ~2x resident tokens per byte budget; reads dequantize,
+    #   writes quantize once (see serve.kv_cache's quantized-pool contract)
 
 
 @dataclasses.dataclass
@@ -133,13 +136,13 @@ class ContinuousScheduler:
         self.kv = PagedKVCache(
             engine.model.cfg, max_live=cfg.max_live, max_len=max_len,
             block_size=cfg.block_size, num_blocks=num_blocks,
-            cache_dtype=engine.cfg.cache_dtype)
+            cache_dtype=engine.cfg.cache_dtype, quantize=cfg.kv_quantize)
         self._queue: collections.deque = collections.deque()  # _QEntry
         self._live: Dict[int, _CSlot] = {}                    # row -> slot
         self.results: Dict[int, RequestResult] = {}
         self._seen: set = set()
         self._admit_seq = 0
-        key = (cfg.max_live, max_len, cfg.block_size)
+        key = (cfg.max_live, max_len, cfg.block_size, cfg.kv_quantize)
         cache = _STEP_CACHE.setdefault(engine, {})
         if key not in cache:
             cache[key] = self._build_step()
@@ -153,11 +156,21 @@ class ContinuousScheduler:
         unchanged model ``decode`` consumes, run it, and scatter back only
         the single position each row wrote. Dead rows (all-null tables,
         token 0, pos 0) compute identical garbage and land their write in
-        the null block — masked everywhere, bitwise inert."""
+        the null block — masked everywhere, bitwise inert.
+
+        A quantized pool (``cfg.kv_quantize``) threads the per-position
+        scale leaves through the same program: the gather dequantizes
+        ``q * scale`` into the compute dtype (elementwise, so each row's
+        dense view is bitwise ``gather_slot``'s), and the scatter quantizes
+        the one written position with the shared
+        ``kv_cache.quantize_kv_position`` formula — the same bytes a batch-1
+        ``write_position`` of that vector would commit."""
+        from repro.serve.kv_cache import dequantize_kv, quantize_kv_position
         model = self.engine.model
         B = self.cfg.max_live
         max_len = self.kv.max_len
         bs = self.kv.block_size
+        compute_dtype = self.kv.compute_dtype.name
 
         def step(params, pool_k, pool_v, tables, tokens, pos):
             def gather(pool):
@@ -177,7 +190,32 @@ class ContinuousScheduler:
             return (logits[:, 0], scatter(pool_k, new["kv"]["k"]),
                     scatter(pool_v, new["kv"]["v"]))
 
-        return jax.jit(step)
+        def step_q(params, pool_k, pool_v, scale_k, scale_v, tables,
+                   tokens, pos):
+            def gather(pool, scales):
+                g = dequantize_kv(pool[:, tables], scales[:, tables],
+                                  compute_dtype)
+                return g.reshape(g.shape[0], B, max_len, *g.shape[4:])
+
+            caches = {"kv": {"k": gather(pool_k, scale_k),
+                             "v": gather(pool_v, scale_v)}}
+            logits, new = model.decode(params, caches, tokens, pos)
+            dest = tables[jnp.arange(B), pos // bs] * bs + pos % bs  # [B]
+
+            def scatter(pool, scales, leaf):
+                idx = pos[None, :, None, None, None]
+                written = jnp.take_along_axis(leaf, idx, axis=2)[:, :, 0]
+                q, s = quantize_kv_position(written)     # [L, B(, h, d)]
+                flat = pool.reshape(pool.shape[0], -1, *pool.shape[3:])
+                sflat = scales.reshape(scales.shape[0], -1)
+                return (flat.at[:, dest].set(q).reshape(pool.shape),
+                        sflat.at[:, dest].set(s).reshape(scales.shape))
+
+            pk, sk = scatter(pool_k, scale_k, new["kv"]["k"])
+            pv, sv = scatter(pool_v, scale_v, new["kv"]["v"])
+            return logits[:, 0], pk, pv, sk, sv
+
+        return jax.jit(step_q if self.cfg.kv_quantize else step)
 
     # ----- admission ------------------------------------------------------
 
@@ -319,16 +357,30 @@ class ContinuousScheduler:
                 return
             break
         # Prefill (+ teacher-forced replay of the resumed prefix): pure in
-        # (prompt, prefix), so the whole sequence retries as a unit.
+        # (prompt, prefix), so the whole sequence retries as a unit (pool
+        # writes are deterministic overwrites, safe to redo). A quantized
+        # pool replays through the paged cache itself — insert (quantize
+        # prompt positions once), then gather-dequant → decode →
+        # quantize-write per replayed token, the exact cycle the live
+        # batched path ran — so the resumed pool bytes equal the
+        # uninterrupted run's and the bitwise-resume contract holds.
         attempts = 0
         while True:
             try:
                 faults.maybe_fail("engine_step")
                 logits, caches = self.engine.prefill_request(req.tokens)
-                for i in range(k - 1):
-                    tok = jnp.asarray([[slot.emitted[i]]], jnp.int32)
-                    raw, caches = self.engine.decode_request(
-                        caches, tok, S + i)
+                if self.kv.quantize:
+                    self.kv.insert_dense(row, caches)
+                    for i in range(k - 1):
+                        tok = jnp.asarray([[slot.emitted[i]]], jnp.int32)
+                        raw, caches = self.engine.decode_request(
+                            self.kv.gather_slot(row), tok, S + i)
+                        self.kv.write_position(row, S + i, caches)
+                else:
+                    for i in range(k - 1):
+                        tok = jnp.asarray([[slot.emitted[i]]], jnp.int32)
+                        raw, caches = self.engine.decode_request(
+                            caches, tok, S + i)
                 logits = faults.corrupt("sample", logits)
                 if health.numerics_guard_enabled() \
                         and health.has_nonfinite(logits):
@@ -351,7 +403,10 @@ class ContinuousScheduler:
                     slot, "evicted", f"{cause}: {exc}")
                 return
             break
-        self.kv.insert_dense(row, caches)
+        if not self.kv.quantize:
+            # Quantized pools already committed in the guarded loop above
+            # (an insert here would re-quantize dequantized values — drift).
+            self.kv.insert_dense(row, caches)
         self._live[row] = slot
         if entry.preempted:
             health.SERVE.resumed(rid, step=k)
@@ -470,10 +525,18 @@ class ContinuousScheduler:
         while True:
             try:
                 faults.maybe_fail("batch_step")
-                logits, pk, pv = self._jit_step(
-                    self.engine.params, self.kv.pool["k"], self.kv.pool["v"],
-                    self.kv.device_tables(), jnp.asarray(tokens),
-                    jnp.asarray(pos))
+                kv = self.kv
+                if kv.quantize:
+                    logits, pk, pv, sk, sv = self._jit_step(
+                        self.engine.params, kv.pool["k"], kv.pool["v"],
+                        kv.scales["k"], kv.scales["v"], kv.device_tables(),
+                        jnp.asarray(tokens), jnp.asarray(pos))
+                else:
+                    sk = sv = None
+                    logits, pk, pv = self._jit_step(
+                        self.engine.params, kv.pool["k"], kv.pool["v"],
+                        kv.device_tables(), jnp.asarray(tokens),
+                        jnp.asarray(pos))
             except Exception as exc:  # noqa: BLE001 — classify, retry/bisect
                 cause = health.classify_failure(exc)
                 if cause in RETRYABLE_CLASSES \
@@ -494,6 +557,8 @@ class ContinuousScheduler:
         # Commit only after a clean shared step (retries/bisection never see
         # a half-mutated pool — the jit'd step returned NEW pool arrays).
         self.kv.pool["k"], self.kv.pool["v"] = pk, pv
+        if sk is not None:
+            self.kv.scales["k"], self.kv.scales["v"] = sk, sv
         self._commit_rows(done, live_rows, logits)
 
     def _bisect(self, done: Dict[int, RequestResult], cause, exc) -> None:
@@ -583,7 +648,12 @@ class ContinuousScheduler:
     # ----- driving loops --------------------------------------------------
 
     def drain(self, max_ticks: int = 1_000_000) -> Dict[int, RequestResult]:
-        """Step until every admitted request reaches a terminal state."""
+        """Step until every admitted request reaches a terminal state.
+
+        A full drain must return EVERY block to the pool (the no-leak clause
+        of the block-accounting contract): a shortfall here is a scheduler
+        bug, not load — it is recorded as a ``kv_leak`` health event and
+        raised, never silently absorbed into a shrunken pool."""
         done: Dict[int, RequestResult] = {}
         ticks = 0
         while self._queue or self._live:
@@ -592,6 +662,14 @@ class ContinuousScheduler:
             if ticks > max_ticks:
                 raise RuntimeError("drain exceeded max_ticks — a request "
                                    "is not making progress")
+        alloc = self.kv.alloc
+        if alloc.free_count != alloc.capacity:
+            leaked = alloc.capacity - alloc.free_count
+            detail = (f"{leaked} of {alloc.capacity} KV blocks still held "
+                      "after a full drain")
+            health.record_degradation("continuous_scheduler.drain",
+                                      "paged_kv", "kv_leak", "none", detail)
+            raise RuntimeError(f"kv_leak: {detail}")
         return done
 
     def run(self, schedule: Iterable[Tuple[float, Request]],

@@ -106,6 +106,50 @@ def test_spec_dataclass_fields_are_stable():
         == EXPECTED_EPILOGUE_FIELDS
 
 
+# Keyword surfaces pinned by PARAMETER NAME (defaults carry object reprs too
+# unwieldy to freeze as strings): the planner's quantization knobs and the
+# quantized paged-KV serving surface added with the sub-byte pipeline.
+EXPECTED_PARAM_NAMES = {
+    "plan_gemm": ("m", "k", "n", "dtype", "b_dtype", "target", "vmem_budget",
+                  "double_buffer", "layout_a", "layout_b",
+                  "scale_granularity"),
+    "plan_grouped_gemm": ("e", "m", "k", "n", "dtype", "b_dtype", "target",
+                          "n_b_streams", "double_buffer", "layout_b",
+                          "scale_granularity"),
+}
+
+EXPECTED_PLAN_FIELDS_SUBSET = {"b_dtype", "b_scale", "bm", "bk", "bn",
+                               "layout_b"}
+
+
+def test_planner_quantization_surface_is_stable():
+    got = {name: tuple(inspect.signature(getattr(core, name)).parameters)
+           for name in EXPECTED_PARAM_NAMES}
+    assert got == EXPECTED_PARAM_NAMES
+    from repro.core import GemmPlan
+    fields = {f.name for f in dataclasses.fields(GemmPlan)}
+    assert EXPECTED_PLAN_FIELDS_SUBSET <= fields
+
+
+def test_quantized_kv_serving_surface_is_stable():
+    """The quantized paged-KV contract points the scheduler and benches key
+    on: the scale-carrying cache methods, the two module-level quantization
+    helpers, and the kv_quantize scheduler knob."""
+    from repro.serve import ContinuousConfig
+    from repro.serve import kv_cache as kvc
+    assert "quantize" in inspect.signature(
+        kvc.PagedKVCache.__init__).parameters
+    for name in ("pool_bytes", "bytes_per_block", "insert_dense",
+                 "write_position", "gather_slot", "release"):
+        assert callable(getattr(kvc.PagedKVCache, name)), name
+    assert tuple(inspect.signature(kvc.quantize_kv_position).parameters) \
+        == ("x",)
+    assert tuple(inspect.signature(kvc.dequantize_kv).parameters) \
+        == ("q", "scale", "dtype")
+    assert "kv_quantize" in {f.name
+                             for f in dataclasses.fields(ContinuousConfig)}
+
+
 def test_registered_lowering_names_are_stable():
     got = {"dense": {n for n, lw in LOWERINGS.items() if lw.kind == "dense"},
            "grouped": {n for n, lw in LOWERINGS.items()

@@ -121,6 +121,24 @@ def test_golden_dispatch_packed_weights(no_env, rng):
     specq = ContractionSpec.dense(8, 64, 48, "bfloat16", w=pwq)
     assert specq.b_format.is_quantized and specq.b_dtype == "int8"
     assert dispatch(specq).name == "packed_weight"
+    # GOLDEN sub-byte rows: nibble-packed int4 stacks and col-granularity
+    # scales dispatch through the identical capability records — the format
+    # descriptor, not the buffer dtype, is what the spec carries
+    wg = jnp.asarray(rng.normal(size=(4, 64, 48)), jnp.float32)
+    for quantize, gran in (("int4", "tile"), ("int4:col", "col"),
+                           ("int8:col", "col")):
+        pw4 = PackedWeight.pack(w, quantize=quantize)
+        s4 = ContractionSpec.dense(8, 64, 48, "bfloat16", w=pw4)
+        assert s4.b_dtype == quantize.partition(":")[0]
+        assert s4.b_format.scale.granularity == gran
+        assert s4.b_format.sub_byte == quantize.startswith("int4")
+        assert dispatch(s4).name == "packed_weight"
+        gw4 = GroupedPackedWeight.pack(wg, quantize=quantize)
+        for counts in (False, True):
+            gs4 = ContractionSpec.grouped(4, 16, 64, 48, "bfloat16", w=gw4,
+                                          counts=counts)
+            assert gs4.b_format.scale.granularity == gran
+            assert dispatch(gs4).name == "grouped_packed_weight"
 
 
 # ---------------------------------------------------------------------------

@@ -361,7 +361,9 @@ def test_pack_rejects_quantize_without_quantized_plan(rng):
     with pytest.raises(ValueError, match="b_dtype"):
         PackedWeight.pack(w, plan=float_plan, quantize="int8")
     with pytest.raises(ValueError, match="int8"):
-        PackedWeight.pack(w, quantize="int4")
+        PackedWeight.pack(w, quantize="int2")
+    with pytest.raises(ValueError, match="col"):
+        PackedWeight.pack(w, quantize="int4:row")
 
 
 # ---------------------------------------------------------------------------

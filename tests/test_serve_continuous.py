@@ -483,6 +483,124 @@ else:  # keep the node visible (and skipping) without hypothesis
         pass  # pragma: no cover
 
 
+# ---------------------------------------------------------------------------
+# Quantized paged-KV pool (ContinuousConfig.kv_quantize="int8")
+# ---------------------------------------------------------------------------
+
+def test_paged_cache_quantized_units(engine, no_fault):
+    """Pool dtype/scale-leaf geometry, byte accounting, insert->gather
+    round-trip within the per-position int8 bound, and scrub-on-release
+    resetting scales to 1.0 (so recycled blocks dequantize to exact zero)."""
+    import jax.numpy as jnp
+    cfg = engine.model.cfg
+    mk = dict(max_live=2, max_len=32, block_size=8, num_blocks=8)
+    kv = PagedKVCache(cfg, **mk, quantize="int8")
+    f32 = PagedKVCache(cfg, **mk)
+    assert kv.pool["k"].dtype == jnp.int8
+    assert kv.scales["k"].shape == kv.pool["k"].shape[:3]
+    assert np.all(np.asarray(kv.scales["k"]) == 1.0)
+    # int8 values + f32 per-position scales land well under the f32 pool
+    # (measured ~0.266x): the honest total a block budget must cover
+    assert kv.pool_bytes() < 0.3 * f32.pool_bytes()
+    assert kv.bytes_per_block() < f32.bytes_per_block() // 3
+    # quantize-on-write / dequantize-on-read round-trip: each position's
+    # error is bounded by its own scale/2 = absmax/254
+    _, caches = engine.prefill_request(np.arange(6, dtype=np.int32))
+    assert kv.grow(0, 6)
+    kv.insert_dense(0, caches)
+    got = kv.gather_slot(0)
+    for name in ("k", "v"):
+        want = np.asarray(caches["kv"][name], np.float32)
+        back = np.asarray(got["kv"][name], np.float32)
+        assert back.dtype == want.dtype
+        bound = np.abs(want).max(axis=(-2, -1), keepdims=True) / 254 + 1e-6
+        assert np.all(np.abs(back - want) <= bound)
+    # release scrubs values to zero AND scales back to 1.0
+    kv.release(0)
+    assert np.all(np.asarray(kv.pool["k"]) == 0)
+    assert np.all(np.asarray(kv.scales["k"]) == 1.0)
+    assert kv.alloc.free_count == kv.alloc.capacity
+    # null block stays all-zero with unit scales after the full cycle
+    assert np.all(np.asarray(kv.pool["v"][:, 0]) == 0)
+    assert np.all(np.asarray(kv.scales["v"][:, 0]) == 1.0)
+    with pytest.raises(ValueError, match="int8"):
+        PagedKVCache(cfg, **mk, quantize="int4")
+
+
+def test_kv_quantized_preempt_resume_bitwise_greedy(engine, no_fault):
+    """Greedy decode over a QUANTIZED pool: a tight pool's preempt/resume
+    cycle reproduces the roomy quantized run bitwise — quantize-exactly-once
+    means parking and replaying a stream never re-rounds its history."""
+    greedy = Engine(engine.model, engine.params,
+                    ServeConfig(max_len=32, temperature=0.0))
+    roomy = _serve_all(greedy, _requests(8, seed=1), num_kv_blocks=12,
+                       kv_quantize="int8")
+    ref = {rid: r.tokens.copy() for rid, r in roomy.results.items()}
+    assert _assert_conservation(roomy, 8)["preempted"] == 0
+    health.clear_serve()
+    tight = _serve_all(greedy, _requests(8, seed=1), num_kv_blocks=3,
+                       kv_quantize="int8")
+    s = _assert_conservation(tight, 8)
+    assert s["completed"] == 8 and s["evicted"] == 0
+    assert s["preempted"] >= 1 and s["resumed"] == s["preempted"]
+    for rid, toks in ref.items():
+        np.testing.assert_array_equal(tight.results[rid].tokens, toks)
+
+
+def test_kv_quantized_preempt_resume_bitwise_sampled(engine, no_fault):
+    """The same bitwise claim under SAMPLED decode (temperature 0.7): the
+    per-step sampling keys are position-derived, so a bit-identical replayed
+    cache yields bit-identical draws."""
+    roomy = _serve_all(engine, _requests(8, seed=1), num_kv_blocks=12,
+                       kv_quantize="int8")
+    ref = {rid: r.tokens.copy() for rid, r in roomy.results.items()}
+    health.clear_serve()
+    tight = _serve_all(engine, _requests(8, seed=1), num_kv_blocks=3,
+                       kv_quantize="int8")
+    s = _assert_conservation(tight, 8)
+    assert s["completed"] == 8 and s["evicted"] == 0
+    assert s["preempted"] >= 1 and s["resumed"] == s["preempted"]
+    for rid, toks in ref.items():
+        np.testing.assert_array_equal(tight.results[rid].tokens, toks)
+
+
+@pytest.mark.parametrize("fault_site,fault_nth", [
+    (None, None), ("kv_alloc", 2), ("batch_step", 2)])
+def test_kv_quantized_fault_conservation(engine, no_fault, fault_site,
+                                         fault_nth):
+    """The fault-containment contract carries over to quantized pools: a
+    transient alloc/batch fault under KV pressure is retried, conservation
+    closes, nothing leaks, and streams match the roomy quantized oracle."""
+    roomy = _serve_all(engine, _requests(6, seed=21), num_kv_blocks=12,
+                       kv_quantize="int8")
+    ref = {rid: r.tokens.copy() for rid, r in roomy.results.items()}
+    health.clear_serve()
+    ctx = (faults.inject(fault_site, nth=fault_nth) if fault_site
+           else _NullCtx())
+    with ctx:
+        cs = _serve_all(engine, _requests(6, seed=21), num_kv_blocks=3,
+                        kv_quantize="int8", max_retries=2)
+    s = _assert_conservation(cs, 6)
+    assert s["completed"] == 6 and s["evicted"] == 0
+    if fault_site:
+        assert s["retries"] >= 1
+    for rid, toks in ref.items():
+        np.testing.assert_array_equal(cs.results[rid].tokens, toks)
+
+
+def test_drain_detects_kv_leak_typed(engine, no_fault):
+    """A block held past a full drain is a LEAK: drain raises typed and the
+    health registry records a kv_leak degradation (the CI-visible signal)."""
+    cs, _ = _sched(engine)
+    assert cs.kv.alloc.try_alloc(1)    # steal a block behind the scheduler
+    with pytest.raises(RuntimeError, match="kv_leak"):
+        cs.drain(max_ticks=100)
+    report = health.health_report()
+    assert any(rec["cause"] == "kv_leak" for rec in report.values())
+    leak = [rec for rec in report.values() if rec["cause"] == "kv_leak"][0]
+    assert "1 of" in leak["detail"]
+
+
 _PROPERTY_ENGINE = []
 
 
