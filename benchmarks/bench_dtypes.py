@@ -15,6 +15,14 @@ from repro.core import dtypes as mdt
 from repro.kernels import ref
 from repro.kernels.gemm_tiled import gemm_tiled
 
+from repro.harness import RunSpec, register_bench
+
+# One registry, no per-bench glue in run.py: the harness CLI
+# discovers this module by filename and this spec is its table entry.
+register_bench(RunSpec(bench="dtypes", module=__name__,
+                       artifact=None, smoke=False, order=20))
+
+
 
 def main() -> None:
     rng = np.random.default_rng(0)

@@ -18,6 +18,14 @@ from benchmarks.common import emit, time_fn
 from repro.configs.paper_gemm import LARGE_SIZES, MEDIUM_SIZES, SMALL_SIZES
 from repro.core import run_strategy
 
+from repro.harness import RunSpec, register_bench
+
+# One registry, no per-bench glue in run.py: the harness CLI
+# discovers this module by filename and this spec is its table entry.
+register_bench(RunSpec(bench="gemm_strategies", module=__name__,
+                       artifact=None, smoke=False, order=90))
+
+
 # naive/pluto are loop-nest lowerings: measurable but O(n^3) python-free slow;
 # cap them like the paper caps Intrinsic on large sizes.
 SLOW_STRATEGY_CAP = 512

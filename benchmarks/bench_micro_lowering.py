@@ -19,6 +19,14 @@ from benchmarks.common import emit, time_fn
 from repro.core import run_strategy
 from repro.roofline.hw import V5E
 
+from repro.harness import RunSpec, register_bench
+
+# One registry, no per-bench glue in run.py: the harness CLI
+# discovers this module by filename and this spec is its table entry.
+register_bench(RunSpec(bench="micro_lowering", module=__name__,
+                       artifact=None, smoke=False, order=10))
+
+
 
 def main() -> None:
     # (1) structural ceiling on the TPU target

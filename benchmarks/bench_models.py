@@ -15,6 +15,14 @@ from repro.train import optimizer as opt
 from repro.train.loop import TrainConfig, make_train_step
 from repro.train.optimizer import AdamWConfig
 
+from repro.harness import RunSpec, register_bench
+
+# One registry, no per-bench glue in run.py: the harness CLI
+# discovers this module by filename and this spec is its table entry.
+register_bench(RunSpec(bench="models", module=__name__,
+                       artifact=None, smoke=False, order=100))
+
+
 ARCHS = ("olmo-1b", "mixtral-8x22b", "mamba2-130m", "hymba-1.5b")
 
 

@@ -64,6 +64,14 @@ from repro.kernels.gemm_grouped import (gemm_grouped_packed,
 from repro.kernels.pack import pack_b_grouped
 from repro.models.moe import GROUP_SIZE, _capacity
 
+from repro.harness import RunSpec, register_bench
+
+# One registry, no per-bench glue in run.py: the harness CLI
+# discovers this module by filename and this spec is its table entry.
+register_bench(RunSpec(bench="moe_grouped", module=__name__,
+                       artifact="BENCH_moe_grouped", smoke=True, order=40))
+
+
 COMPUTE = jnp.bfloat16
 
 

@@ -33,6 +33,14 @@ from benchmarks.common import emit, time_fn, time_interleaved
 from repro.core import PackedWeight, plan_gemm, run_strategy
 from repro.kernels import ref
 
+from repro.harness import RunSpec, register_bench
+
+# One registry, no per-bench glue in run.py: the harness CLI
+# discovers this module by filename and this spec is its table entry.
+register_bench(RunSpec(bench="packing_overhead", module=__name__,
+                       artifact="BENCH_fused_gemm", smoke=True, order=30))
+
+
 def _artifact_path() -> pathlib.Path:
     """Smoke runs (CI) write a separate file so they never clobber the
     tracked full-sweep trajectory artifact."""

@@ -41,6 +41,14 @@ from benchmarks.common import emit, time_interleaved
 from repro.core import GroupedPackedWeight, PackedWeight
 from repro.core.gemm import grouped_linear, grouped_silu_gate
 
+from repro.harness import RunSpec, register_bench
+
+# One registry, no per-bench glue in run.py: the harness CLI
+# discovers this module by filename and this spec is its table entry.
+register_bench(RunSpec(bench="quant_gemm", module=__name__,
+                       artifact="BENCH_quant_gemm", smoke=True, order=50))
+
+
 COMPUTE = jnp.bfloat16
 
 

@@ -11,6 +11,14 @@ import os
 
 from benchmarks.common import emit
 
+from repro.harness import RunSpec, register_bench
+
+# One registry, no per-bench glue in run.py: the harness CLI
+# discovers this module by filename and this spec is its table entry.
+register_bench(RunSpec(bench="roofline", module=__name__,
+                       artifact=None, smoke=False, order=110))
+
+
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 
 

@@ -64,6 +64,14 @@ from repro.serve import (ContinuousConfig, ContinuousScheduler, Engine,
                          VirtualClock)
 from repro.testing import faults
 
+from repro.harness import RunSpec, register_bench
+
+# One registry, no per-bench glue in run.py: the harness CLI
+# discovers this module by filename and this spec is its table entry.
+register_bench(RunSpec(bench="serve_continuous", module=__name__,
+                       artifact="BENCH_serve_continuous", smoke=True, order=70))
+
+
 LENGTH_BUCKETS = (4, 8, 12, 16)      # Zipf-weighted prompt lengths
 BUDGET_BUCKETS = (2, 4, 8)           # Zipf-weighted generation budgets
 

@@ -42,6 +42,14 @@ from repro.serve import Engine, Request, ServeConfig, StreamConfig, \
     StreamFrontend, VirtualClock
 from repro.testing import faults
 
+from repro.harness import RunSpec, register_bench
+
+# One registry, no per-bench glue in run.py: the harness CLI
+# discovers this module by filename and this spec is its table entry.
+register_bench(RunSpec(bench="serve_stream", module=__name__,
+                       artifact="BENCH_serve_stream", smoke=True, order=60))
+
+
 LENGTH_BUCKETS = (4, 8, 12, 16)      # Zipf-weighted prompt lengths
 BUDGET_BUCKETS = (2, 4, 8)           # Zipf-weighted generation budgets
 

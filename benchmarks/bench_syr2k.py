@@ -13,6 +13,14 @@ import numpy as np
 from benchmarks.common import emit, time_fn
 from repro.core.syr2k import syr2k_flops, syr2k_layered, syr2k_ref
 
+from repro.harness import RunSpec, register_bench
+
+# One registry, no per-bench glue in run.py: the harness CLI
+# discovers this module by filename and this spec is its table entry.
+register_bench(RunSpec(bench="syr2k", module=__name__,
+                       artifact=None, smoke=False, order=80))
+
+
 
 def main() -> None:
     rng = np.random.default_rng(0)

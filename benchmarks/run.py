@@ -1,206 +1,47 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark entry point — a thin facade over the harness CLI.
 
-  bench_gemm_strategies   — Figs. 4-9 (strategy sweep, small/medium/large)
-  bench_micro_lowering    — Fig. 10b (matrix engine vs generic vector lowering)
-  bench_dtypes            — Table 1 (dtype/rank table)
-  bench_packing_overhead  — §4.2/4.3 packing cost decomposition
-                            (+PackedWeight, +fused-A pipeline; writes
-                            BENCH_fused_gemm.json)
-  bench_moe_grouped       — grouped-packed MoE expert contraction vs the
-                            batched-einsum baseline, plus padded-vs-ragged
-                            at uniform/zipf routing skew (writes
-                            BENCH_moe_grouped.json)
-  bench_quant_gemm        — int8 (dequant-in-epilogue) vs bf16 packed GEMM,
-                            dense prefill/decode + grouped MoE serving
-                            shapes, B-bytes moved columns (writes
-                            BENCH_quant_gemm.json)
-  bench_serve_stream      — Poisson-arrival/Zipf-length request stream
-                            through the resilient serving front-end:
-                            goodput under injected faults (deterministic,
-                            guarded) + p50/p99 latency and tokens/sec
-                            (writes BENCH_serve_stream.json)
-  bench_serve_continuous  — the same stream through the slot-recycling
-                            continuous-batching scheduler vs the batch-1
-                            front-end: tokens/sec speedup, goodput under a
-                            bisected batch fault, preempt/resume goodput
-                            under KV exhaustion (guarded; writes
-                            BENCH_serve_continuous.json)
-  bench_syr2k             — §5.1 SYR2K extension of the layered strategy
-  bench_models            — end-to-end model step times (CPU observation)
-  bench_roofline          — TPU-target roofline rows from the dry-run
+The actual machinery lives in ``repro.harness``: every ``bench_*.py``
+module registers a declarative :class:`~repro.harness.spec.RunSpec` (bench
+x config x topology x params), the CLI expands them into a plan, runs each
+job through the topology-aware executors (local in-process; k8s-style
+manifest emission for multi-host topologies), and writes one
+machine-readable ``harness_report.json`` (per-job status/retries/timings,
+per-topology regression verdicts, health snapshot) into the run directory
+under ``results/harness/``.
 
-Prints ``name,us_per_call,derived`` CSV.
+  python -m benchmarks.run                 # full sweep, every bench
+  python -m benchmarks.run --smoke         # quick CI tier (shrunken sizes)
+  python -m benchmarks.run --smoke --check # + per-topology regression guard
+  python -m benchmarks.run --bench quant_gemm
+  python -m benchmarks.run --list
 
-``--smoke``: quick CI mode — runs only the packing/fused and grouped-MoE
-benches on shrunken sizes (sets REPRO_BENCH_SMOKE=1) so the scripts can't
-silently rot.
+``--check`` compares every fresh ``speedup*`` ratio against the committed
+``BENCH_*.smoke.json`` baseline AT THE SAME TOPOLOGY (schema 2: baselines
+are keyed by ``Topology.key`` like ``cpu:1``) and fails on a >25%
+regression; a topology with no committed baseline entry fails loudly.
+Ratios (not raw times) keep the guard robust to CI machine speed.
 
-``--check``: regression guard — snapshots the committed ``*.smoke.json``
-baselines before the run, then compares every fresh speedup ratio against
-its baseline row and FAILS (exit 1) on a >25% regression. Ratios (not raw
-times) keep the guard robust to CI machine speed; new rows with no baseline
-pass (they become the baseline once committed). The guard also diffs the
-SET of smoke artifacts: a smoke bench that writes a ``*.smoke.json`` with
-no committed baseline fails (a newly added bench must commit its baseline
-or CI would silently skip guarding it forever).
+Adding a benchmark: create ``benchmarks/bench_<name>.py`` with a ``main()``
+and a module-level ``register_bench(RunSpec(...))`` — the harness discovers
+it by filename; there is deliberately no bench list in this file.
 """
-import json
-import os
 import pathlib
 import sys
-import traceback
 
 # Allow both `python -m benchmarks.run` and `python benchmarks/run.py`.
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-REGRESSION_TOLERANCE = 1.25  # fail when fresh speedup < baseline / 1.25
 
 
-def _row_key(row: dict):
-    # Every identity-ish field a bench row may carry: rows that differ only
-    # in size (e.g. bench_packing_overhead's per-n rows, which have no
-    # "name") must not collapse onto one key, or the guard compares every
-    # baseline row against a single arbitrary fresh row.
-    return (row.get("name"), row.get("dist"), row.get("shape"),
-            row.get("dtype"), row.get("n"), row.get("e"), row.get("m"),
-            row.get("k"))
-
-
-def _speedup_fields(row: dict):
-    return {k: v for k, v in row.items()
-            if k.startswith("speedup") and isinstance(v, (int, float))}
-
-
-def snapshot_baselines() -> dict:
-    """Read the committed smoke artifacts BEFORE the run overwrites them."""
-    baselines = {}
-    for path in sorted(ROOT.glob("BENCH_*.smoke.json")):
-        try:
-            baselines[path.name] = json.loads(path.read_text())
-        except (OSError, json.JSONDecodeError):
-            continue
-    return baselines
-
-
-def _key_str(key) -> str:
-    return "/".join(str(p) for p in key if p is not None) or "<row>"
-
-
-def check_regressions(baselines: dict) -> int:
-    """Compare fresh smoke speedups against the snapshot; return #failures.
-
-    Also fails for every smoke artifact the run produced that had NO
-    committed baseline: the baseline-key diff that makes a newly added
-    smoke bench fail CI until its ``*.smoke.json`` is committed, instead of
-    passing unguarded.
-
-    Every comparison — pass or fail — is appended to
-    ``BENCH_check_report.json`` (machine-readable guard verdicts: artifact,
-    row key, field, fresh vs baseline value, status), uploaded as a CI
-    artifact so a red guard is diagnosable without replaying the run.
-    """
-    failures = 0
-    checks = []
-    fresh_names = {p.name for p in ROOT.glob("BENCH_*.smoke.json")}
-    for fname in sorted(fresh_names - set(baselines)):
-        print(f"REGRESSION {fname}: smoke artifact has no committed "
-              f"baseline — commit it so the guard covers this bench",
-              file=sys.stderr)
-        checks.append({"artifact": fname, "status": "missing_baseline"})
-        failures += 1
-    for fname, base in baselines.items():
-        path = ROOT / fname
-        if not path.exists():
-            print(f"REGRESSION {fname}: artifact missing after run",
-                  file=sys.stderr)
-            checks.append({"artifact": fname, "status": "missing_artifact"})
-            failures += 1
-            continue
-        fresh = json.loads(path.read_text())
-        fresh_rows = {_row_key(r): r for r in fresh.get("results", [])}
-        for brow in base.get("results", []):
-            frow = fresh_rows.get(_row_key(brow))
-            if frow is None:
-                print(f"REGRESSION {fname}: row {_row_key(brow)} vanished",
-                      file=sys.stderr)
-                checks.append({"artifact": fname,
-                               "row": _key_str(_row_key(brow)),
-                               "status": "missing_row"})
-                failures += 1
-                continue
-            for field, bval in _speedup_fields(brow).items():
-                fval = frow.get(field)
-                if not isinstance(fval, (int, float)):
-                    continue
-                ok = fval >= bval / REGRESSION_TOLERANCE
-                checks.append({"artifact": fname,
-                               "row": _key_str(_row_key(brow)),
-                               "field": field, "fresh": fval,
-                               "baseline": bval,
-                               "status": "ok" if ok else "regression"})
-                if not ok:
-                    print(f"REGRESSION {fname}: {_row_key(brow)} {field} "
-                          f"{fval:.2f} < baseline {bval:.2f} / "
-                          f"{REGRESSION_TOLERANCE}", file=sys.stderr)
-                    failures += 1
-                else:
-                    print(f"# guard ok {fname} {brow.get('name')}"
-                          f"{'/' + brow['dist'] if brow.get('dist') else ''} "
-                          f"{field}: {fval:.2f} (baseline {bval:.2f})")
-    report = {"tolerance": REGRESSION_TOLERANCE, "failures": failures,
-              "checks": checks}
-    (ROOT / "BENCH_check_report.json").write_text(
-        json.dumps(report, indent=2) + "\n")
-    return failures
-
-
-def main() -> None:
-    smoke = "--smoke" in sys.argv[1:]
-    check = "--check" in sys.argv[1:]
-    if check and not smoke:
-        # The guard compares *.smoke.json artifacts; a full run never
-        # rewrites them, so --check alone would silently compare the
-        # committed baselines against themselves and report success.
-        print("--check requires --smoke (the guard compares the smoke "
-              "artifacts the run regenerates)", file=sys.stderr)
-        sys.exit(2)
-    if smoke:
-        os.environ["REPRO_BENCH_SMOKE"] = "1"
-    baselines = snapshot_baselines() if check else {}
-
-    # Import after the env flag so modules can read it at run time.
-    from benchmarks import (bench_dtypes, bench_gemm_strategies,
-                            bench_micro_lowering, bench_models,
-                            bench_moe_grouped, bench_packing_overhead,
-                            bench_quant_gemm, bench_roofline,
-                            bench_serve_continuous, bench_serve_stream,
-                            bench_syr2k)
-    from benchmarks.common import header
-
-    header()
-    if smoke:
-        modules = [bench_packing_overhead, bench_moe_grouped,
-                   bench_quant_gemm, bench_serve_stream,
-                   bench_serve_continuous]
-    else:
-        modules = [bench_micro_lowering, bench_dtypes, bench_packing_overhead,
-                   bench_moe_grouped, bench_quant_gemm, bench_serve_stream,
-                   bench_serve_continuous, bench_syr2k,
-                   bench_gemm_strategies, bench_models, bench_roofline]
-    failures = 0
-    for mod in modules:
-        try:
-            mod.main()
-        except Exception:  # noqa: BLE001 — report and continue
-            failures += 1
-            print(f"{mod.__name__},ERROR,", file=sys.stderr)
-            traceback.print_exc()
-    if check:
-        failures += check_regressions(baselines)
-    if failures:
-        sys.exit(1)
+def main(argv=None) -> int:
+    from repro.harness import cli
+    argv = sys.argv[1:] if argv is None else argv
+    if not any(a in ("--list", "-h", "--help") for a in argv):
+        from benchmarks.common import header
+        header()
+    return cli.main(argv, package="benchmarks", root=ROOT)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,46 @@
+"""Declarative benchmark/launch harness (ReFrame-style).
+
+The run-spec model: a :class:`RunSpec` declares bench x model config x
+:class:`Topology` x parameters; :func:`expand` turns registered specs into
+a :class:`Plan` of concrete jobs; an :class:`Executor` runs them —
+:class:`LocalExecutor` in-process (per-job timeouts, capped-backoff
+retries on classified failures, log capture) or :class:`ManifestExecutor`
+emitting k8s-style job manifests for multi-host topologies; and
+:func:`run_plan` assembles the machine-readable :class:`HarnessReport`
+(per-job status/retries/timings, per-topology regression verdicts, health
+snapshot) that ``--check`` derives its exit code from.
+
+Public surface pinned by ``tests/test_api_surface.py``.
+"""
+from repro.harness.baselines import (REGRESSION_TOLERANCE, SCHEMA_VERSION,
+                                     check_artifact, merge_topology_artifact,
+                                     row_key, snapshot_baselines,
+                                     speedup_fields, topology_payloads)
+from repro.harness.executor import (EXECUTORS, JOB_STATES, RETRYABLE_CLASSES,
+                                    Executor, JobResult, JobTimeout,
+                                    LocalExecutor, ManifestExecutor,
+                                    job_manifest)
+from repro.harness.registry import (BENCHES, clear_registry, discover,
+                                    register_bench, registered)
+from repro.harness.report import HarnessReport
+from repro.harness.runner import run_plan
+from repro.harness.spec import (LOCAL_TOPOLOGY, TOPOLOGIES, Job, Plan,
+                                RunSpec, Topology, expand)
+
+__all__ = [
+    # spec model
+    "RunSpec", "Topology", "LOCAL_TOPOLOGY", "TOPOLOGIES", "Job", "Plan",
+    "expand",
+    # registry
+    "BENCHES", "register_bench", "registered", "discover", "clear_registry",
+    # executors
+    "Executor", "LocalExecutor", "ManifestExecutor", "EXECUTORS",
+    "JobResult", "JobTimeout", "JOB_STATES", "RETRYABLE_CLASSES",
+    "job_manifest",
+    # baselines / regression guard
+    "REGRESSION_TOLERANCE", "SCHEMA_VERSION", "snapshot_baselines",
+    "topology_payloads", "merge_topology_artifact", "check_artifact",
+    "row_key", "speedup_fields",
+    # report + runner
+    "HarnessReport", "run_plan",
+]

@@ -1,1 +1,12 @@
-"""repro.launch subpackage."""
+"""repro.launch subpackage: jax-level launch building blocks.
+
+The DECLARATIVE run-spec/launch model lives one level up in
+``repro.harness`` (:class:`~repro.harness.spec.RunSpec` x
+:class:`~repro.harness.spec.Topology` x executors): harness topologies
+mirror the mesh shapes :func:`repro.launch.mesh.make_production_mesh`
+builds (``(16, 16)`` one pod, ``(2, 16, 16)`` two), and the manifest
+executor is the cluster-submission stub for them. This package keeps the
+pieces that must touch jax: mesh construction (``mesh``), the 512-device
+dry-run (``dryrun``), abstract shape specs (``specs``), and the serve/train
+entry points.
+"""

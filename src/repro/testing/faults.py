@@ -63,6 +63,11 @@ FAULT_SITES = {
     # the batch and then exactly one suspect slot:
     "kv_alloc": "resource",        # paged-KV block allocation (backpressure)
     "batch_step": "runtime",       # one shared batched decode step / re-run
+    # Bench/launch harness site (harness/executor.py). Fires once per
+    # LOCAL job ATTEMPT (before the bench callable runs), so the nth-hit
+    # form stages "first attempt fails, retry converges" and the multi-hit
+    # form fails every attempt of exactly one job while siblings complete:
+    "harness_job": "runtime",      # one harness job attempt (LocalExecutor)
 }
 
 _IO_SITES = frozenset({"checkpoint_save", "checkpoint_read"})

@@ -155,3 +155,59 @@ def test_registered_lowering_names_are_stable():
            "grouped": {n for n, lw in LOWERINGS.items()
                        if lw.kind == "grouped"}}
     assert got == EXPECTED_LOWERINGS
+
+
+# --- repro.harness: the declarative bench/launch subsystem (PR 10) --------
+# Bench modules, CI, and the committed schema-2 baselines all key on these
+# names; the RunSpec/Topology/JobResult field lists ARE the wire format of
+# registrations, baseline artifacts, and harness_report.json rows.
+
+EXPECTED_HARNESS_ALL = {
+    # spec model
+    "RunSpec", "Topology", "LOCAL_TOPOLOGY", "TOPOLOGIES", "Job", "Plan",
+    "expand",
+    # registry
+    "BENCHES", "register_bench", "registered", "discover", "clear_registry",
+    # executors
+    "Executor", "LocalExecutor", "ManifestExecutor", "EXECUTORS",
+    "JobResult", "JobTimeout", "JOB_STATES", "RETRYABLE_CLASSES",
+    "job_manifest",
+    # baselines / regression guard
+    "REGRESSION_TOLERANCE", "SCHEMA_VERSION", "snapshot_baselines",
+    "topology_payloads", "merge_topology_artifact", "check_artifact",
+    "row_key", "speedup_fields",
+    # report + runner
+    "HarnessReport", "run_plan",
+}
+
+EXPECTED_RUNSPEC_FIELDS = ("bench", "module", "entry", "fn", "artifact",
+                           "smoke", "order", "configs", "topologies",
+                           "params", "timeout_s", "max_retries")
+EXPECTED_TOPOLOGY_FIELDS = ("name", "backend", "mesh", "hosts")
+EXPECTED_JOB_RESULT_FIELDS = ("name", "bench", "topology", "status",
+                              "executor", "attempts", "retries",
+                              "duration_s", "failure_class", "detail",
+                              "timed_out", "backoffs", "artifact", "log",
+                              "manifest")
+EXPECTED_REPORT_FIELDS = ("run_id", "run_dir", "smoke", "check", "tolerance",
+                          "jobs", "regressions", "counters", "health")
+
+
+def test_harness_surface_is_stable():
+    import repro.harness as harness
+    assert set(harness.__all__) == EXPECTED_HARNESS_ALL
+    for name in harness.__all__:
+        assert hasattr(harness, name), f"missing harness export {name!r}"
+    assert tuple(f.name for f in dataclasses.fields(harness.RunSpec)) \
+        == EXPECTED_RUNSPEC_FIELDS
+    assert tuple(f.name for f in dataclasses.fields(harness.Topology)) \
+        == EXPECTED_TOPOLOGY_FIELDS
+    assert tuple(f.name for f in dataclasses.fields(harness.JobResult)) \
+        == EXPECTED_JOB_RESULT_FIELDS
+    assert tuple(f.name for f in dataclasses.fields(harness.HarnessReport)) \
+        == EXPECTED_REPORT_FIELDS
+    assert set(harness.EXECUTORS) == {"local", "manifest"}
+    assert harness.JOB_STATES == ("completed", "failed", "emitted")
+    assert harness.RETRYABLE_CLASSES == ("compile", "resource", "runtime",
+                                         "timeout")
+    assert harness.REGRESSION_TOLERANCE == 1.25 and harness.SCHEMA_VERSION == 2

@@ -1,0 +1,597 @@
+"""Harness subsystem tests: spec expansion, retry/timeout under injected
+faults with a virtual clock, topology-keyed baseline matching, manifest
+golden output, and the end-to-end run_plan -> HarnessReport flow.
+
+Run plain (no ``REPRO_FAULT``) everything asserts the healthy path. The CI
+fault matrix re-runs this file with ``REPRO_FAULT=harness_job`` armed for
+the WHOLE process; the matrix-aware test then asserts the degradation
+contract (every job fails after its full retry budget, no job's failure
+kills a sibling, the report records it all), while the targeted tests
+disarm the process-level site via the ``no_fault`` fixture and arm their
+own hits with ``faults.inject``.
+"""
+import json
+
+import pytest
+
+from repro.core import health
+from repro.harness import (LOCAL_TOPOLOGY, TOPOLOGIES, HarnessReport,
+                           JobResult, LocalExecutor, ManifestExecutor,
+                           RunSpec, Topology, check_artifact, expand,
+                           job_manifest, merge_topology_artifact, registry,
+                           row_key, run_plan, snapshot_baselines,
+                           speedup_fields, topology_payloads)
+from repro.serve import VirtualClock
+from repro.testing import faults
+
+TPU_POD = TOPOLOGIES["tpu-pod"]
+
+
+@pytest.fixture(autouse=True)
+def _isolate():
+    faults.reset()
+    health.clear_health()
+    yield
+    faults.reset()
+    health.clear_health()
+
+
+@pytest.fixture
+def no_fault(monkeypatch):
+    """Disarm any process-level REPRO_FAULT (targeted tests arm their own
+    hits via ``faults.inject``)."""
+    monkeypatch.delenv(faults.ENV_FAULT, raising=False)
+    faults.reset()
+
+
+@pytest.fixture
+def clock():
+    return VirtualClock()
+
+
+def _spec(fn=None, bench="job", **kw):
+    kw.setdefault("max_retries", 2)
+    kw.setdefault("timeout_s", 100.0)
+    return RunSpec(bench=bench, fn=fn or (lambda: None), **kw)
+
+
+def _local(clock, run_dir=None, **kw):
+    kw.setdefault("backoff_base_s", 0.05)
+    kw.setdefault("backoff_cap_s", 0.15)
+    return LocalExecutor(run_dir=run_dir, clock=clock, sleep=clock.sleep,
+                        **kw)
+
+
+def _one_job(spec):
+    return expand([spec]).jobs[0]
+
+
+# ---------------------------------------------------------------------------
+# Topology + RunSpec model
+# ---------------------------------------------------------------------------
+
+def test_topology_key_devices_local():
+    t = Topology(name="two-pod", backend="tpu", mesh=(2, 16, 16), hosts=128)
+    assert t.key == "tpu:2x16x16"
+    assert t.devices == 512
+    assert not t.is_local()
+    assert LOCAL_TOPOLOGY.key == "cpu:1"
+    assert LOCAL_TOPOLOGY.is_local()
+
+
+def test_topology_rejects_bad_mesh():
+    with pytest.raises(ValueError):
+        Topology(name="bad", mesh=())
+    with pytest.raises(ValueError):
+        Topology(name="bad", mesh=(0,))
+
+
+def test_runspec_normalizes_axes():
+    s = RunSpec(bench="b", fn=lambda: None, configs="only",
+                topologies=LOCAL_TOPOLOGY,
+                params={"n": (1, 2), "mode": "fast"})
+    assert s.configs == ("only",)
+    assert s.topologies == (LOCAL_TOPOLOGY,)
+    # dict params become a sorted, hashable tuple; scalars become 1-tuples
+    assert s.params == (("mode", ("fast",)), ("n", (1, 2)))
+    assert hash(s)  # frozen + hashable: usable as a registry/table key
+
+
+def test_runspec_requires_target():
+    with pytest.raises(ValueError):
+        RunSpec(bench="b")
+
+
+# ---------------------------------------------------------------------------
+# Plan expansion: bench x config x topology x params grids
+# ---------------------------------------------------------------------------
+
+def test_expand_full_grid():
+    s = RunSpec(bench="grid", fn=lambda: None,
+                configs=("mixtral", "llama4"),
+                topologies=(LOCAL_TOPOLOGY, TPU_POD),
+                params={"n": (64, 128)})
+    plan = expand([s])
+    assert len(plan.jobs) == 8
+    names = [j.name for j in plan.jobs]
+    assert len(set(names)) == 8
+    cells = {(j.config, j.topology.key, j.params["n"]) for j in plan.jobs}
+    assert cells == {(c, t, n) for c in ("mixtral", "llama4")
+                     for t in ("cpu:1", "tpu:16x16") for n in (64, 128)}
+
+
+def test_expand_orders_and_filters():
+    a = _spec(bench="a", order=20, smoke=True)
+    b = _spec(bench="b", order=10, smoke=False)
+    plan = expand([a, b])
+    assert [j.bench for j in plan.jobs] == ["b", "a"]
+    assert [j.bench for j in expand([a, b], smoke=True).jobs] == ["a"]
+    assert [j.bench for j in expand([a, b], benches=["b"]).jobs] == ["b"]
+
+
+def test_expand_unknown_bench_is_loud():
+    with pytest.raises(KeyError):
+        expand([_spec(bench="real")], benches=["typo"])
+
+
+def test_expand_topology_override():
+    plan = expand([_spec(bench="x")], topology=TPU_POD)
+    assert [j.topology.key for j in plan.jobs] == ["tpu:16x16"]
+
+
+# ---------------------------------------------------------------------------
+# LocalExecutor: retries, backoff, timeout, logs (VirtualClock-driven)
+# ---------------------------------------------------------------------------
+
+def test_job_runs_and_passes_declared_kwargs(no_fault, clock):
+    got = {}
+
+    def fn(config, n):
+        got.update(config=config, n=n)
+
+    s = RunSpec(bench="kw", fn=fn, configs=("cfgA",), params={"n": (3,)},
+                timeout_s=100.0)
+    res = _local(clock).run(_one_job(s))
+    assert res.status == "completed"
+    assert res.attempts == 1 and res.retries == 0
+    assert got == {"config": "cfgA", "n": 3}
+
+
+def test_job_fn_taking_nothing_is_fine(no_fault, clock):
+    # bench main() style: declared config/params it doesn't accept are
+    # filtered, not crashed on
+    s = RunSpec(bench="plain", fn=lambda: None, configs=("c",),
+                params={"n": (1,)}, timeout_s=100.0)
+    assert _local(clock).run(_one_job(s)).status == "completed"
+
+
+def test_injected_fault_is_retried_and_converges(no_fault, clock):
+    calls = []
+    s = _spec(fn=lambda: calls.append(1), bench="conv")
+    with faults.inject("harness_job", nth=1):
+        res = _local(clock).run(_one_job(s))
+    assert res.status == "completed"
+    assert res.attempts == 2 and res.retries == 1
+    assert res.backoffs == (0.05,)
+    assert res.failure_class is None
+    assert calls == [1]  # first attempt failed before reaching the fn
+
+
+def test_persistent_fault_exhausts_capped_backoff(no_fault, clock):
+    s = _spec(bench="persist", max_retries=3)
+    with faults.inject("harness_job"):
+        res = _local(clock).run(_one_job(s))
+    assert res.status == "failed"
+    assert res.attempts == 4 and res.retries == 3
+    # capped exponential: base, 2*base, then pinned at the cap
+    assert res.backoffs == (0.05, 0.1, 0.15)
+    assert res.failure_class == "runtime"
+    assert clock() == pytest.approx(0.30)
+
+
+def test_non_retryable_class_fails_fast(no_fault, clock):
+    def fn():
+        raise NotImplementedError("no such backend")
+
+    res = _local(clock).run(_one_job(_spec(fn=fn, bench="hard")))
+    assert res.status == "failed"
+    assert res.attempts == 1 and res.retries == 0 and res.backoffs == ()
+    assert res.failure_class == "unsupported"
+
+
+def test_timeout_is_retried_then_converges(no_fault, clock):
+    durations = [10.0, 0.5]   # first attempt blows the budget, retry is fast
+
+    def fn():
+        clock.sleep(durations.pop(0))
+
+    s = RunSpec(bench="slow-once", fn=fn, timeout_s=2.0, max_retries=2)
+    res = _local(clock).run(_one_job(s))
+    assert res.status == "completed"
+    assert res.attempts == 2 and res.retries == 1
+    assert res.backoffs == (0.05,)
+    assert res.timed_out            # records that SOME attempt timed out
+    assert res.failure_class is None
+    assert res.duration_s == pytest.approx(0.5)
+
+
+def test_persistent_timeout_exhausts_budget(no_fault, clock):
+    s = RunSpec(bench="stuck", fn=lambda: clock.sleep(10.0), timeout_s=2.0,
+                max_retries=2)
+    res = _local(clock).run(_one_job(s))
+    assert res.status == "failed"
+    assert res.attempts == 3
+    assert res.failure_class == "timeout" and res.timed_out
+    assert res.backoffs == (0.05, 0.1)
+
+
+def test_log_capture_into_run_dir(no_fault, clock, tmp_path):
+    def fn():
+        print("hello-from-the-job")
+
+    res = _local(clock, run_dir=tmp_path).run(_one_job(_spec(fn=fn,
+                                                             bench="logged")))
+    assert res.status == "completed"
+    assert res.log is not None
+    assert "hello-from-the-job" in open(res.log).read()
+
+
+# ---------------------------------------------------------------------------
+# Per-topology baselines (the regression rule, in exactly one place)
+# ---------------------------------------------------------------------------
+
+def _base(cpu_speedup=2.0, tpu_speedup=None):
+    topologies = {"cpu:1": {"results": [{"name": "r",
+                                         "speedup_x": cpu_speedup}]}}
+    if tpu_speedup is not None:
+        topologies["tpu:16x16"] = {"results": [{"name": "r",
+                                                "speedup_x": tpu_speedup}]}
+    return {"bench": "fake", "schema": 2, "topologies": topologies}
+
+
+def _fresh(speedup):
+    return {"bench": "fake", "results": [{"name": "r", "speedup_x": speedup}]}
+
+
+def test_row_key_and_speedup_fields():
+    row = {"name": "a", "n": 64, "speedup_x": 1.5, "t_us": 3.0,
+           "speedup_note": "text"}
+    assert row_key(row)[0] == "a"
+    assert row_key({"name": "a", "n": 128}) != row_key({"name": "a", "n": 64})
+    assert speedup_fields(row) == {"speedup_x": 1.5}
+
+
+def test_topology_payloads_reads_both_schemas():
+    legacy = {"results": [1, 2]}
+    assert topology_payloads(legacy) == {"cpu:1": {"results": [1, 2]}}
+    v2 = _base(tpu_speedup=9.0)
+    assert set(topology_payloads(v2)) == {"cpu:1", "tpu:16x16"}
+
+
+def test_matching_topology_guards_regressions():
+    fails, checks = check_artifact("BENCH_fake.smoke.json", "cpu:1",
+                                   _fresh(1.0), _base(2.0))
+    assert fails == 1
+    assert [c["status"] for c in checks] == ["regression"]
+    fails, checks = check_artifact("BENCH_fake.smoke.json", "cpu:1",
+                                   _fresh(1.9), _base(2.0))
+    assert fails == 0
+    assert [c["status"] for c in checks] == ["ok"]
+
+
+def test_second_topology_baseline_neither_masks_nor_triggers():
+    """The acceptance case: a committed tpu:16x16 baseline at speedup 100
+    must not TRIGGER a failure for a healthy local run (local 1.9 vs local
+    baseline 2.0 passes) and must not MASK a real local regression (local
+    1.0 fails even though 'some' baseline row would tolerate it)."""
+    base = _base(cpu_speedup=2.0, tpu_speedup=100.0)
+    fails, checks = check_artifact("BENCH_fake.smoke.json", "cpu:1",
+                                   _fresh(1.9), base)
+    assert fails == 0, checks  # tpu's 100x did not trigger
+    fails, checks = check_artifact("BENCH_fake.smoke.json", "cpu:1",
+                                   _fresh(1.0), base)
+    assert fails == 1, checks  # tpu's presence did not mask
+    assert all(c["topology"] == "cpu:1" for c in checks)
+
+
+def test_missing_topology_baseline_fails_loudly():
+    base = {"schema": 2,
+            "topologies": {"tpu:16x16": {"results": [{"name": "r",
+                                                      "speedup_x": 3.0}]}}}
+    fails, checks = check_artifact("BENCH_fake.smoke.json", "cpu:1",
+                                   _fresh(5.0), base)
+    assert fails == 1
+    assert checks[0]["status"] == "missing_topology"
+
+
+def test_missing_baseline_and_artifact_and_row_fail():
+    fails, checks = check_artifact("BENCH_fake.smoke.json", "cpu:1",
+                                   _fresh(1.0), None)
+    assert fails == 1 and checks[0]["status"] == "missing_baseline"
+    fails, checks = check_artifact("BENCH_fake.smoke.json", "cpu:1",
+                                   None, _base(2.0))
+    assert fails == 1 and checks[0]["status"] == "missing_artifact"
+    fresh = {"results": [{"name": "other", "speedup_x": 9.0}]}
+    fails, checks = check_artifact("BENCH_fake.smoke.json", "cpu:1",
+                                   fresh, _base(2.0))
+    assert fails == 1 and checks[0]["status"] == "missing_row"
+
+
+def test_merge_preserves_other_topologies():
+    committed = _base(cpu_speedup=2.0, tpu_speedup=100.0)
+    merged = merge_topology_artifact(_fresh(2.5), "cpu:1", committed)
+    assert merged["schema"] == 2
+    assert merged["bench"] == "fake"          # meta carried over
+    assert "results" not in merged            # flat rows re-homed
+    assert merged["topologies"]["cpu:1"]["results"][0]["speedup_x"] == 2.5
+    # the topology this run did NOT measure survives a re-commit
+    assert merged["topologies"]["tpu:16x16"]["results"][0]["speedup_x"] \
+        == 100.0
+
+
+def test_snapshot_baselines_reads_committed_files(tmp_path):
+    (tmp_path / "BENCH_a.smoke.json").write_text(json.dumps(_base()))
+    (tmp_path / "BENCH_b.smoke.json").write_text("not json")
+    snap = snapshot_baselines(tmp_path)
+    assert set(snap) == {"BENCH_a.smoke.json"}  # corrupt file skipped
+
+
+# ---------------------------------------------------------------------------
+# Manifest-stub executor (multi-host targets without a cluster)
+# ---------------------------------------------------------------------------
+
+def _tpu_job():
+    s = RunSpec(bench="ep_sharded", module="benchmarks.bench_ep",
+                configs=("llama4-scout",), topologies=(TPU_POD,),
+                params={"seq": (4096,)}, timeout_s=600.0, max_retries=2)
+    return _one_job(s)
+
+
+def test_job_manifest_golden():
+    assert job_manifest(_tpu_job()) == {
+        "apiVersion": "batch/v1",
+        "kind": "Job",
+        "metadata": {
+            "name": "repro-bench-ep-sharded--llama4-scout--tpu-pod--seq4096",
+            "labels": {"app": "repro-bench", "bench": "ep-sharded",
+                       "topology": "tpu-16x16"},
+        },
+        "spec": {
+            "backoffLimit": 2,
+            "completions": 64,
+            "parallelism": 64,
+            "activeDeadlineSeconds": 600,
+            "template": {
+                "metadata": {"labels": {"app": "repro-bench"}},
+                "spec": {
+                    "restartPolicy": "Never",
+                    "containers": [{
+                        "name": "bench",
+                        "image": "repro/bench:latest",
+                        "command": ["python", "-m", "benchmarks.run",
+                                    "--bench", "ep_sharded"],
+                        "env": [
+                            {"name": "REPRO_BENCH_TOPOLOGY",
+                             "value": "tpu:16x16"},
+                            {"name": "REPRO_BENCH_CONFIG",
+                             "value": "llama4-scout"},
+                            {"name": "REPRO_BENCH_PARAM_SEQ",
+                             "value": "4096"},
+                        ],
+                        "resources": {"limits": {"google.com/tpu": 4}},
+                    }],
+                },
+            },
+        },
+    }
+
+
+def test_manifest_executor_emits_without_running(tmp_path):
+    res = ManifestExecutor(run_dir=tmp_path).run(_tpu_job())
+    assert res.status == "emitted"
+    assert res.attempts == 0
+    manifest = json.loads(open(res.manifest).read())
+    assert manifest["kind"] == "Job"
+    assert manifest["spec"]["parallelism"] == 64
+
+
+# ---------------------------------------------------------------------------
+# run_plan end to end: routing, artifact collection, report, exit code
+# ---------------------------------------------------------------------------
+
+def _artifact_spec(tmp_path, speedup):
+    def fn():
+        (tmp_path / "BENCH_fake.smoke.json").write_text(
+            json.dumps(_fresh(speedup)))
+
+    return RunSpec(bench="fake", fn=fn, artifact="BENCH_fake", smoke=True,
+                   order=1, timeout_s=100.0)
+
+
+def _run(tmp_path, clock, speedup, committed):
+    specs = [
+        _artifact_spec(tmp_path, speedup),
+        RunSpec(bench="plain", fn=lambda: None, smoke=True, order=2,
+                timeout_s=100.0),
+        RunSpec(bench="sharded", fn=lambda: None, smoke=True, order=3,
+                topologies=(TPU_POD,), timeout_s=100.0),
+    ]
+    return run_plan(
+        expand(specs, smoke=True), root=tmp_path, run_dir=tmp_path / "run",
+        run_id="run-test", check=True,
+        committed_baselines=committed, clock=clock, sleep=clock.sleep)
+
+
+def test_run_plan_end_to_end_healthy(no_fault, clock, tmp_path):
+    committed = {"BENCH_fake.smoke.json": _base(cpu_speedup=2.0,
+                                                tpu_speedup=100.0)}
+    report = _run(tmp_path, clock, speedup=1.9, committed=committed)
+    assert isinstance(report, HarnessReport)
+    statuses = {j["name"]: j["status"] for j in report.jobs}
+    assert statuses == {"fake": "completed", "plain": "completed",
+                        "sharded--tpu-pod": "emitted"}
+    # multi-host job routed to the manifest stub, not executed
+    assert (tmp_path / "run" / "manifests"
+            / "sharded--tpu-pod.manifest.json").exists()
+    # fresh artifact rewritten topology-keyed, other topology preserved
+    rewritten = json.loads((tmp_path / "BENCH_fake.smoke.json").read_text())
+    assert rewritten["schema"] == 2
+    assert set(rewritten["topologies"]) == {"cpu:1", "tpu:16x16"}
+    # collected copy + per-job logs + the report itself live in the run dir
+    assert (tmp_path / "run" / "artifacts" / "BENCH_fake.smoke.json").exists()
+    assert (tmp_path / "run" / "jobs" / "fake.log").exists()
+    on_disk = json.loads(
+        (tmp_path / "run" / "harness_report.json").read_text())
+    assert on_disk["exit_code"] == 0 and on_disk["failures"] == 0
+    assert on_disk["counters"]["completed"] == 2
+    assert on_disk["counters"]["emitted"] == 1
+    assert "health" in on_disk
+    assert report.exit_code == 0
+    # the tpu baseline at 100x did not trigger a local failure
+    assert [c["status"] for c in report.regressions] == ["ok"]
+
+
+def test_run_plan_flags_local_regression(no_fault, clock, tmp_path):
+    committed = {"BENCH_fake.smoke.json": _base(cpu_speedup=2.0,
+                                                tpu_speedup=100.0)}
+    report = _run(tmp_path, clock, speedup=1.0, committed=committed)
+    assert report.counters["regression_failures"] == 1
+    assert report.exit_code == 1
+    # ...and the tpu baseline's presence did not mask it
+    bad = [c for c in report.regressions if c["status"] == "regression"]
+    assert len(bad) == 1 and bad[0]["topology"] == "cpu:1"
+
+
+def test_run_plan_missing_baseline_fails(no_fault, clock, tmp_path):
+    report = _run(tmp_path, clock, speedup=5.0, committed={})
+    assert report.exit_code == 1
+    assert any(c["status"] == "missing_baseline"
+               for c in report.regressions)
+
+
+def test_persistent_fault_fails_one_job_not_siblings(no_fault, clock,
+                                                     tmp_path):
+    """Acceptance: with max_retries=2 the first job's 3 attempts are hits
+    1..3; arming exactly those makes job one fail persistently while both
+    siblings run clean — one poisoned bench costs exactly one failed row."""
+    specs = [RunSpec(bench=f"job{i}", fn=lambda: None, smoke=True,
+                     order=i, timeout_s=100.0, max_retries=2)
+             for i in range(3)]
+    with faults.inject("harness_job", nth=(1, 2, 3)):
+        report = run_plan(expand(specs, smoke=True), root=tmp_path,
+                          clock=clock, sleep=clock.sleep)
+    statuses = {j["name"]: j["status"] for j in report.jobs}
+    assert statuses == {"job0": "failed", "job1": "completed",
+                        "job2": "completed"}
+    failed = next(j for j in report.jobs if j["name"] == "job0")
+    assert failed["attempts"] == 3 and failed["retries"] == 2
+    assert failed["failure_class"] == "runtime"
+    assert report.counters == {**report.counters, "completed": 2,
+                               "failed": 1, "jobs": 3}
+
+
+def test_retried_job_lands_in_report(no_fault, clock, tmp_path):
+    """Acceptance: a deterministically injected fault is retried with
+    capped backoff and the REPORT records the retry."""
+    s = RunSpec(bench="flaky", fn=lambda: None, smoke=True,
+                timeout_s=100.0, max_retries=2)
+    with faults.inject("harness_job", nth=1):
+        report = run_plan(expand([s], smoke=True), root=tmp_path,
+                          run_dir=tmp_path / "run", clock=clock,
+                          sleep=clock.sleep)
+    job = report.jobs[0]
+    assert job["status"] == "completed"
+    assert job["retries"] == 1 and job["backoffs"] == [0.05]
+    assert report.counters["retries"] == 1
+    on_disk = json.loads(
+        (tmp_path / "run" / "harness_report.json").read_text())
+    assert on_disk["jobs"][0]["retries"] == 1
+
+
+def test_soak_under_whatever_site_the_matrix_armed(clock, tmp_path):
+    """Matrix-aware: under ``REPRO_FAULT=harness_job`` (armed process-wide,
+    every hit) every job burns its full retry budget and fails — but the
+    run completes, siblings are independent, and the report stays
+    conservation-consistent. Unarmed (tier-1), everything completes."""
+    site, nth = faults.active()   # hard error on a typo'd REPRO_FAULT
+    specs = [RunSpec(bench=f"s{i}", fn=lambda: None, smoke=True, order=i,
+                     timeout_s=100.0, max_retries=2) for i in range(3)]
+    report = run_plan(expand(specs, smoke=True), root=tmp_path,
+                      clock=clock, sleep=clock.sleep)
+    c = report.counters
+    assert len(report.jobs) == 3
+    assert c["jobs"] == c["completed"] + c["failed"] + c["emitted"]
+    if site == "harness_job" and nth is None:
+        assert all(j["status"] == "failed" for j in report.jobs)
+        assert all(j["attempts"] == 3 for j in report.jobs)
+        assert c["retries"] == 6
+        assert report.exit_code == 1
+    elif site is None:
+        assert all(j["status"] == "completed" for j in report.jobs)
+        assert report.exit_code == 0
+
+
+# ---------------------------------------------------------------------------
+# Registry + CLI glue
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def scratch_registry():
+    saved = dict(registry.BENCHES)
+    yield registry
+    registry.BENCHES.clear()
+    registry.BENCHES.update(saved)
+
+
+def test_register_is_idempotent_but_conflicts_raise(scratch_registry):
+    s = _spec(bench="once")
+    scratch_registry.register_bench(s)
+    scratch_registry.register_bench(s)  # same spec: fine (re-import)
+    with pytest.raises(ValueError):
+        scratch_registry.register_bench(_spec(bench="once", order=999))
+
+
+def test_every_bench_module_registers_a_spec():
+    """The one-registry contract: discovery by filename, registration by
+    the module's own table entry — adding a bench is a new file, not an
+    edit to run.py."""
+    specs = {s.bench: s for s in registry.discover("benchmarks")}
+    assert set(specs) >= {
+        "micro_lowering", "dtypes", "packing_overhead", "moe_grouped",
+        "quant_gemm", "serve_stream", "serve_continuous", "syr2k",
+        "gemm_strategies", "models", "roofline"}
+    smoke = {n for n, s in specs.items() if s.smoke}
+    assert smoke == {"packing_overhead", "moe_grouped", "quant_gemm",
+                     "serve_stream", "serve_continuous"}
+    guarded = {n: s.artifact for n, s in specs.items() if s.artifact}
+    assert guarded == {"packing_overhead": "BENCH_fused_gemm",
+                       "moe_grouped": "BENCH_moe_grouped",
+                       "quant_gemm": "BENCH_quant_gemm",
+                       "serve_stream": "BENCH_serve_stream",
+                       "serve_continuous": "BENCH_serve_continuous"}
+
+
+def test_committed_smoke_baselines_are_topology_keyed():
+    """Every committed smoke baseline carries the schema-2 topology map
+    with a local-CPU entry — the per-topology guard is armed for real."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent
+    snap = snapshot_baselines(root)
+    assert len(snap) >= 5
+    for name, payload in snap.items():
+        assert payload.get("schema") == 2, name
+        assert "cpu:1" in payload["topologies"], name
+        assert payload["topologies"]["cpu:1"]["results"], name
+
+
+def test_cli_check_requires_smoke():
+    from repro.harness import cli
+    assert cli.main(["--check"]) == 2
+
+
+def test_job_result_roundtrips_to_dict():
+    res = JobResult(name="n", bench="b", topology="cpu:1",
+                    status="completed", backoffs=(0.05, 0.1))
+    d = res.as_dict()
+    assert d["backoffs"] == [0.05, 0.1]
+    json.dumps(d)  # machine-readable: JSON-serializable as-is
